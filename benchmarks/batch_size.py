@@ -1,0 +1,45 @@
+"""Paper Fig. 6 — batch size influence (2…32).
+
+Interim results scale with batch; parameters don't — so MSR should rise
+with batch size (more swappable activation bytes per parameter byte).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from repro.core import evaluate, schedule_single
+
+from .workloads import GPU_PROFILE, get_workload
+
+WORKLOADS = ["vgg16", "resnet50", "densenet121", "tinyllama-r", "gemma-r"]
+BATCHES = [2, 4, 8, 16, 32]
+
+
+def run(out_json: str = None) -> Dict:
+    table: Dict[str, Dict[int, Dict[str, float]]] = {}
+    for w in WORKLOADS:
+        table[w] = {}
+        for b in BATCHES:
+            seq = get_workload(w, batch=b)
+            res = schedule_single(seq, profile=GPU_PROFILE,
+                                  budget_bytes=GPU_PROFILE.device_memory_bytes)
+            table[w][b] = evaluate([seq], res.plans, GPU_PROFILE)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(table, f, indent=1)
+    return table
+
+
+def format_markdown(table: Dict) -> str:
+    lines = ["| workload | batch | MSR | EOR | CBR |",
+             "|---|---|---|---|---|"]
+    for w, by_b in table.items():
+        for b, r in by_b.items():
+            lines.append(f"| {w} | {b} | {r['MSR']:.4f} | {r['EOR']:.4f} "
+                         f"| {r['CBR']:.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_markdown(run()))

@@ -1,0 +1,172 @@
+"""§Perf hillclimbing harness.
+
+Each experiment = (cell, variant name, config mutations) → re-lower,
+re-analyse, record the three roofline terms + peak next to the recorded
+baseline.  Variants never overwrite baseline artifacts; results land in
+experiments/hillclimb/<arch>__<shape>__<variant>.json and the iteration
+log is assembled into EXPERIMENTS.md §Perf.
+
+Levers exposed (see repro.launch.sharding / configs.base):
+    act_seq_shard     — Megatron sequence sharding of residuals
+    offload_opt       — TENSILE Opt-phase host residency (accounting on CPU)
+    microbatch        — gradient accumulation (activation peak / n)
+    attn_chunk        — q/kv chunk for the online-softmax attention
+    ssm_chunk         — SSD chunk length (quadratic intra-chunk term)
+    capacity_factor   — MoE dispatch capacity
+    untie_unembed     — resharded tied-unembedding path
+    remat             — none|block
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+HILL = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "hillclimb")
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                cfg_mut: Optional[Dict[str, Any]] = None,
+                rules_mut: Optional[Dict[str, Any]] = None,
+                tstep_mut: Optional[Dict[str, Any]] = None,
+                multi_pod: bool = False) -> Dict:
+    """Compile one modified cell and record its roofline."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config, ALL_SHAPES
+    from repro.launch import dryrun as D
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import MeshRules
+    from repro.launch.steps import (TrainStepConfig, build_prefill_step,
+                                    build_serve_step, build_train_step,
+                                    offloaded_bytes, opt_state_for,
+                                    opt_state_shardings)
+    from repro.models.registry import get_model
+
+    cfg = get_config(arch)
+    for k, v in (cfg_mut or {}).items():
+        setattr(cfg, k, v)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    api = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = MeshRules(mesh, cfg=cfg, **(rules_mut or {}))
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    t0 = time.time()
+    params, axes = api.abstract_params()
+    p_shard = rules.param_shardings(axes)
+    tcfg = TrainStepConfig(**(tstep_mut or {}))
+
+    if shape.kind == "train":
+        opt = opt_state_for(params, abstract=True)
+        o_shard = opt_state_shardings(rules, p_shard)
+        batch = api.input_specs(shape, abstract=True)
+        if tcfg.microbatches > 1:
+            # keep per-microbatch rows divisible across the batch shards
+            assert shape.global_batch % tcfg.microbatches == 0
+        b_shard = rules.batch_sharding(batch)
+        step = build_train_step(api, rules, tcfg)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params, opt, batch)
+        host_bytes = offloaded_bytes(opt) if rules.offload_opt_state else 0
+    elif shape.kind == "prefill":
+        batch = api.input_specs(shape, abstract=True)
+        b_shard = rules.batch_sharding(batch)
+        step = build_prefill_step(api, rules)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        lowered = jitted.lower(params, batch)
+        host_bytes = 0
+    else:
+        cache, cache_axes = api.abstract_cache(shape.global_batch,
+                                               shape.seq_len)
+        c_shard = rules.shardings_for(cache_axes, cache)
+        batch = api.decode_input_specs(shape, abstract=True)
+        b_shard = rules.batch_sharding(batch)
+        step = build_serve_step(api, rules)
+        jitted = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard, None),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params, cache, batch,
+                               jax.ShapeDtypeStruct((), jax.numpy.int32))
+        host_bytes = 0
+
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = D.parse_collectives(compiled.as_text())
+    corr = D._body_cost(cfg, shape, rules, api, params, batch, axes)
+    flops = float(cost.get("flops", 0.0)) + corr["flops"]
+    bts = float(cost.get("bytes accessed", 0.0)) + corr["bytes"]
+    for kind, slot in corr["collectives"].items():
+        agg = colls.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                      "wire_bytes": 0.0})
+        agg["count"] += slot["count"]
+        agg["bytes"] += slot["bytes"]
+        agg["wire_bytes"] += slot["wire_bytes"]
+    wire = sum(c["wire_bytes"] for c in colls.values())
+    peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    m_flops = D.model_flops_for(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "cfg_mut": {k: str(v) for k, v in (cfg_mut or {}).items()},
+        "rules_mut": rules_mut or {}, "tstep_mut": {
+            k: str(v) for k, v in (tstep_mut or {}).items()},
+        "compile_seconds": round(time.time() - t0, 1),
+        "per_device_peak_bytes": int(peak),
+        "host_offload_bytes_per_device": int(host_bytes // chips),
+        "per_device_peak_after_offload": int(peak - host_bytes // chips),
+        "cost": {"flops": flops, "bytes_accessed": bts},
+        "collectives_wire_bytes": wire,
+        "roofline": {
+            "compute_s": flops / D.PEAK_FLOPS,
+            "memory_s": bts / D.HBM_BW,
+            "collective_s": wire / D.ICI_BW,
+            "model_flops": m_flops,
+            "useful_flops_ratio": (m_flops / chips) / flops if flops else 0,
+        },
+    }
+    terms = rec["roofline"]
+    total = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["dominant"] = max(
+        [("compute", terms["compute_s"]), ("memory", terms["memory_s"]),
+         ("collective", terms["collective_s"])], key=lambda kv: kv[1])[0]
+    terms["step_lower_bound_s"] = total
+    terms["roofline_fraction"] = (
+        (m_flops / chips / D.PEAK_FLOPS) / total if total else 0.0)
+    os.makedirs(HILL, exist_ok=True)
+    out = os.path.join(HILL, f"{arch}__{shape_name}__{variant}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[{variant}] peak={peak/2**30:.2f}GiB "
+          f"(offload→{rec['per_device_peak_after_offload']/2**30:.2f}) "
+          f"compute={terms['compute_s']:.2f}s memory={terms['memory_s']:.2f}s "
+          f"collective={terms['collective_s']:.2f}s "
+          f"dominant={terms['dominant']} "
+          f"roofline_frac={terms['roofline_fraction']:.3f}")
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--offload-opt", action="store_true")
+    ap.add_argument("--remat", default=None)
+    args = ap.parse_args()
+    rules_mut = {}
+    if args.seq_shard:
+        rules_mut["act_seq_shard"] = True
+    if args.offload_opt:
+        rules_mut["offload_opt_state"] = True
+    cfg_mut = {"remat": args.remat} if args.remat else None
+    run_variant(args.arch, args.shape, args.variant, cfg_mut, rules_mut)

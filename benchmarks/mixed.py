@@ -1,0 +1,77 @@
+"""Paper Table II — mixed neural architecture workloads.
+
+Five random launches from the pool (repeats allowed), launched one-by-one
+in random order; TENSILE schedules the merged set, baselines schedule each
+job independently; repeated 3× and averaged (as the paper does).
+"""
+from __future__ import annotations
+
+import json
+import random
+from typing import Dict
+
+import numpy as np
+
+from repro.core import MemoryScheduler, SchedulerConfig, evaluate
+from repro.core.baselines import capuchin_plan, vdnn_conv_plan
+
+from .workloads import GPU_PROFILE, POOL, get_workload
+
+
+def bench_round(seed: int) -> Dict[str, Dict[str, float]]:
+    rng = random.Random(seed)
+    names = [rng.choice(list(POOL)) for _ in range(5)]
+    seqs = [get_workload(n, job_id=f"{n}#{i}") for i, n in enumerate(names)]
+    offsets = {}
+    t = 0.0
+    for s in seqs:
+        offsets[s.job_id] = t
+        t += 0.25 * s.iteration_time
+
+    sched = MemoryScheduler(GPU_PROFILE, SchedulerConfig(
+        max_swap_ratio=1.0 / len(seqs)))
+    for s in seqs:
+        sched.register_job(s, offset=offsets[s.job_id])
+    res = sched.schedule()
+    out = {"TENSILE": evaluate(seqs, res.plans, GPU_PROFILE,
+                               offsets=offsets)}
+    out["vDNN"] = evaluate(
+        seqs, {s.job_id: vdnn_conv_plan(s, GPU_PROFILE) for s in seqs},
+        GPU_PROFILE, offsets=offsets, free_at_last_use=False)
+    budget = res.final_report.peak_bytes // len(seqs)
+    cap = {s.job_id: capuchin_plan(s, budget, GPU_PROFILE).plan
+           for s in seqs}
+    m = evaluate(seqs, cap, GPU_PROFILE, offsets=offsets)
+    m["EOR"] += seqs[0].iteration_time / max(m["vanilla_time"], 1e-12)
+    m["CBR"] = m["MSR"] / m["EOR"] if m["EOR"] > 0 else 0.0
+    out["Capuchin"] = m
+    return out
+
+
+def run(rounds: int = 3, out_json: str = None) -> Dict:
+    acc: Dict[str, Dict[str, list]] = {}
+    for r in range(rounds):
+        res = bench_round(seed=100 + r)
+        for method, metrics in res.items():
+            slot = acc.setdefault(method, {})
+            for k, v in metrics.items():
+                slot.setdefault(k, []).append(v)
+    table = {m: {k: float(np.mean(v)) for k, v in ks.items()}
+             for m, ks in acc.items()}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(table, f, indent=1)
+    return table
+
+
+def format_markdown(table: Dict) -> str:
+    lines = ["| method | MSR | EOR | CBR |", "|---|---|---|---|"]
+    for m in ("vDNN", "Capuchin", "TENSILE"):
+        r = table[m]
+        lines.append(f"| {m} | {r['MSR']:.4f} | {r['EOR']:.4f} "
+                     f"| {r['CBR']:.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_markdown(run()))

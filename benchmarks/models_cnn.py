@@ -1,0 +1,200 @@
+"""CNN workloads for the paper's benchmark tables (pure jnp).
+
+The paper evaluates on VGG-16, InceptionV3/V4, ResNet-50 and DenseNet;
+we implement VGG-16, ResNet-50 and DenseNet-121 faithfully and fill the
+pool with assigned-family reduced LMs (DESIGN.md §7.4).  For the simulator
+path only *tracing* matters (shapes + analytic latencies), so the full
+224×224 ImageNet-scale graphs are usable on this container.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def _avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _bn(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+class _Init:
+    def __init__(self, key):
+        self.key = key
+        self.params: List[Any] = []
+
+    def conv(self, kh, kw, cin, cout):
+        self.key, k = jax.random.split(self.key)
+        w = jax.random.normal(k, (kh, kw, cin, cout)) * np.sqrt(
+            2.0 / (kh * kw * cin))
+        self.params.append(w)
+        return len(self.params) - 1
+
+    def bn(self, c):
+        self.params.append(jnp.ones((c,)))
+        self.params.append(jnp.zeros((c,)))
+        return len(self.params) - 2
+
+    def fc(self, cin, cout):
+        self.key, k = jax.random.split(self.key)
+        self.params.append(jax.random.normal(k, (cin, cout))
+                           * np.sqrt(1.0 / cin))
+        self.params.append(jnp.zeros((cout,)))
+        return len(self.params) - 2
+
+
+# ----------------------------------------------------------------------
+VGG16_LAYERS = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+                512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def build_vgg16(key, img=224, n_classes=1000):
+    ini = _Init(key)
+    cin = 3
+    plan = []
+    for item in VGG16_LAYERS:
+        if item == "M":
+            plan.append(("pool", None))
+        else:
+            idx = ini.conv(3, 3, cin, item)
+            plan.append(("conv", idx))
+            cin = item
+    feat = 512 * (img // 32) ** 2
+    f1 = ini.fc(feat, 4096)
+    f2 = ini.fc(4096, 4096)
+    f3 = ini.fc(4096, n_classes)
+
+    def forward(params, x):
+        for kind, idx in plan:
+            if kind == "pool":
+                x = _maxpool(x)
+            else:
+                x = jax.nn.relu(_conv(x, params[idx]))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params[f1] + params[f1 + 1])
+        x = jax.nn.relu(x @ params[f2] + params[f2 + 1])
+        return x @ params[f3] + params[f3 + 1]
+
+    return ini.params, forward
+
+
+# ----------------------------------------------------------------------
+RESNET50_BLOCKS = [(3, 64), (4, 128), (6, 256), (3, 512)]
+
+
+def build_resnet50(key, img=224, n_classes=1000):
+    ini = _Init(key)
+    stem = ini.conv(7, 7, 3, 64)
+    stem_bn = ini.bn(64)
+    plan = []
+    cin = 64
+    for stage, (n_blocks, width) in enumerate(RESNET50_BLOCKS):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            proj = None
+            cout = width * 4
+            if cin != cout or stride != 1:
+                proj = (ini.conv(1, 1, cin, cout), ini.bn(cout), stride)
+            c1 = (ini.conv(1, 1, cin, width), ini.bn(width))
+            c2 = (ini.conv(3, 3, width, width), ini.bn(width), stride)
+            c3 = (ini.conv(1, 1, width, cout), ini.bn(cout))
+            plan.append((proj, c1, c2, c3))
+            cin = cout
+    fc = ini.fc(cin, n_classes)
+
+    def forward(params, x):
+        x = jax.nn.relu(_bn(_conv(x, params[stem], 2),
+                            params[stem_bn], params[stem_bn + 1]))
+        x = _maxpool(x, 3, 2)
+        for proj, c1, c2, c3 in plan:
+            sc = x
+            if proj is not None:
+                pi, pb, ps = proj
+                sc = _bn(_conv(x, params[pi], ps), params[pb], params[pb + 1])
+            h = jax.nn.relu(_bn(_conv(x, params[c1[0]]),
+                                params[c1[1]], params[c1[1] + 1]))
+            h = jax.nn.relu(_bn(_conv(h, params[c2[0]], c2[2]),
+                                params[c2[1]], params[c2[1] + 1]))
+            h = _bn(_conv(h, params[c3[0]]), params[c3[1]], params[c3[1] + 1])
+            x = jax.nn.relu(h + sc)
+        x = _avgpool_global(x)
+        return x @ params[fc] + params[fc + 1]
+
+    return ini.params, forward
+
+
+# ----------------------------------------------------------------------
+def build_densenet121(key, img=224, n_classes=1000, growth=32):
+    ini = _Init(key)
+    stem = ini.conv(7, 7, 3, 64)
+    stem_bn = ini.bn(64)
+    cin = 64
+    plan = []
+    for stage, n_layers in enumerate([6, 12, 24, 16]):
+        block = []
+        for _ in range(n_layers):
+            b1 = ini.bn(cin)
+            c1 = ini.conv(1, 1, cin, 4 * growth)
+            b2 = ini.bn(4 * growth)
+            c2 = ini.conv(3, 3, 4 * growth, growth)
+            block.append((b1, c1, b2, c2))
+            cin += growth
+        trans = None
+        if stage < 3:
+            tb = ini.bn(cin)
+            tc = ini.conv(1, 1, cin, cin // 2)
+            trans = (tb, tc)
+            cin //= 2
+        plan.append((block, trans))
+    final_bn = ini.bn(cin)
+    fc = ini.fc(cin, n_classes)
+
+    def forward(params, x):
+        x = jax.nn.relu(_bn(_conv(x, params[stem], 2),
+                            params[stem_bn], params[stem_bn + 1]))
+        x = _maxpool(x, 3, 2)
+        for block, trans in plan:
+            for b1, c1, b2, c2 in block:
+                h = jax.nn.relu(_bn(x, params[b1], params[b1 + 1]))
+                h = _conv(h, params[c1])
+                h = jax.nn.relu(_bn(h, params[b2], params[b2 + 1]))
+                h = _conv(h, params[c2])
+                x = jnp.concatenate([x, h], axis=-1)
+            if trans is not None:
+                tb, tc = trans
+                x = jax.nn.relu(_bn(x, params[tb], params[tb + 1]))
+                x = _conv(x, params[tc])
+                x = jax.lax.reduce_window(x, 0.0, jax.lax.add,
+                                          (1, 2, 2, 1), (1, 2, 2, 1),
+                                          "VALID") / 4.0
+        x = jax.nn.relu(_bn(x, params[final_bn], params[final_bn + 1]))
+        x = _avgpool_global(x)
+        return x @ params[fc] + params[fc + 1]
+
+    return ini.params, forward
+
+
+BUILDERS = {
+    "vgg16": build_vgg16,
+    "resnet50": build_resnet50,
+    "densenet121": build_densenet121,
+}

@@ -1,0 +1,85 @@
+"""§Roofline — assemble the per-cell roofline table from dry-run artifacts.
+
+Reads experiments/artifacts/*.json (written by repro.launch.dryrun) and
+emits the markdown table for EXPERIMENTS.md: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line lever per cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "artifacts")
+
+LEVER_BY_BOTTLENECK = {
+    "compute": "raise useful-FLOP ratio: lighter remat policy / flash "
+               "kernel removes recompute+mask FLOPs",
+    "memory": "cut bytes/step: sequence-shard activations over `model`, "
+              "fuse norm+proj, bf16 logits",
+    "collective": "reshard to cut all-gathers: move FSDP gather into the "
+                  "scan (overlap), or trade FSDP for replicated params",
+}
+
+
+def load_records() -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(r: Dict) -> Dict:
+    roof = r["roofline"]
+    total = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+    chips = r["chips"]
+    useful = roof["model_flops"] / chips / 197e12
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "mesh": "2×16×16" if r.get("multi_pod") else "16×16",
+        "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+        "collective_s": roof["collective_s"],
+        "dominant": roof["dominant"],
+        "step_lower_bound_s": total,
+        "useful_ratio": roof["useful_flops_ratio"],
+        "roofline_fraction": useful / total if total else 0.0,
+        "peak_gib": r["per_device_peak_bytes"] / 2**30,
+        "peak_after_offload_gib": r["per_device_peak_after_offload"] / 2**30,
+        "fits": r["fits_hbm_16g"],
+    }
+
+
+def format_markdown(recs: List[Dict]) -> str:
+    rows = [roofline_row(r) for r in recs]
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+    lines = [
+        "| arch | shape | mesh | compute(s) | memory(s) | collective(s) | "
+        "dominant | MODEL/HLO | roofline frac | peak GiB (→offload) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for x in rows:
+        lines.append(
+            f"| {x['arch']} | {x['shape']} | {x['mesh']} "
+            f"| {x['compute_s']:.3e} | {x['memory_s']:.3e} "
+            f"| {x['collective_s']:.3e} | **{x['dominant']}** "
+            f"| {x['useful_ratio']:.2f} | {x['roofline_fraction']:.2f} "
+            f"| {x['peak_gib']:.2f} (→{x['peak_after_offload_gib']:.2f}) |")
+    return "\n".join(lines)
+
+
+def dominant_summary(recs: List[Dict]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for r in recs:
+        d = r["roofline"]["dominant"]
+        out[d] = out.get(d, 0) + 1
+    return out
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(f"{len(recs)} artifacts")
+    print(format_markdown(recs))
+    print("\ndominant terms:", dominant_summary(recs))

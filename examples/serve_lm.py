@@ -1,0 +1,15 @@
+"""Batched autoregressive serving (deliverable (b)): prefill + KV/SSM-cache
+decode with the same serve_step the decode_* dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m \
+        --batch 4 --prompt-len 32 --gen 64
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,17 @@
+"""End-to-end LM training driver (deliverable (b)): trains a reduced
+assigned-architecture config for a few hundred steps with the full
+substrate — sharded data pipeline with prefetch, AdamW, TENSILE memory
+planning, async checkpointing and restart-on-failure.
+
+    PYTHONPATH=src python examples/train_lm.py --arch tinyllama-1.1b \
+        --steps 300 --tensile-budget-mb 64
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main())

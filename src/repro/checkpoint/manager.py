@@ -1,0 +1,170 @@
+"""Checkpointing: atomic, per-shard, async, elastic-restore.
+
+Layout (one directory per step):
+    ckpt_dir/
+      step_000120/
+        meta.json                 — step, pytree structure, mesh, data state
+        shard_00000.npz           — this host's param/opt leaves (zstd)
+        COMMIT                    — written last; restore ignores dirs
+                                    without it (atomicity marker)
+
+Fault-tolerance contract:
+  * `save` is all-or-nothing per step directory (COMMIT marker).
+  * `save_async` runs on a background thread; at most one in flight —
+    training overlaps the serialization (TENSILE-style compute/IO overlap).
+  * `restore` takes the CURRENT mesh/sharding: leaves are re-sharded on
+    load (`jax.device_put`), so restoring onto a different device count —
+    elastic scale-up/down — works (tests/test_checkpoint.py proves 8→4).
+  * `latest_step` + `gc_keep` implement the restart loop's rolling window.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    return [("/".join(str(p) for p in path), leaf) for path, leaf in flat], \
+        treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, host_id: int = 0,
+                 n_hosts: int = 1):
+        self.dir = directory
+        self.keep = keep
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+        self._async_err: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def latest_step(self) -> Optional[int]:
+        best = None
+        for name in os.listdir(self.dir):
+            if not name.startswith("step_"):
+                continue
+            d = os.path.join(self.dir, name)
+            if not os.path.exists(os.path.join(d, "COMMIT")):
+                continue  # incomplete (crashed mid-save)
+            step = int(name.split("_")[1])
+            best = step if best is None else max(best, step)
+        return best
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any,
+             extra_meta: Optional[Dict] = None) -> str:
+        """Synchronous atomic save of a pytree of jax/np arrays."""
+        d = self._step_dir(step)
+        tmp = d + f".tmp{self.host_id}"
+        os.makedirs(tmp if self.n_hosts > 1 else tmp, exist_ok=True)
+        leaves, treedef = _flatten_with_paths(state)
+        arrays = {}
+        for i, (path, leaf) in enumerate(leaves):
+            arr = np.asarray(leaf)
+            arrays[f"leaf_{i}"] = arr
+        buf_path = os.path.join(tmp, f"shard_{self.host_id:05d}.npz")
+        np.savez(buf_path, **arrays)
+        if _zstd is not None:
+            with open(buf_path, "rb") as f:
+                raw = f.read()
+            with open(buf_path + ".zst", "wb") as f:
+                f.write(_zstd.ZstdCompressor(level=1).compress(raw))
+            os.remove(buf_path)
+        meta = {
+            "step": step,
+            "paths": [p for p, _ in leaves],
+            "dtypes": [str(np.asarray(l).dtype) for _, l in leaves],
+            "shapes": [list(np.asarray(l).shape) for _, l in leaves],
+            "n_hosts": self.n_hosts,
+            "time": time.time(),
+        }
+        meta.update(extra_meta or {})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.isdir(d):
+            shutil.rmtree(d)
+        os.replace(tmp, d)
+        with open(os.path.join(d, "COMMIT"), "w") as f:
+            f.write(str(step))
+        self._gc()
+        return d
+
+    def save_async(self, step: int, state: Any,
+                   extra_meta: Optional[Dict] = None) -> None:
+        """Background save; joins any previous in-flight save first."""
+        self.wait()
+        # snapshot to host memory before returning control
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def work():
+            try:
+                self.save(step, host_state, extra_meta)
+            except BaseException as e:  # noqa: BLE001
+                self._async_err = e
+
+        self._async_thread = threading.Thread(target=work, daemon=True)
+        self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+        if self._async_err is not None:
+            err, self._async_err = self._async_err, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, template: Any = None,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        """Restore; optionally reshard onto `shardings` (elastic restore —
+        the new mesh may have a different device count)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        buf_path = os.path.join(d, f"shard_{self.host_id:05d}.npz")
+        if not os.path.exists(buf_path) and os.path.exists(buf_path + ".zst"):
+            with open(buf_path + ".zst", "rb") as f:
+                raw = _zstd.ZstdDecompressor().decompress(f.read())
+            with open(buf_path, "wb") as f:
+                f.write(raw)
+        data = np.load(buf_path)
+        leaves = [data[f"leaf_{i}"] for i in range(len(meta["paths"]))]
+        if template is not None:
+            treedef = jax.tree.structure(template)
+            state = jax.tree.unflatten(treedef, leaves)
+        else:
+            state = leaves
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state, meta
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, n, "COMMIT")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

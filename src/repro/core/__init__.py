@@ -1,0 +1,35 @@
+"""TENSILE core: tensor-granularity memory scheduling for multi-workload
+JAX systems (Zhang et al., 2021), adapted for TPU.
+
+Public API:
+    capture / capture_train_step  — jaxpr → Tensor Access Sequence
+    MemoryScheduler / schedule_single — Algorithm 3
+    analyze / vanilla_peak        — Algorithm 2 (peak analysis)
+    simulate / evaluate           — discrete-event metrics (MSR/EOR/CBR)
+    JaxprExecutor                 — interpreting executor with real host swap
+    GlobalController              — multi-workload runtime (paper Fig. 3)
+    baselines                     — vanilla / vDNN_conv / Capuchin
+    schedule_for_budget           — plan → compiled-path decisions
+"""
+from .access import (AccessSequence, AccessType, Operator, Phase, TensorKind,
+                     TensorSpec, format_bytes)
+from .baselines import capuchin_plan, vanilla_plan, vdnn_conv_plan
+from .cost_model import (CostModel, DeviceCalibration, EWMATracker,
+                         LatencyMLP, calibrate_cpu)
+from .executor import (DeviceAccountant, ExecutionStats, JaxprExecutor,
+                       SwapChannel, reference_outputs)
+from .graph_capture import CaptureSpec, capture, capture_train_step
+from .jax_integration import (TensileDecisions, backend_supports_memory_kinds,
+                              checkpoint_name, make_remat_policy,
+                              plan_decisions, schedule_for_budget)
+from .multiplexer import GlobalController, JobHandle
+from .peak_analysis import PeakReport, analyze, unroll, vanilla_peak
+from .plan import (ChannelReservation, EventType, MachineProfile,
+                   ScheduleEvent, SchedulingPlan)
+from .recompute_planner import RecomputePlanner
+from .scheduler import (MemoryScheduler, ScheduleResult, SchedulerConfig,
+                        schedule_single)
+from .simulator import SimResult, evaluate, simulate
+from .swap_planner import PeriodicChannel, SwapPlanner
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,258 @@
+"""Operator latency estimation (paper §IV-C) and the cold-start predictor.
+
+Three layers, used in this order:
+  1. **Analytic model** — per-primitive FLOPs / bytes from the jaxpr equation,
+     latency = max(flops/peak_flops, bytes/mem_bw) scaled by a utilization
+     factor.  Available before anything has ever run (cold start floor).
+  2. **MLP predictor** — the paper's light 3-layer MLP mapping
+     <input dims…, op params…, device utilization> → latency, trained on
+     measured samples collected at system initialization.  Implemented in
+     pure JAX (no framework), trained with the repo's own Adam.
+  3. **EWMA correction** — at runtime, measured latencies are folded in with
+     an exponentially weighted moving average (paper §IV-E); this dominates
+     once a job is past its first steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time as _time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+ELEMENTWISE_FLOPS = {
+    "add": 1, "sub": 1, "mul": 1, "div": 1, "max": 1, "min": 1, "neg": 1,
+    "exp": 8, "log": 8, "tanh": 10, "logistic": 10, "erf": 10, "rsqrt": 4,
+    "sqrt": 4, "pow": 10, "integer_pow": 2, "abs": 1, "sign": 1,
+    "floor": 1, "ceil": 1, "round": 1, "is_finite": 1, "and": 1, "or": 1,
+    "xor": 1, "not": 1, "select_n": 1, "clamp": 2, "add_any": 1, "cos": 8,
+    "sin": 8, "eq": 1, "ne": 1, "ge": 1, "gt": 1, "le": 1, "lt": 1,
+}
+
+
+def _numel(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 1
+
+
+def _nbytes(aval) -> int:
+    try:
+        return _numel(aval) * np.dtype(aval.dtype).itemsize
+    except Exception:
+        return 0
+
+
+@dataclasses.dataclass
+class DeviceCalibration:
+    """Effective throughput of the executing device.  Defaults are calibrated
+    for this container's CPU at import time of the benchmarks (cheap matmul /
+    memcpy probes); the TPU target constants live in plan.MachineProfile."""
+    flops: float = 5e10
+    mem_bw: float = 1e10
+    overhead_s: float = 2e-6
+
+
+class CostModel:
+    def __init__(self, calib: Optional[DeviceCalibration] = None):
+        self.calib = calib or DeviceCalibration()
+        self.mlp: Optional["LatencyMLP"] = None
+        self.utilization: float = 0.0  # 0..1, "GPU usage" analogue
+
+    # ------------------------------------------------------------------
+    def eqn_cost(self, eqn) -> Tuple[float, float]:
+        """(flops, bytes) for one jaxpr equation."""
+        prim = eqn.primitive.name
+        out_avals = [v.aval for v in eqn.outvars]
+        in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+        out_n = sum(_numel(a) for a in out_avals)
+        in_b = sum(_nbytes(a) for a in in_avals)
+        out_b = sum(_nbytes(a) for a in out_avals)
+        bts = in_b + out_b
+        if prim == "dot_general":
+            dnums = eqn.params["dimension_numbers"]
+            (lc, rc), (lb, rb) = dnums
+            lhs = in_avals[0]
+            contract = 1
+            for d in lc:
+                contract *= lhs.shape[d]
+            flops = 2.0 * out_n * contract
+        elif prim in ("conv_general_dilated",):
+            rhs = in_avals[1]
+            flops = 2.0 * out_n * _numel(rhs) / max(rhs.shape[-1], 1)
+        elif prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                      "argmax", "argmin", "cumsum", "cumlogsumexp", "cummax"):
+            flops = float(sum(_numel(a) for a in in_avals))
+        elif prim in ("custom_jvp_call", "custom_vjp_call", "pjit", "closed_call",
+                      "remat", "checkpoint", "scan", "while", "cond"):
+            # estimate nested jaxpr cost
+            flops, extra_b = self._call_cost(eqn)
+            bts = max(bts, extra_b)
+        else:
+            flops = float(out_n) * ELEMENTWISE_FLOPS.get(prim, 1)
+        return flops, float(bts)
+
+    def _call_cost(self, eqn) -> Tuple[float, float]:
+        flops, bts = 0.0, 0.0
+        for key in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr", "fun_jaxpr"):
+            sub = eqn.params.get(key)
+            if sub is None:
+                continue
+            jaxpr = getattr(sub, "jaxpr", sub)
+            for e in getattr(jaxpr, "eqns", []):
+                f, b = self.eqn_cost(e)
+                flops += f
+                bts += b
+        for key in ("branches",):
+            for sub in eqn.params.get(key, ()):
+                jaxpr = getattr(sub, "jaxpr", sub)
+                for e in getattr(jaxpr, "eqns", []):
+                    f, b = self.eqn_cost(e)
+                    flops += f
+                    bts += b
+        n_iter = eqn.params.get("length", 1) if eqn.primitive.name == "scan" else 1
+        return flops * n_iter, bts * n_iter
+
+    # ------------------------------------------------------------------
+    def latency(self, flops: float, bytes_accessed: float,
+                prim_name: str = "") -> float:
+        """Roofline latency under current utilization; if the MLP predictor
+        is trained, blend it in (cold-start path, paper §IV-C)."""
+        c = self.calib
+        slowdown = 1.0 + self.utilization  # contended device runs slower
+        base = c.overhead_s + slowdown * max(flops / c.flops,
+                                             bytes_accessed / c.mem_bw)
+        if self.mlp is not None:
+            pred = self.mlp.predict_one(flops, bytes_accessed, self.utilization)
+            if pred > 0:
+                return float(0.5 * base + 0.5 * pred)
+        return float(base)
+
+
+# ======================================================================
+# The paper's 3-layer MLP latency predictor, in pure JAX.
+# ======================================================================
+class LatencyMLP:
+    """Predicts log-latency from <log flops, log bytes, utilization>.
+
+    The paper feeds raw input dims + op params; flops/bytes are a sufficient
+    statistic of those for roofline-dominated ops and keep the model
+    op-agnostic.  3 layers, as in the paper.
+    """
+
+    def __init__(self, hidden: int = 32, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        self.jnp = jnp
+        self.jax = jax
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(k, 3)
+        s = 1 / math.sqrt(3)
+        self.params = {
+            "w1": jax.random.normal(k1, (3, hidden)) * s,
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, hidden)) / math.sqrt(hidden),
+            "b2": jnp.zeros((hidden,)),
+            "w3": jax.random.normal(k3, (hidden, 1)) / math.sqrt(hidden),
+            "b3": jnp.zeros((1,)),
+        }
+        self._jit_pred = jax.jit(self._forward)
+
+    @staticmethod
+    def featurize(flops: np.ndarray, bytes_: np.ndarray,
+                  util: np.ndarray) -> np.ndarray:
+        return np.stack([np.log1p(flops) / 30.0, np.log1p(bytes_) / 30.0,
+                         util], axis=-1).astype(np.float32)
+
+    def _forward(self, params, x):
+        jnp = self.jnp
+        h = jnp.tanh(x @ params["w1"] + params["b1"])
+        h = jnp.tanh(h @ params["w2"] + params["b2"])
+        return (h @ params["w3"] + params["b3"])[..., 0]
+
+    def fit(self, flops: np.ndarray, bytes_: np.ndarray, util: np.ndarray,
+            latency_s: np.ndarray, steps: int = 2000, lr: float = 3e-3) -> float:
+        """Train on measured samples; returns training R² on log-latency."""
+        jax, jnp = self.jax, self.jnp
+        x = jnp.asarray(self.featurize(flops, bytes_, util))
+        y = jnp.asarray(np.log(np.maximum(latency_s, 1e-9)).astype(np.float32))
+
+        def loss_fn(p):
+            pred = self._forward(p, x)
+            return jnp.mean((pred - y) ** 2)
+
+        from repro.optim.adam import adamw_init, adamw_update
+        state = adamw_init(self.params)
+        p = self.params
+        vg = jax.jit(jax.value_and_grad(loss_fn))
+
+        @jax.jit
+        def step(p, state):
+            l, g = jax.value_and_grad(loss_fn)(p)
+            p, state = adamw_update(p, g, state, lr=lr, weight_decay=0.0)
+            return p, state, l
+
+        for _ in range(steps):
+            p, state, l = step(p, state)
+        self.params = p
+        pred = np.asarray(self._forward(p, x))
+        yn = np.asarray(y)
+        ss_res = float(np.sum((pred - yn) ** 2))
+        ss_tot = float(np.sum((yn - yn.mean()) ** 2)) or 1e-12
+        return 1.0 - ss_res / ss_tot
+
+    def predict_one(self, flops: float, bytes_: float, util: float) -> float:
+        x = self.jnp.asarray(self.featurize(
+            np.array([flops]), np.array([bytes_]), np.array([util])))
+        return float(np.exp(np.asarray(self._jit_pred(self.params, x))[0]))
+
+    def r2(self, flops, bytes_, util, latency_s) -> float:
+        x = self.jnp.asarray(self.featurize(np.asarray(flops), np.asarray(bytes_),
+                                            np.asarray(util)))
+        pred = np.asarray(self._jit_pred(self.params, x))
+        y = np.log(np.maximum(np.asarray(latency_s), 1e-9))
+        ss_res = float(np.sum((pred - y) ** 2))
+        ss_tot = float(np.sum((y - y.mean()) ** 2)) or 1e-12
+        return 1.0 - ss_res / ss_tot
+
+
+class EWMATracker:
+    """Runtime latency correction (paper §IV-E)."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self.values: Dict[int, float] = {}
+
+    def update(self, op_idx: int, measured: float) -> float:
+        old = self.values.get(op_idx)
+        new = measured if old is None else (
+            self.alpha * measured + (1 - self.alpha) * old)
+        self.values[op_idx] = new
+        return new
+
+    def drift_ratio(self, baseline_sum: float) -> float:
+        s = sum(self.values.values())
+        if baseline_sum <= 0:
+            return float("inf")
+        return abs(s - baseline_sum) / baseline_sum
+
+
+def calibrate_cpu(n: int = 256) -> DeviceCalibration:
+    """Measure this container's effective matmul flops + memcpy bandwidth so
+    the analytic model predicts realistic CPU latencies for the benchmarks."""
+    a = np.random.rand(n, n).astype(np.float32)
+    b = np.random.rand(n, n).astype(np.float32)
+    t0 = _time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        a @ b
+    dt = (_time.perf_counter() - t0) / reps
+    flops = 2 * n ** 3 / max(dt, 1e-9)
+    big = np.random.rand(4 << 20).astype(np.float32)
+    t0 = _time.perf_counter()
+    for _ in range(10):
+        big.copy()
+    bw = 10 * big.nbytes * 2 / max(_time.perf_counter() - t0, 1e-9)
+    return DeviceCalibration(flops=flops, mem_bw=bw)

@@ -1,0 +1,433 @@
+"""Interpreting Executor (paper §III-D: Executor + Swap Executor).
+
+Runs a captured jaxpr equation-by-equation with an explicit device-residency
+accountant, a host store, and plan-driven swap / release / recompute events —
+the same architecture as the paper's framework (which interprets a tinyflow
+graph op-by-op).  On this container "device" and "host" are both CPU RAM, so
+residency is tracked logically (exact aval bytes) while the *data path* is
+real: swapped tensors are copied into the host store, dropped from the device
+store, and swapped back (or recomputed from their producer equation) before
+use; final outputs are verified against an un-scheduled reference execution.
+
+Both stores are keyed by **storage id**: an updated parameter aliases the old
+parameter's storage (paper §IV-B situation 2), so the Opt-phase update
+overwrites in place instead of double-counting.
+
+Two swap modes:
+  * sync  — swap events execute inline at their trigger (deterministic; tests).
+  * async — a Swap Executor thread drains an event queue while compute
+            proceeds, serialized by a channel lock (paper Fig. 4); used by
+            the multi-workload runtime for real overlap and contention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time as _time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from .access import AccessSequence, TensorKind
+from .peak_analysis import PERSISTENT_KINDS, storage_of
+from .plan import EventType, ScheduleEvent, SchedulingPlan
+
+
+class DeviceAccountant:
+    """Logical device-memory accounting shared by all jobs on the device."""
+
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        self.capacity = capacity_bytes
+        self.used = 0
+        self.peak = 0
+        self.lock = threading.Lock()
+        self.timeline: List[Tuple[float, int]] = []
+        self.oom_events = 0
+
+    def alloc(self, n: int) -> None:
+        with self.lock:
+            self.used += n
+            if self.capacity is not None and self.used > self.capacity:
+                self.oom_events += 1
+            self.peak = max(self.peak, self.used)
+            self.timeline.append((_time.perf_counter(), self.used))
+
+    def free(self, n: int) -> None:
+        with self.lock:
+            self.used -= n
+            self.timeline.append((_time.perf_counter(), self.used))
+
+
+@dataclasses.dataclass
+class ExecutionStats:
+    peak_bytes: int = 0
+    wall_time_s: float = 0.0
+    swap_out_count: int = 0
+    swap_in_count: int = 0
+    passive_swap_ins: int = 0
+    recompute_count: int = 0
+    op_latencies: Optional[List[float]] = None
+    stall_time_s: float = 0.0
+
+
+class SwapChannel:
+    """One transfer at a time, across every job on the host (paper §IV-A)."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.busy_s = 0.0
+
+    def transfer(self, fn):
+        with self.lock:
+            t0 = _time.perf_counter()
+            out = fn()
+            self.busy_s += _time.perf_counter() - t0
+            return out
+
+
+class AsyncSwapExecutor:
+    """Paper Fig. 4: an execution-queue thread pops swap events and runs them
+    on the shared channel."""
+
+    def __init__(self, channel: SwapChannel):
+        self.channel = channel
+        self.q: "queue.Queue" = queue.Queue()
+        self.inflight: Dict[str, threading.Event] = {}
+        self._stop = False
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def submit(self, key: str, fn) -> threading.Event:
+        done = threading.Event()
+        self.inflight[key] = done
+        self.q.put((key, fn, done))
+        return done
+
+    def _run(self):
+        while not self._stop:
+            try:
+                key, fn, done = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            try:
+                self.channel.transfer(fn)
+            finally:
+                done.set()
+                self.inflight.pop(key, None)
+
+    def drain(self):
+        while not self.q.empty():
+            _time.sleep(0.001)
+        for ev in list(self.inflight.values()):
+            ev.wait()
+
+    def stop(self):
+        self.drain()
+        self._stop = True
+
+
+def _is_dropvar(v) -> bool:
+    return type(v).__name__ == "DropVar"
+
+
+class JaxprExecutor:
+    def __init__(self, closed_jaxpr, seq: AccessSequence,
+                 plan: Optional[SchedulingPlan] = None,
+                 accountant: Optional[DeviceAccountant] = None,
+                 channel: Optional[SwapChannel] = None,
+                 async_swap: bool = False,
+                 measure_latency: bool = False,
+                 host_resident_inputs: Optional[Set[str]] = None):
+        self.closed = closed_jaxpr
+        self.jaxpr = closed_jaxpr.jaxpr
+        self.seq = seq
+        self.plan = plan
+        self.accountant = accountant or DeviceAccountant()
+        self.channel = channel or SwapChannel()
+        self.async_exec = AsyncSwapExecutor(self.channel) if async_swap else None
+        self.measure_latency = measure_latency
+        # storages whose *input* value starts on host (previous iteration's
+        # cross-iteration swap-out; paper Fig. 1(c) steady state)
+        self.host_resident_inputs: Set[str] = set(host_resident_inputs or ())
+
+        self.device: Dict[str, Any] = {}
+        self.host: Dict[str, np.ndarray] = {}
+        # stores keyed by storage id: updated params alias the old param's
+        # storage (paper §IV-B), the Opt update overwrites in place
+        self.storage: Dict[str, str] = {}
+        self.sizes: Dict[str, int] = {}
+        for t in seq.tensors.values():
+            st = storage_of(t)
+            self.storage[t.tid] = st
+            self.sizes[st] = max(self.sizes.get(st, 0), t.size_bytes)
+
+        self.var_by_name: Dict[str, Any] = {}
+        self._name: Dict[Any, str] = {}
+        # naming order must match graph_capture.capture exactly
+        for v in list(self.jaxpr.invars) + list(self.jaxpr.constvars):
+            self._name_of(v)
+        for eqn in self.jaxpr.eqns:
+            for v in eqn.outvars:
+                self._name_of(v)
+
+        # last use per *storage* (any alias)
+        self.last_use: Dict[str, int] = {}
+        for tid, idx in seq.activity_analysis().items():
+            st = self.storage.get(tid, tid)
+            self.last_use[st] = max(self.last_use.get(st, -1), idx)
+
+        self.by_trigger: Dict[int, List[ScheduleEvent]] = {}
+        self.recompute_for: Dict[str, ScheduleEvent] = {}
+        if plan:
+            for ev in plan.events:
+                self.by_trigger.setdefault(ev.trigger_op, []).append(ev)
+                if ev.event_type is EventType.RECOMPUTE:
+                    self.recompute_for[self._st(ev.tensor_id)] = ev
+        self.producer: Dict[str, int] = {}
+        for i, eqn in enumerate(self.jaxpr.eqns):
+            for v in eqn.outvars:
+                self.producer[self._name_of(v)] = i
+        self.outvar_names = {self._name_of(v) for v in self.jaxpr.outvars
+                             if not _is_dropvar(v)
+                             and not isinstance(v, jcore.Literal)}
+        self.stats = ExecutionStats(op_latencies=[] if measure_latency else None)
+        self._cur_idx = -1
+
+    # ------------------------------------------------------------------
+    def _name_of(self, v) -> str:
+        if v not in self._name:
+            nm = f"v{len(self._name)}"
+            self._name[v] = nm
+            self.var_by_name[nm] = v
+        return self._name[v]
+
+    def _st(self, name: str) -> str:
+        return self.storage.get(name, name)
+
+    def _put_device(self, name: str, val: Any) -> None:
+        st = self._st(name)
+        if st in self.device:
+            self.device[st] = val  # in-place overwrite (aliased update)
+            return
+        self.device[st] = val
+        self.accountant.alloc(self.sizes.get(st, _arr_bytes(val)))
+
+    def _drop_device(self, name: str) -> None:
+        st = self._st(name)
+        if st in self.device:
+            val = self.device.pop(st)
+            self.accountant.free(self.sizes.get(st, _arr_bytes(val)))
+
+    def _get(self, name: str):
+        return self.device.get(self._st(name))
+
+    # ------------------------------------------------------------------
+    def _swap_out(self, name: str) -> None:
+        st = self._st(name)
+        if st not in self.device:
+            return
+        val = self.device[st]
+
+        def do():
+            self.host[st] = np.asarray(val)  # real data path
+
+        if self.async_exec:
+            done = self.async_exec.submit("out:" + st, do)
+            done.wait()  # eviction frees only after the copy lands (paper)
+        else:
+            self.channel.transfer(do)
+        self._drop_device(st)
+        self.stats.swap_out_count += 1
+
+    def _swap_in(self, name: str, passive: bool) -> bool:
+        """Prefetch from host; returns False when there is nothing to fetch
+        (e.g. iteration-0 cold start of a cross-iteration plan)."""
+        st = self._st(name)
+        if st in self.device:
+            return True
+        if st not in self.host:
+            return False
+
+        def do():
+            self._put_device(st, jax.numpy.asarray(self.host[st]))
+
+        if self.async_exec and not passive:
+            self.async_exec.submit("in:" + st, do)
+        else:
+            t0 = _time.perf_counter()
+            self.channel.transfer(do)
+            if passive:
+                self.stats.passive_swap_ins += 1
+                self.stats.stall_time_s += _time.perf_counter() - t0
+        self.stats.swap_in_count += 1
+        return True
+
+    def _ensure_input(self, name: str) -> None:
+        """An operator needs `name` now: prefetch-wait, passive swap-in, or
+        recompute from the producer equation (paper Executor semantics)."""
+        st = self._st(name)
+        if st in self.device:
+            return
+        if self.async_exec and ("in:" + st) in self.async_exec.inflight:
+            ts = _time.perf_counter()
+            self.async_exec.inflight["in:" + st].wait()
+            self.stats.stall_time_s += _time.perf_counter() - ts
+            if st in self.device:
+                return
+        if self._swap_in(st, passive=True):
+            return
+        self._recompute(name)
+
+    def _recompute(self, name: str) -> None:
+        eqn_idx = self.producer.get(name)
+        if eqn_idx is None:
+            raise KeyError(f"tensor {name} unavailable and has no producer")
+        eqn = self.jaxpr.eqns[eqn_idx]
+        invals = []
+        for v in eqn.invars:
+            if isinstance(v, jcore.Literal):
+                invals.append(v.val)
+                continue
+            nm = self._name_of(v)
+            self._ensure_input(nm)
+            invals.append(self._get(nm))
+        outs = _eval_eqn(eqn, invals)
+        for v, o in zip(eqn.outvars, outs):
+            if not _is_dropvar(v):
+                self._put_device(self._name_of(v), o)
+        self.stats.recompute_count += 1
+
+    # ------------------------------------------------------------------
+    def run(self, *args: Any) -> Any:
+        t_start = _time.perf_counter()
+        flat, _ = jax.tree.flatten(args)
+        assert len(flat) == len(self.jaxpr.invars), \
+            f"expected {len(self.jaxpr.invars)} leaves, got {len(flat)}"
+        for v, val in zip(self.jaxpr.invars, flat):
+            nm = self._name_of(v)
+            st = self._st(nm)
+            if st in self.host_resident_inputs:
+                # previous iteration parked this storage on host; it enters
+                # the device only via its planned swap-in (or passively)
+                self.host[st] = np.asarray(val)
+            else:
+                self._put_device(nm, val)
+        for v, val in zip(self.jaxpr.constvars, self.closed.consts):
+            self._put_device(self._name_of(v), val)
+
+        for idx, eqn in enumerate(self.jaxpr.eqns):
+            self._cur_idx = idx
+            t0 = _time.perf_counter()
+            invals = []
+            for v in eqn.invars:
+                if isinstance(v, jcore.Literal):
+                    invals.append(v.val)
+                    continue
+                nm = self._name_of(v)
+                self._ensure_input(nm)
+                invals.append(self._get(nm))
+            outs = _eval_eqn(eqn, invals)
+            if self.measure_latency:
+                jax.block_until_ready(outs)
+                self.stats.op_latencies.append(_time.perf_counter() - t0)
+            for v, o in zip(eqn.outvars, outs):
+                if not _is_dropvar(v):
+                    self._put_device(self._name_of(v), o)
+
+            # releases: plan overrides, then free-at-last-use
+            for v in list(eqn.invars) + list(eqn.outvars):
+                if isinstance(v, jcore.Literal) or _is_dropvar(v):
+                    continue
+                nm = self._name_of(v)
+                st = self._st(nm)
+                spec = self.seq.tensors.get(nm)
+                rel_op = (self.plan.release_after_op.get(nm)
+                          if self.plan else None)
+                if rel_op is not None and rel_op == idx:
+                    self._drop_device(nm)
+                    continue
+                if (self.last_use.get(st) == idx
+                        and (spec is None or (spec.kind not in PERSISTENT_KINDS
+                                              and spec.updates is None))
+                        and st not in self.outvar_names
+                        and nm not in self.outvar_names):
+                    self._drop_device(nm)
+
+            # plan events triggered by this op
+            for ev in self.by_trigger.get(idx, []):
+                st = self._st(ev.tensor_id)
+                if ev.event_type is EventType.SWAP_OUT:
+                    self._swap_out(ev.tensor_id)
+                elif ev.event_type is EventType.SWAP_IN:
+                    # no-op on cold start (nothing on host yet)
+                    self._swap_in(ev.tensor_id, passive=False)
+                elif ev.event_type is EventType.RELEASE:
+                    # only release when a host copy or a recompute plan can
+                    # restore the value (paper Executor safety check)
+                    if st in self.host or st in self.recompute_for:
+                        self._drop_device(ev.tensor_id)
+                elif ev.event_type is EventType.RECOMPUTE:
+                    if st not in self.device:
+                        self._recompute(ev.tensor_id)
+
+        if self.async_exec:
+            self.async_exec.drain()
+        outs = []
+        for v in self.jaxpr.outvars:
+            if isinstance(v, jcore.Literal):
+                outs.append(v.val)
+                continue
+            nm = self._name_of(v)
+            if self._get(nm) is None:
+                self._ensure_input(nm)
+            outs.append(self._get(nm))
+        self.stats.wall_time_s = _time.perf_counter() - t_start
+        self.stats.peak_bytes = self.accountant.peak
+        return outs
+
+    # ------------------------------------------------------------------
+    def ending_host_storages(self) -> Set[str]:
+        """Storages left parked on host at iteration end (their device copy
+        dropped) — the next iteration's `host_resident_inputs`."""
+        return {st for st in self.host if st not in self.device}
+
+    def close(self):
+        if self.async_exec:
+            self.async_exec.stop()
+
+
+def _arr_bytes(x) -> int:
+    try:
+        return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    except Exception:
+        return 0
+
+
+def _eval_eqn(eqn, invals: List[Any]) -> List[Any]:
+    """Evaluate one jaxpr equation.  Call-like primitives run their
+    sub-jaxpr through jaxpr_as_fun; everything else binds directly."""
+    prim = eqn.primitive
+    name = prim.name
+    if name == "pjit":
+        sub = eqn.params["jaxpr"]
+        outs = jcore.jaxpr_as_fun(sub)(*invals)
+        return list(outs)
+    if name in ("custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+                "remat", "checkpoint"):
+        sub = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr") \
+            or eqn.params.get("jaxpr")
+        if sub is not None:
+            closed = sub if hasattr(sub, "consts") else jcore.ClosedJaxpr(sub, [])
+            return list(jcore.jaxpr_as_fun(closed)(*invals))
+    outs = prim.bind(*invals, **eqn.params)
+    if not prim.multiple_results:
+        outs = [outs]
+    return list(outs)
+
+
+def reference_outputs(closed_jaxpr, *args: Any) -> List[Any]:
+    flat, _ = jax.tree.flatten(args)
+    return list(jcore.jaxpr_as_fun(closed_jaxpr)(*flat))

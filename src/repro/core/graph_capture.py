@@ -1,0 +1,192 @@
+"""Static compute-graph capture: jaxpr → Tensor Access Sequence.
+
+The paper describes jobs as static compute graphs G(V, E) "just like the one
+in TensorFlow".  In JAX the natural equivalent is the jaxpr of the step
+function: each equation is an operator in V; its (non-literal) input vars are
+TUAs, its output vars TGAs.  Parameter / optimizer-state / input kinds are
+recovered from the step function's pytree structure, and the updated-param →
+old-param aliasing (paper §IV-B situation 2) from matching input and output
+pytree paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from .access import (AccessSequence, Operator, Phase, TensorKind, TensorSpec)
+from .cost_model import CostModel
+
+OPT_PRIMITIVES = {"add_any", "mul", "sub", "add", "div", "sqrt", "integer_pow",
+                  "rsqrt"}
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * np.dtype(aval.dtype).itemsize
+    except Exception:
+        return 0
+
+
+@dataclasses.dataclass
+class CaptureSpec:
+    """Labels the step function's arguments/results for kind recovery.
+
+    arg_kinds / out_kinds: one TensorKind per top-level positional argument /
+    result of the step function (broadcast over that subtree's leaves).
+    alias_pairs: (out_pos, arg_pos) pairs whose pytrees match leaf-for-leaf —
+    e.g. (new_params, params), (new_opt_state, opt_state).
+    """
+    arg_kinds: Sequence[TensorKind]
+    out_kinds: Sequence[TensorKind] = ()
+    alias_pairs: Sequence[Tuple[int, int]] = ()
+
+
+def capture(fn: Callable, *args: Any, job_id: str = "job0",
+            spec: Optional[CaptureSpec] = None,
+            cost_model: Optional[CostModel] = None,
+            phase_split: Optional[Callable[[jcore.JaxprEqn], Phase]] = None,
+            ) -> AccessSequence:
+    """Trace `fn(*args)` and build its AccessSequence.
+
+    `args` may be arrays or ShapeDtypeStructs (no allocation needed).
+    """
+    cost_model = cost_model or CostModel()
+    closed = jax.make_jaxpr(fn)(*args)
+    jaxpr = closed.jaxpr
+
+    # ---- label input leaves ------------------------------------------
+    flat_per_arg: List[List[Any]] = []
+    for a in args:
+        leaves, _ = jax.tree.flatten(a)
+        flat_per_arg.append(leaves)
+    arg_kinds = list(spec.arg_kinds) if spec else [TensorKind.INPUT] * len(args)
+    invar_kind: Dict[Any, TensorKind] = {}
+    invar_argpos: Dict[Any, Tuple[int, int]] = {}
+    i = 0
+    for pos, leaves in enumerate(flat_per_arg):
+        for k, _ in enumerate(leaves):
+            if i < len(jaxpr.invars):
+                invar_kind[jaxpr.invars[i]] = (
+                    arg_kinds[pos] if pos < len(arg_kinds) else TensorKind.INPUT)
+                invar_argpos[jaxpr.invars[i]] = (pos, k)
+            i += 1
+
+    # ---- label output leaves (aliasing for updated params) -----------
+    out_alias: Dict[Any, Any] = {}   # outvar -> aliased invar
+    out_kind: Dict[Any, TensorKind] = {}
+    if spec:
+        # count leaves per output position by evaluating output pytree shape
+        out_avals = [v.aval for v in jaxpr.outvars]
+        # assume out_kinds aligned with flattened structure per position if
+        # the caller provides per-position leaf counts via eval_shape
+        try:
+            out_shape = jax.eval_shape(fn, *args)
+            out_leaves_per_pos = [len(jax.tree.flatten(o)[0])
+                                  for o in (out_shape if isinstance(out_shape, tuple)
+                                            else (out_shape,))]
+        except Exception:
+            out_leaves_per_pos = [len(out_avals)]
+        idx = 0
+        pos_slices: Dict[int, Tuple[int, int]] = {}
+        for pos, n in enumerate(out_leaves_per_pos):
+            pos_slices[pos] = (idx, idx + n)
+            for v in jaxpr.outvars[idx:idx + n]:
+                if pos < len(spec.out_kinds):
+                    out_kind[v] = spec.out_kinds[pos]
+            idx += n
+        arg_slices: Dict[int, Tuple[int, int]] = {}
+        idx = 0
+        for pos, leaves in enumerate(flat_per_arg):
+            arg_slices[pos] = (idx, idx + len(leaves))
+            idx += len(leaves)
+        for out_pos, arg_pos in spec.alias_pairs:
+            if out_pos not in pos_slices or arg_pos not in arg_slices:
+                continue
+            o0, o1 = pos_slices[out_pos]
+            a0, a1 = arg_slices[arg_pos]
+            if o1 - o0 != a1 - a0:
+                continue
+            for ov, iv in zip(jaxpr.outvars[o0:o1], jaxpr.invars[a0:a1]):
+                out_alias[ov] = iv
+
+    # ---- walk equations ----------------------------------------------
+    tensors: Dict[str, TensorSpec] = {}
+    operators: List[Operator] = []
+    names: Dict[Any, str] = {}
+
+    def name_of(v) -> str:
+        if v not in names:
+            names[v] = f"v{len(names)}"
+        return names[v]
+
+    outvar_set = set(jaxpr.outvars)
+    grad_hint: set = set()
+
+    for v in jaxpr.invars:
+        tid = name_of(v)
+        tensors[tid] = TensorSpec(
+            tid=tid, size_bytes=_nbytes(v.aval), shape=tuple(v.aval.shape),
+            dtype=str(v.aval.dtype), kind=invar_kind.get(v, TensorKind.INPUT),
+            job_id=job_id)
+    for v in jaxpr.constvars:
+        tid = name_of(v)
+        tensors[tid] = TensorSpec(
+            tid=tid, size_bytes=_nbytes(v.aval), shape=tuple(v.aval.shape),
+            dtype=str(v.aval.dtype), kind=TensorKind.INPUT, job_id=job_id)
+
+    seen_opt_phase = False
+    for idx, eqn in enumerate(jaxpr.eqns):
+        in_ids = tuple(name_of(v) for v in eqn.invars
+                       if isinstance(v, jcore.Var) and v in names)
+        # brand-new invars (e.g. from literals) are ignored
+        out_ids = []
+        flops, bts = cost_model.eqn_cost(eqn)
+        if phase_split is not None:
+            phase = phase_split(eqn)
+        else:
+            phase = Phase.OPT if seen_opt_phase else Phase.FB
+        for v in eqn.outvars:
+            tid = name_of(v)
+            out_ids.append(tid)
+            alias = out_alias.get(v)
+            kind = out_kind.get(
+                v, TensorKind.OUTPUT if v in outvar_set else TensorKind.ACTIVATION)
+            if alias is not None:
+                kind = (TensorKind.PARAM
+                        if invar_kind.get(alias) is TensorKind.PARAM
+                        else TensorKind.OPT_STATE)
+                seen_opt_phase = True
+                phase = Phase.OPT
+            tensors[tid] = TensorSpec(
+                tid=tid, size_bytes=_nbytes(v.aval), shape=tuple(v.aval.shape),
+                dtype=str(v.aval.dtype), kind=kind, job_id=job_id,
+                updates=names.get(alias) if alias is not None else None)
+        operators.append(Operator(
+            idx=idx, name=str(eqn.primitive.name), inputs=in_ids,
+            outputs=tuple(out_ids), flops=flops, bytes_accessed=bts,
+            latency=cost_model.latency(flops, bts, eqn.primitive.name),
+            phase=phase, job_id=job_id,
+            params={"eqn_index": idx}))
+
+    initial = [name_of(v) for v in list(jaxpr.invars) + list(jaxpr.constvars)]
+    seq = AccessSequence(job_id, operators, tensors, initial_resident=initial)
+    seq.params = {"n_eqns": len(jaxpr.eqns)}  # type: ignore[attr-defined]
+    return seq, closed
+
+
+def capture_train_step(fn: Callable, params: Any, opt_state: Any, batch: Any,
+                       job_id: str = "job0",
+                       cost_model: Optional[CostModel] = None):
+    """Capture a canonical ``train_step(params, opt_state, batch) ->
+    (new_params, new_opt_state, loss)``: params/opt-state kinds + the
+    across-iteration aliasing the paper's Opt-phase scheduling needs."""
+    spec = CaptureSpec(
+        arg_kinds=[TensorKind.PARAM, TensorKind.OPT_STATE, TensorKind.INPUT],
+        out_kinds=[TensorKind.PARAM, TensorKind.OPT_STATE, TensorKind.OUTPUT],
+        alias_pairs=[(0, 0), (1, 1)])
+    return capture(fn, params, opt_state, batch, job_id=job_id, spec=spec,
+                   cost_model=cost_model)

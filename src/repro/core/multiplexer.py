@@ -1,0 +1,188 @@
+"""Global Controller (paper §III-D, Fig. 3).
+
+Owns the job registry for a device: launches each job's Executor on its own
+thread, funnels measured operator latencies back to the Memory Scheduler,
+triggers re-planning when latencies drift past the update threshold
+(§IV-E), and distributes fresh plans — applied by each Executor at its next
+iteration boundary, exactly as the paper specifies ("the system will apply
+the new plan right before computing the next batch of data").
+
+The four-step scheduling procedure of §III-D maps to:
+  1. `launch()`      — collect the new job's graph + cold-start latencies
+                       (CostModel / LatencyMLP prediction, no passive mode)
+  2. `_replan()`     — Memory Scheduler generates/updates the plans
+  3. Executor threads + the shared AsyncSwapExecutor run the plans
+  4. latency reports — EWMA-folded; drift beyond threshold triggers 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time as _time
+from typing import Any, Callable, Dict, List, Optional
+
+from .access import AccessSequence
+from .cost_model import CostModel, EWMATracker
+from .executor import DeviceAccountant, JaxprExecutor, SwapChannel
+from .graph_capture import capture_train_step
+from .plan import MachineProfile, SchedulingPlan
+from .scheduler import MemoryScheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class JobHandle:
+    job_id: str
+    seq: AccessSequence
+    closed_jaxpr: Any
+    args: tuple
+    iterations: int
+    thread: Optional[threading.Thread] = None
+    plan: Optional[SchedulingPlan] = None
+    plan_version: int = 0
+    done: bool = False
+    error: Optional[BaseException] = None
+    stats: List[Any] = dataclasses.field(default_factory=list)
+    step_times: List[float] = dataclasses.field(default_factory=list)
+    peak_bytes: int = 0
+
+
+class GlobalController:
+    def __init__(self, profile: Optional[MachineProfile] = None,
+                 scheduler_config: Optional[SchedulerConfig] = None,
+                 cost_model: Optional[CostModel] = None,
+                 device_capacity: Optional[int] = None,
+                 async_swap: bool = True):
+        self.profile = profile or MachineProfile()
+        self.scheduler = MemoryScheduler(self.profile, scheduler_config)
+        self.cost_model = cost_model or CostModel()
+        self.accountant = DeviceAccountant(device_capacity)
+        self.channel = SwapChannel()
+        self.async_swap = async_swap
+        self.jobs: Dict[str, JobHandle] = {}
+        self.ewma: Dict[str, EWMATracker] = {}
+        self._lock = threading.Lock()
+        self._replan_count = 0
+
+    # ------------------------------------------------------------------
+    def launch(self, step_fn: Callable, params, opt_state, batch,
+               job_id: str, iterations: int = 3,
+               schedule: bool = True) -> JobHandle:
+        """Register + start a training job (async, like the paper's
+        sub-process per Executor)."""
+        # reflect current device contention into cold-start predictions
+        self.cost_model.utilization = min(
+            0.9, 0.3 * sum(1 for j in self.jobs.values() if not j.done))
+        seq, closed = capture_train_step(
+            step_fn, params, opt_state, batch, job_id=job_id,
+            cost_model=self.cost_model)
+        handle = JobHandle(job_id=job_id, seq=seq, closed_jaxpr=closed,
+                           args=(params, opt_state, batch),
+                           iterations=iterations)
+        with self._lock:
+            self.jobs[job_id] = handle
+            self.ewma[job_id] = EWMATracker(
+                alpha=self.scheduler.config.ewma_alpha)
+            self.scheduler.register_job(seq)
+            if schedule:
+                self._replan()
+        t = threading.Thread(target=self._run_job, args=(handle,), daemon=True)
+        handle.thread = t
+        t.start()
+        return handle
+
+    # ------------------------------------------------------------------
+    def _replan(self) -> None:
+        """Memory Scheduler pass over all live jobs; distribute plans."""
+        live = [j for j, h in self.jobs.items() if not h.done]
+        if not live:
+            return
+        result = self.scheduler.schedule(live)
+        for j in live:
+            h = self.jobs[j]
+            h.plan = result.plans[j]
+            h.plan_version += 1
+        self._replan_count += 1
+
+    # ------------------------------------------------------------------
+    def _run_job(self, handle: JobHandle) -> None:
+        try:
+            args = handle.args
+            version_used = -1
+            ex: Optional[JaxprExecutor] = None
+            for it in range(handle.iterations):
+                with self._lock:
+                    plan = handle.plan
+                    version = handle.plan_version
+                if ex is None or version != version_used:
+                    if ex is not None:
+                        ex.close()
+                    # carry the host store across plan versions
+                    old_host = ex.host if ex is not None else {}
+                    ex = JaxprExecutor(
+                        handle.closed_jaxpr, handle.seq, plan,
+                        accountant=self.accountant, channel=self.channel,
+                        async_swap=self.async_swap, measure_latency=True)
+                    ex.host.update(old_host)
+                    version_used = version
+                else:
+                    # fresh per-iteration stores, persistent host cache
+                    host = ex.host
+                    ex = JaxprExecutor(
+                        handle.closed_jaxpr, handle.seq, plan,
+                        accountant=self.accountant, channel=self.channel,
+                        async_swap=self.async_swap, measure_latency=True)
+                    ex.host.update(host)
+                t0 = _time.perf_counter()
+                outs = ex.run(*args)
+                handle.step_times.append(_time.perf_counter() - t0)
+                handle.stats.append(ex.stats)
+                handle.peak_bytes = max(handle.peak_bytes, ex.stats.peak_bytes)
+                # feed params/opt-state back (outputs 0,1 by convention)
+                n_p = len(__import__("jax").tree.flatten(args[0])[0])
+                n_o = len(__import__("jax").tree.flatten(args[1])[0])
+                import jax as _jax
+                p = _jax.tree.unflatten(_jax.tree.structure(args[0]),
+                                        outs[:n_p])
+                o = _jax.tree.unflatten(_jax.tree.structure(args[1]),
+                                        outs[n_p:n_p + n_o])
+                args = (p, o, args[2])
+                # report measured latencies (paper step 4)
+                if ex.stats.op_latencies:
+                    drift = self.report_latencies(handle.job_id,
+                                                  ex.stats.op_latencies)
+                    if drift:
+                        with self._lock:
+                            self._replan()
+                ex.close()
+            handle.done = True
+            with self._lock:
+                self.scheduler.remove_job(handle.job_id)
+        except BaseException as e:  # noqa: BLE001 - surfaced to caller
+            handle.error = e
+            handle.done = True
+
+    # ------------------------------------------------------------------
+    def report_latencies(self, job_id: str, measured: List[float]) -> bool:
+        with self._lock:
+            if job_id not in self.scheduler.jobs:
+                return False
+            return self.scheduler.update_latencies(job_id, measured)
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        deadline = None if timeout is None else _time.time() + timeout
+        for h in list(self.jobs.values()):
+            if h.thread is None:
+                continue
+            remaining = None if deadline is None else max(0.0, deadline - _time.time())
+            h.thread.join(remaining)
+        for h in self.jobs.values():
+            if h.error is not None:
+                raise h.error
+
+    @property
+    def global_peak_bytes(self) -> int:
+        return self.accountant.peak
+
+    @property
+    def replan_count(self) -> int:
+        return self._replan_count

@@ -1,0 +1,344 @@
+"""GPU memory peak analysis (paper §IV-B, Algorithm 2).
+
+Sweeps the merged event timeline of one or more jobs — tensor accesses plus
+already-scheduled swap events — and reports the memory footprint peak (MP),
+the tensors resident at the peak (MPT), the last input access before the peak
+(LUA) and the peak instant (MPTime).
+
+Memory changes at exactly five situations (paper §IV-B):
+  1. iteration beginning   — inputs + parameters not swapped out last iteration
+  2. TGA                   — footprint increases (updated parameters alias the
+                             old parameter's storage: no increase; the buffer
+                             is reserved when the producing op launches)
+  3. swap-in end           — footprint increases
+  4. swap-out end          — footprint decreases (or at the end of the
+                             overlapping TUA if that ends later)
+  5. tensor release        — footprint decreases after the last access
+
+Performance: the scheduler calls analyze() once per greedy iteration, so
+base events (accesses + activity-analysis releases — O(10⁴) on real nets)
+are cached per timeline version and merged with the handful of plan events
+per call instead of being rebuilt and re-sorted every time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+from .access import AccessSequence, AccessType, TensorKind, TensorSpec
+from .plan import EventType, ScheduleEvent, SchedulingPlan
+
+# Tensor kinds that persist across iterations unless explicitly swapped out.
+PERSISTENT_KINDS = (TensorKind.PARAM, TensorKind.OPT_STATE)
+
+
+def storage_of(spec: TensorSpec) -> str:
+    """Updated parameters reuse the old parameter's storage (paper §IV-B 2))."""
+    return spec.updates if spec.updates is not None else spec.tid
+
+
+@dataclasses.dataclass
+class MemEvent:
+    time: float
+    delta: int               # signed bytes
+    storage: str
+    job_id: str
+    kind: str                # "init" | "tga" | "swap_in" | "swap_out" | "release"
+    order: int = 0           # tie-break: frees before allocs at equal time
+
+
+@dataclasses.dataclass
+class PeakReport:
+    peak_bytes: int
+    peak_time: float
+    # (storage_id, job_id, size_bytes) resident at the peak, largest first
+    peak_tensors: List[Tuple[str, str, int]]
+    last_input_access: Dict[str, float]
+    timeline: List[Tuple[float, int]]
+    per_job_peak: Dict[str, int]
+
+    def mpt_ids(self) -> List[str]:
+        return [t[0] for t in self.peak_tensors]
+
+
+# ----------------------------------------------------------------------
+# Event construction (cached base + per-plan deltas)
+# ----------------------------------------------------------------------
+class _JobBase:
+    """Timeline-version-keyed per-job static data."""
+
+    def __init__(self, seq: AccessSequence, free_at_last_use: bool):
+        self.sizes: Dict[str, int] = {}
+        for spec in seq.tensors.values():
+            st = storage_of(spec)
+            self.sizes[st] = max(self.sizes.get(st, 0), spec.size_bytes)
+
+        self.persistent: set = set()
+        last_end: Dict[str, float] = {}
+        for tid, accs in seq.accesses_by_tensor.items():
+            spec = seq.tensors[tid]
+            st = storage_of(spec)
+            last_end[st] = max(last_end.get(st, 0.0),
+                               max(a.end_time for a in accs))
+            if spec.kind in PERSISTENT_KINDS or spec.updates is not None:
+                self.persistent.add(st)
+        self.last_end = last_end
+
+        fixed: List[MemEvent] = []
+        seen_init = set()
+        for tid in seq.initial_resident:
+            spec = seq.tensors.get(tid)
+            if spec is None:
+                continue
+            st = storage_of(spec)
+            if st in seen_init:
+                continue
+            seen_init.add(st)
+            fixed.append(MemEvent(0.0, +self.sizes[st], st, seq.job_id,
+                                  "init", order=0))
+        alloc_seen = set(seen_init)
+        for a in seq.accesses:
+            if a.access_type is not AccessType.TGA:
+                continue
+            spec = seq.tensors[a.tensor_id]
+            st = storage_of(spec)
+            if spec.updates is not None or st in alloc_seen:
+                continue
+            alloc_seen.add(st)
+            alloc_t = seq.op_start[a.op_idx] \
+                if 0 <= a.op_idx < len(seq.op_start) else a.time
+            fixed.append(MemEvent(alloc_t, +self.sizes[st], st, seq.job_id,
+                                  "tga", order=1))
+        fixed.sort(key=_ekey)
+        self.fixed = fixed
+
+        rel: List[MemEvent] = []
+        for st, t_end in last_end.items():
+            if st in self.persistent:
+                continue
+            t = t_end if free_at_last_use else seq.iteration_time
+            rel.append(MemEvent(t, -self.sizes[st], st, seq.job_id,
+                                "release", order=-1))
+        rel.sort(key=_ekey)
+        self.releases = rel
+
+        tuas = sorted((a.time for a in seq.accesses
+                       if a.access_type is AccessType.TUA))
+        self.tua_times = tuas
+
+
+def _ekey(e: MemEvent):
+    return (e.time, e.order)
+
+
+_BASE_CACHE: Dict[Tuple[int, int, bool], _JobBase] = {}
+
+
+def _job_base(seq: AccessSequence, free_at_last_use: bool) -> _JobBase:
+    key = (getattr(seq, "serial", id(seq)),
+           getattr(seq, "_timeline_version", 0), free_at_last_use)
+    hit = _BASE_CACHE.get(key)
+    if hit is None:
+        if len(_BASE_CACHE) > 256:
+            _BASE_CACHE.clear()
+        hit = _JobBase(seq, free_at_last_use)
+        _BASE_CACHE[key] = hit
+    return hit
+
+
+def _plan_events(seq: AccessSequence, plan: SchedulingPlan,
+                 base: _JobBase) -> Tuple[List[MemEvent], set]:
+    """Dynamic events from a plan + the storages whose base release is
+    superseded (swapped-out or override-released)."""
+    events: List[MemEvent] = []
+    touched: set = set()
+    sizes = base.sizes
+    for ev in plan.events:
+        spec = seq.tensors.get(ev.tensor_id)
+        if spec is None:
+            continue
+        st = storage_of(spec)
+        if ev.event_type is EventType.SWAP_OUT:
+            free_t = ev.end
+            for a in seq.tensor_accesses(ev.tensor_id):
+                if a.time <= ev.end and a.end_time > free_t:
+                    free_t = a.end_time
+            touched.add(st)
+            events.append(MemEvent(free_t, -sizes[st], st, seq.job_id,
+                                   "swap_out", order=-1))
+        elif ev.event_type in (EventType.SWAP_IN, EventType.RECOMPUTE):
+            events.append(MemEvent(ev.end, +sizes[st], st, seq.job_id,
+                                   "swap_in", order=1))
+        elif ev.event_type is EventType.RELEASE:
+            events.append(MemEvent(ev.end, -sizes[st], st, seq.job_id,
+                                   "release", order=-1))
+    for tid, op_idx in plan.release_after_op.items():
+        spec = seq.tensors.get(tid)
+        if spec is None or not (0 <= op_idx < len(seq.op_end)):
+            continue
+        st = storage_of(spec)
+        t = min(base.last_end.get(st, float("inf")), seq.op_end[op_idx])
+        touched.add(st)
+        events.append(MemEvent(t, -sizes[st], st, seq.job_id,
+                               "release", order=-1))
+    events.sort(key=_ekey)
+    return events, touched
+
+
+def _offset_iter(events: Iterable[MemEvent], offset: float
+                 ) -> Iterator[MemEvent]:
+    if not offset:
+        yield from events
+        return
+    for e in events:
+        yield dataclasses.replace(e, time=e.time + offset)
+
+
+def build_events(seq: AccessSequence,
+                 plan: Optional[SchedulingPlan] = None,
+                 offset: float = 0.0,
+                 free_at_last_use: bool = True) -> List[MemEvent]:
+    """All memory events for one job (compat API; used by tests)."""
+    base = _JobBase(seq, free_at_last_use)
+    dyn, touched = (_plan_events(seq, plan, base) if plan is not None
+                    else ([], set()))
+    evs = list(base.fixed) \
+        + [e for e in base.releases if e.storage not in touched] + dyn
+    if offset:
+        evs = [dataclasses.replace(e, time=e.time + offset) for e in evs]
+    return evs
+
+
+def analyze(seqs: Sequence[AccessSequence],
+            plans: Optional[Dict[str, SchedulingPlan]] = None,
+            offsets: Optional[Dict[str, float]] = None,
+            window: Optional[Tuple[float, float]] = None,
+            free_at_last_use: bool = True) -> PeakReport:
+    """Algorithm 2 over the merged timeline of several jobs.
+
+    `offsets[job_id]` shifts a job's timeline (jobs run asynchronously).
+    `window` restricts peak detection to [lo, hi).
+    """
+    plans = plans or {}
+    offsets = offsets or {}
+    streams = []
+    tuas: List[Tuple[float, str]] = []
+    for seq in seqs:
+        off = offsets.get(seq.job_id, 0.0)
+        base = _job_base(seq, free_at_last_use)
+        plan = plans.get(seq.job_id)
+        if plan is not None and (plan.events or plan.release_after_op):
+            dyn, touched = _plan_events(seq, plan, base)
+        else:
+            dyn, touched = [], set()
+        streams.append(_offset_iter(base.fixed, off))
+        if touched:
+            streams.append(_offset_iter(
+                (e for e in base.releases if e.storage not in touched), off))
+        else:
+            streams.append(_offset_iter(base.releases, off))
+        if dyn:
+            streams.append(_offset_iter(dyn, off))
+        tuas.extend((t + off, seq.job_id) for t in base.tua_times)
+    events = list(heapq.merge(*streams, key=_ekey))
+    tuas.sort()
+
+    # --- pass 1: find the peak index (no snapshots: snapshotting/sorting
+    # the resident set at every running peak was O(n²) and dominated the
+    # scheduler's runtime on DenseNet-scale graphs) -----------------------
+    resident: Dict[Tuple[str, str], int] = {}
+    mem = 0
+    peak, peak_time, peak_idx = 0, 0.0, -1
+    timeline: List[Tuple[float, int]] = []
+    per_job: Dict[str, int] = {}
+    job_mem: Dict[str, int] = {}
+
+    for i, ev in enumerate(events):
+        key = (ev.job_id, ev.storage)
+        if ev.delta > 0:
+            if key in resident:
+                continue  # already resident (idempotent alloc)
+            resident[key] = ev.delta
+            mem += ev.delta
+            jm = job_mem.get(ev.job_id, 0) + ev.delta
+            job_mem[ev.job_id] = jm
+            if jm > per_job.get(ev.job_id, 0):
+                per_job[ev.job_id] = jm
+        else:
+            if key not in resident:
+                continue  # already freed (idempotent free)
+            sz = resident.pop(key)
+            mem -= sz
+            job_mem[ev.job_id] = job_mem.get(ev.job_id, 0) - sz
+        timeline.append((ev.time, mem))
+        in_window = window is None or (window[0] <= ev.time < window[1])
+        if in_window and mem > peak:
+            peak, peak_time, peak_idx = mem, ev.time, i
+
+    # --- pass 2: replay to the peak index, reconstruct MPT + LUA once ----
+    resident.clear()
+    for ev in events[:peak_idx + 1]:
+        key = (ev.job_id, ev.storage)
+        if ev.delta > 0:
+            resident.setdefault(key, ev.delta)
+        else:
+            resident.pop(key, None)
+    peak_resident = sorted(
+        ((st, j, sz) for (j, st), sz in resident.items()),
+        key=lambda x: -x[2])
+    lua: Dict[str, float] = {s.job_id: 0.0 for s in seqs}
+    for t, j in tuas:
+        if t > peak_time:
+            break
+        lua[j] = t
+    return PeakReport(peak_bytes=peak, peak_time=peak_time,
+                      peak_tensors=peak_resident, last_input_access=lua,
+                      timeline=timeline, per_job_peak=per_job)
+
+
+def vanilla_peak(seq: AccessSequence, free_at_last_use: bool = False) -> int:
+    """Peak with no scheduling at all — the paper's vanilla group (VMP):
+    on the paper's platform nothing is freed until the iteration ends."""
+    return analyze([seq], free_at_last_use=free_at_last_use).peak_bytes
+
+
+def unroll(seq: AccessSequence, n_iters: int = 2) -> AccessSequence:
+    """Unroll `n_iters` iterations of a job into one sequence.
+
+    Persistent tensors (params, optimizer state, and updated-parameter
+    aliases) keep their identity across iterations; activations, gradients
+    and inputs become per-iteration instances (``tid~k``).
+    """
+    from .access import Operator  # local import to avoid cycles
+
+    def persists(spec: TensorSpec) -> bool:
+        return spec.kind in PERSISTENT_KINDS or spec.updates is not None
+
+    ops: List[Operator] = []
+    tensors: Dict[str, TensorSpec] = {}
+    n_ops = len(seq.operators)
+
+    def rename(tid: str, k: int) -> str:
+        spec = seq.tensors.get(tid)
+        if spec is None or persists(spec):
+            return tid
+        return f"{tid}~{k}"
+
+    for k in range(n_iters):
+        for op in seq.operators:
+            ops.append(Operator(
+                idx=k * n_ops + op.idx, name=op.name,
+                inputs=tuple(rename(t, k) for t in op.inputs),
+                outputs=tuple(rename(t, k) for t in op.outputs),
+                latency=op.latency, flops=op.flops,
+                bytes_accessed=op.bytes_accessed, phase=op.phase,
+                params=op.params, job_id=op.job_id))
+        for tid, spec in seq.tensors.items():
+            new_id = rename(tid, k)
+            if new_id in tensors:
+                continue
+            tensors[new_id] = dataclasses.replace(spec, tid=new_id)
+    initial = [rename(t, 0) for t in seq.initial_resident]
+    out = AccessSequence(seq.job_id, ops, tensors, initial_resident=initial)
+    return out

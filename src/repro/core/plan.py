@@ -1,0 +1,206 @@
+"""Scheduling plan & events (paper §III-A "Scheduling Plan", §III-C).
+
+Every event is described by a tuple ``(trigger, Δtime)``: the trigger is a
+tensor access (we key it by the trigger operator's index) and Δtime the delay
+after the trigger's end (paper §III-D Memory Scheduler).  Absolute
+``start``/``end`` instants are kept alongside for peak analysis and for the
+single-channel reservation, and are recomputed whenever latencies drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Iterable, List, Optional
+
+
+class EventType(enum.Enum):
+    SWAP_OUT = "swap_out"
+    SWAP_IN = "swap_in"
+    RECOMPUTE = "recompute"
+    RELEASE = "release"
+
+
+@dataclasses.dataclass
+class ScheduleEvent:
+    event_type: EventType
+    tensor_id: str
+    job_id: str
+    trigger_op: int          # op whose completion triggers the event
+    delta: float             # Δtime after trigger end
+    start: float             # absolute planned start (seconds on the timeline)
+    end: float               # absolute planned end
+    size_bytes: int = 0
+    # swap-in: the TUA this prefetch must beat; recompute: the TUA needing it
+    target_op: Optional[int] = None
+    # recompute: ops to re-execute
+    recompute_ops: Optional[List[int]] = None
+    # True for events scheduled across the iteration boundary (paper Fig 1(c))
+    crosses_iteration: bool = False
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["event_type"] = self.event_type.value
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, object]) -> "ScheduleEvent":
+        d = dict(d)
+        d["event_type"] = EventType(d["event_type"])
+        return ScheduleEvent(**d)  # type: ignore[arg-type]
+
+
+@dataclasses.dataclass
+class SchedulingPlan:
+    """Per-job plan S_j: ordered swap/recompute/release events."""
+
+    job_id: str
+    events: List[ScheduleEvent] = dataclasses.field(default_factory=list)
+    # tensor -> op index after which it may be released (activity analysis +
+    # planner-added early releases)
+    release_after_op: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # metadata for reporting
+    planned_peak_bytes: int = 0
+    vanilla_peak_bytes: int = 0
+    plan_wallclock_s: float = 0.0
+
+    def add(self, ev: ScheduleEvent) -> None:
+        self.events.append(ev)
+
+    def remove(self, ev: ScheduleEvent) -> None:
+        self.events.remove(ev)
+
+    def by_type(self, et: EventType) -> List[ScheduleEvent]:
+        return [e for e in self.events if e.event_type is et]
+
+    def swap_outs(self) -> List[ScheduleEvent]:
+        return self.by_type(EventType.SWAP_OUT)
+
+    def swap_ins(self) -> List[ScheduleEvent]:
+        return self.by_type(EventType.SWAP_IN)
+
+    def recomputes(self) -> List[ScheduleEvent]:
+        return self.by_type(EventType.RECOMPUTE)
+
+    def swapped_tensors(self) -> List[str]:
+        seen, out = set(), []
+        for e in self.swap_outs():
+            if e.tensor_id not in seen:
+                seen.add(e.tensor_id)
+                out.append(e.tensor_id)
+        return out
+
+    def events_triggered_by(self, op_idx: int) -> List[ScheduleEvent]:
+        return [e for e in self.events if e.trigger_op == op_idx]
+
+    def memory_saving_bytes(self) -> int:
+        return max(0, self.vanilla_peak_bytes - self.planned_peak_bytes)
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "job_id": self.job_id,
+            "events": [e.to_dict() for e in self.events],
+            "release_after_op": dict(self.release_after_op),
+            "planned_peak_bytes": self.planned_peak_bytes,
+            "vanilla_peak_bytes": self.vanilla_peak_bytes,
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, object]) -> "SchedulingPlan":
+        p = SchedulingPlan(job_id=str(d["job_id"]))
+        p.events = [ScheduleEvent.from_dict(e) for e in d["events"]]  # type: ignore[union-attr]
+        p.release_after_op = {str(k): int(v) for k, v in d["release_after_op"].items()}  # type: ignore[union-attr]
+        p.planned_peak_bytes = int(d.get("planned_peak_bytes", 0))  # type: ignore[arg-type]
+        p.vanilla_peak_bytes = int(d.get("vanilla_peak_bytes", 0))  # type: ignore[arg-type]
+        return p
+
+
+class ChannelReservation:
+    """The single PCIe / host-DMA channel (paper §IV-A: "there can only be one
+    tensor being swapped at the same time").  Swap events from *all* jobs book
+    non-overlapping intervals here.  Sorted + bisect: O(log n) queries (the
+    planner issues millions on DenseNet-scale graphs)."""
+
+    def __init__(self):
+        self._intervals: List[List[float]] = []  # sorted, non-overlapping
+        self._starts: List[float] = []
+
+    def intervals(self) -> List[List[float]]:
+        return [list(x) for x in self._intervals]
+
+    def is_free(self, start: float, end: float) -> bool:
+        import bisect
+        i = bisect.bisect_right(self._starts, start)
+        # neighbour on the left may still cover `start`
+        if i > 0 and self._intervals[i - 1][1] > start + 1e-12:
+            return False
+        if i < len(self._intervals) and self._intervals[i][0] < end - 1e-12:
+            return False
+        return True
+
+    def book(self, start: float, end: float) -> None:
+        import bisect
+        if not self.is_free(start, end):
+            raise ValueError(f"channel interval [{start}, {end}] already booked")
+        i = bisect.bisect_right(self._starts, start)
+        self._intervals.insert(i, [start, end])
+        self._starts.insert(i, start)
+
+    def release(self, start: float, end: float) -> None:
+        i = self._intervals.index([start, end])
+        self._intervals.pop(i)
+        self._starts.pop(i)
+
+    def free_slots(self, lo: float, hi: float, duration: float) -> List[List[float]]:
+        """Maximal free intervals within [lo, hi] long enough for `duration`."""
+        if hi - lo < duration - 1e-12:
+            return []
+        slots: List[List[float]] = []
+        cur = lo
+        for s, e in self._intervals:
+            if e <= lo or s >= hi:
+                continue
+            if s - cur >= duration - 1e-12:
+                slots.append([cur, min(s, hi)])
+            cur = max(cur, e)
+            if cur >= hi:
+                break
+        if hi - cur >= duration - 1e-12:
+            slots.append([cur, hi])
+        return [x for x in slots if x[1] - x[0] >= duration - 1e-12]
+
+    def earliest_fit(self, lo: float, hi: float, duration: float) -> Optional[float]:
+        slots = self.free_slots(lo, hi, duration)
+        return slots[0][0] if slots else None
+
+    def latest_fit(self, lo: float, hi: float, duration: float) -> Optional[float]:
+        slots = self.free_slots(lo, hi, duration)
+        return slots[-1][1] - duration if slots else None
+
+
+@dataclasses.dataclass
+class MachineProfile:
+    """Hardware constants used by the planner & simulator.
+
+    Defaults describe the TPU v5e target of this repo; the CPU-container
+    benchmarks calibrate `compute_flops`/`mem_bw` from measurements instead.
+    """
+
+    device_memory_bytes: int = 16 * 2 ** 30          # v5e HBM per chip
+    host_link_bw: float = 16e9                       # host<->device DMA (B/s)
+    host_link_latency: float = 15e-6                 # per-transfer setup
+    compute_flops: float = 197e12                    # bf16 peak / chip
+    mem_bw: float = 819e9                            # HBM B/s
+    ici_bw: float = 50e9                             # per ICI link B/s
+    swap_compression: float = 1.0                    # <1.0 with offload_quant
+
+    def swap_time(self, size_bytes: int) -> float:
+        eff = size_bytes * self.swap_compression
+        return self.host_link_latency + eff / self.host_link_bw
+
+
+def merge_plans(plans: Iterable[SchedulingPlan]) -> Dict[str, SchedulingPlan]:
+    return {p.job_id: p for p in plans}

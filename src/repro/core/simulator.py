@@ -1,0 +1,344 @@
+"""Discrete-event execution simulator.
+
+Executes one or more jobs against their scheduling plans on a modeled
+machine: sequential operators per job, a single shared host-DMA channel for
+swaps (global exclusivity — cross-job conflicts queue), passive swap-ins when
+a prefetch misses its TUA (stall, counted as extra overhead), recompute time
+added inline, and exact byte accounting of device residency.
+
+Outputs the paper's metrics:
+    MSR = (VMP - EMP) / VMP      memory saving ratio
+    EOR = (ETC - VTC) / VTC      extra overhead ratio
+    CBR = MSR / EOR              cost-benefit ratio
+measured against the vanilla (no scheduling) run of the same jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .access import AccessSequence, TensorKind
+from .peak_analysis import PERSISTENT_KINDS, storage_of
+from .plan import EventType, MachineProfile, ScheduleEvent, SchedulingPlan
+
+
+@dataclasses.dataclass
+class SimResult:
+    peak_bytes: int
+    per_job_time: Dict[str, float]
+    per_job_peak: Dict[str, int]
+    total_time: float
+    stall_time: float
+    passive_swap_ins: int
+    swap_conflicts: int
+    timeline: List[Tuple[float, int]]
+
+    def msr(self, vanilla: "SimResult") -> float:
+        v = vanilla.peak_bytes
+        return (v - self.peak_bytes) / v if v else 0.0
+
+    def eor(self, vanilla: "SimResult") -> float:
+        v = vanilla.total_time
+        return (self.total_time - v) / v if v else 0.0
+
+    def cbr(self, vanilla: "SimResult") -> float:
+        e = self.eor(vanilla)
+        m = self.msr(vanilla)
+        if e <= 0:
+            return float("inf") if m > 0 else 0.0
+        return m / e
+
+
+class _Channel:
+    """Physically exclusive transfer channel; requests queue FIFO."""
+
+    def __init__(self):
+        self.busy_until = 0.0
+        self.conflicts = 0
+
+    def acquire(self, t: float, dur: float) -> Tuple[float, float]:
+        if t < self.busy_until:
+            self.conflicts += 1
+            t = self.busy_until
+        self.busy_until = t + dur
+        return t, t + dur
+
+
+class _JobState:
+    def __init__(self, seq: AccessSequence, plan: Optional[SchedulingPlan],
+                 iterations: int, offset: float):
+        self.seq = seq
+        self.plan = plan
+        self.iterations = iterations
+        self.offset = offset
+        self.op_ptr = 0
+        self.iter = 0
+        self.resident: Dict[str, int] = {}
+        self.host: set = set()
+        self.done = False
+        self.finish_time = 0.0
+        self.peak = 0
+        # events indexed by trigger op for quick lookup
+        self.by_trigger: Dict[int, List[ScheduleEvent]] = {}
+        if plan:
+            for ev in plan.events:
+                self.by_trigger.setdefault(ev.trigger_op, []).append(ev)
+        self.last_use = seq.activity_analysis()
+        # pending swap-ins landing later (time, tensor)
+        self.swap_in_done: Dict[str, float] = {}
+
+    def mem(self) -> int:
+        return sum(self.resident.values())
+
+
+def simulate(seqs: Sequence[AccessSequence],
+             plans: Optional[Dict[str, SchedulingPlan]] = None,
+             profile: Optional[MachineProfile] = None,
+             iterations: int = 2,
+             offsets: Optional[Dict[str, float]] = None,
+             free_at_last_use: bool = True) -> SimResult:
+    """Run `iterations` training iterations of every job concurrently.
+
+    `free_at_last_use=False` reproduces the vanilla platform (nothing is
+    released before iteration end — paper §V-A normalizer)."""
+    profile = profile or MachineProfile()
+    plans = plans or {}
+    offsets = offsets or {}
+    channel = _Channel()
+
+    jobs = {s.job_id: _JobState(s, plans.get(s.job_id), iterations,
+                                offsets.get(s.job_id, 0.0))
+            for s in seqs}
+
+    global_mem = 0
+    peak = 0
+    stall = 0.0
+    passive = 0
+    timeline: List[Tuple[float, int]] = []
+
+    def bump(job: _JobState, storage: str, size: int, t: float):
+        """size > 0 allocates (idempotent); size < 0 frees (idempotent)."""
+        nonlocal global_mem, peak
+        if size > 0:
+            if storage in job.resident:
+                return
+            job.resident[storage] = size
+            global_mem += size
+        else:
+            if storage not in job.resident:
+                return
+            global_mem -= job.resident.pop(storage)
+        peak = max(peak, global_mem)
+        job.peak = max(job.peak, job.mem())
+        timeline.append((t, global_mem))
+
+    # initialize residency
+    for job in jobs.values():
+        for tid in job.seq.initial_resident:
+            spec = job.seq.tensors.get(tid)
+            if spec is None:
+                continue
+            st = storage_of(spec)
+            # cross-iteration plans start steady state: tensors with a
+            # crossing swap-in arrive via that swap-in, except iteration 0
+            bump(job, st, spec.size_bytes, job.offset)
+
+    # event queue: (time, seqno, kind, job_id, payload)
+    q: List[Tuple[float, int, str, str, object]] = []
+    seqno = 0
+
+    def push(t: float, kind: str, job_id: str, payload=None):
+        nonlocal seqno
+        heapq.heappush(q, (t, seqno, kind, job_id, payload))
+        seqno += 1
+
+    for job_id, job in jobs.items():
+        push(job.offset, "op", job_id, 0)
+
+    sizes: Dict[Tuple[str, str], int] = {}
+    for job in jobs.values():
+        for spec in job.seq.tensors.values():
+            st = storage_of(spec)
+            key = (job.seq.job_id, st)
+            sizes[key] = max(sizes.get(key, 0), spec.size_bytes)
+
+    while q:
+        t, _, kind, job_id, payload = heapq.heappop(q)
+        job = jobs[job_id]
+        seq = job.seq
+
+        if kind == "swap_in_done":
+            st = payload  # type: ignore[assignment]
+            bump(job, st, sizes[(job_id, st)], t)
+            job.host.discard(st)  # host copy retained logically; resident now
+            job.swap_in_done.pop(st, None)
+            continue
+        if kind == "swap_out_done":
+            st = payload  # type: ignore[assignment]
+            job.host.add(st)
+            bump(job, st, -1, t)
+            continue
+        if kind != "op":
+            continue
+
+        op_idx = payload  # type: ignore[assignment]
+        op = seq.operators[op_idx]
+
+        # ---- ensure inputs resident (passive swap-in on miss) ----------
+        start = t
+        for tid in op.inputs:
+            spec = seq.tensors.get(tid)
+            if spec is None:
+                continue
+            st = storage_of(spec)
+            if st in job.resident:
+                continue
+            if st in job.swap_in_done:
+                # prefetch in flight but late: wait for it
+                wait_until = job.swap_in_done[st]
+                stall_d = max(0.0, wait_until - start)
+                stall += stall_d
+                start = max(start, wait_until)
+                bump(job, st, sizes[(job_id, st)], start)
+                job.swap_in_done.pop(st, None)
+                passive += 1
+            elif st in job.host:
+                # passive swap-in: block on the channel (paper: Capuchin-style
+                # passive mode overhead — what TENSILE avoids)
+                dur = profile.swap_time(sizes[(job_id, st)])
+                s0, s1 = channel.acquire(start, dur)
+                stall += (s1 - start)
+                start = s1
+                bump(job, st, sizes[(job_id, st)], start)
+                passive += 1
+            # else: never materialized (recompute plans re-run producer);
+            # treat as recompute-on-demand below via plan events
+
+        # ---- run the op -------------------------------------------------
+        end = start + op.latency
+        # recompute events targeting this op run inline before it
+        if job.plan:
+            for ev in job.plan.events:
+                if (ev.event_type is EventType.RECOMPUTE
+                        and ev.target_op == op_idx):
+                    st = storage_of(seq.tensors[ev.tensor_id])
+                    if st not in job.resident:
+                        rc = sum(seq.operators[i].latency
+                                 for i in (ev.recompute_ops or []))
+                        end += rc
+                        bump(job, st, sizes[(job_id, st)], start)
+
+        # ---- allocate outputs -------------------------------------------
+        for tid in op.outputs:
+            spec = seq.tensors.get(tid)
+            if spec is None:
+                continue
+            if spec.updates is not None:
+                continue  # aliases old storage
+            bump(job, storage_of(spec), spec.size_bytes, end)
+
+        # ---- releases (activity analysis + plan) -------------------------
+        for tid in op.inputs + op.outputs:
+            spec = seq.tensors.get(tid)
+            if spec is None:
+                continue
+            st = storage_of(spec)
+            rel_op = (job.plan.release_after_op.get(tid)
+                      if job.plan else None)
+            if rel_op is not None and rel_op == op_idx:
+                bump(job, st, -1, end)
+                continue
+            if (free_at_last_use
+                    and job.last_use.get(tid) == op_idx
+                    and spec.kind not in PERSISTENT_KINDS
+                    and spec.updates is None
+                    and st not in job.host):
+                bump(job, st, -1, end)
+
+        # ---- plan events triggered by this op -----------------------------
+        if job.plan:
+            for ev in job.by_trigger.get(op_idx, []):
+                if ev.event_type is EventType.SWAP_OUT:
+                    st = storage_of(seq.tensors[ev.tensor_id])
+                    if st not in job.resident:
+                        continue
+                    dur = profile.swap_time(ev.size_bytes)
+                    s0, s1 = channel.acquire(end + max(ev.delta, 0.0), dur)
+                    push(s1, "swap_out_done", job_id, st)
+                elif ev.event_type is EventType.SWAP_IN:
+                    st = storage_of(seq.tensors[ev.tensor_id])
+                    if st in job.resident or st not in job.host:
+                        # still resident (swap-out in flight) or nothing on
+                        # host yet (iteration-0 cold start): skip prefetch
+                        continue
+                    dur = profile.swap_time(ev.size_bytes)
+                    s0, s1 = channel.acquire(end + max(ev.delta, 0.0), dur)
+                    job.swap_in_done[st] = s1
+                    push(s1, "swap_in_done", job_id, st)
+                elif ev.event_type is EventType.RELEASE:
+                    st = storage_of(seq.tensors[ev.tensor_id])
+                    # only release if a host copy (or recompute plan) covers it
+                    if st in job.host or ev.tensor_id in {
+                            e.tensor_id for e in job.plan.recomputes()}:
+                        bump(job, st, -1, end)
+
+        # ---- advance ------------------------------------------------------
+        nxt = op_idx + 1
+        if nxt < len(seq.operators):
+            push(end, "op", job_id, nxt)
+        else:
+            if not free_at_last_use:
+                # vanilla platform: iteration-end free of non-persistent
+                for st in list(job.resident):
+                    if not _persistent_storage(seq, st):
+                        bump(job, st, -1, end)
+            job.iter += 1
+            if job.iter < job.iterations:
+                push(end, "op", job_id, 0)
+            else:
+                job.done = True
+                job.finish_time = end
+
+    per_job_time = {j: (job.finish_time - job.offset) / max(job.iterations, 1)
+                    for j, job in jobs.items()}
+    per_job_peak = {j: job.peak for j, job in jobs.items()}
+    total = max((job.finish_time for job in jobs.values()), default=0.0)
+    return SimResult(
+        peak_bytes=peak, per_job_time=per_job_time, per_job_peak=per_job_peak,
+        total_time=total, stall_time=stall, passive_swap_ins=passive,
+        swap_conflicts=channel.conflicts, timeline=timeline)
+
+
+def _persistent_storage(seq: AccessSequence, st: str) -> bool:
+    spec = seq.tensors.get(st)
+    return spec is not None and (spec.kind in PERSISTENT_KINDS
+                                 or spec.updates is not None)
+
+
+def evaluate(seqs: Sequence[AccessSequence],
+             plans: Optional[Dict[str, SchedulingPlan]],
+             profile: Optional[MachineProfile] = None,
+             iterations: int = 3,
+             offsets: Optional[Dict[str, float]] = None,
+             free_at_last_use: bool = True,
+             ) -> Dict[str, float]:
+    """Run scheduled vs vanilla and report the paper's metrics.  The
+    vanilla run frees nothing until iteration end (the paper's platform);
+    scheduled runs get activity-analysis releases (Alg 3 line 2) unless
+    the method's own framework lacks them (vDNN: swap-only)."""
+    vanilla = simulate(seqs, None, profile, iterations, offsets,
+                       free_at_last_use=False)
+    sched = simulate(seqs, plans, profile, iterations, offsets,
+                     free_at_last_use=free_at_last_use)
+    msr = sched.msr(vanilla)
+    eor = sched.eor(vanilla)
+    return {
+        "MSR": msr, "EOR": eor,
+        "CBR": sched.cbr(vanilla),
+        "vanilla_peak": vanilla.peak_bytes, "peak": sched.peak_bytes,
+        "vanilla_time": vanilla.total_time, "time": sched.total_time,
+        "stall_time": sched.stall_time,
+        "passive_swap_ins": sched.passive_swap_ins,
+        "swap_conflicts": sched.swap_conflicts,
+    }

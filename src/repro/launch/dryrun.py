@@ -1,0 +1,502 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture × input shape × mesh) cell:
+  * build abstract params / optimizer state / batch / cache
+    (ShapeDtypeStruct — no allocation),
+  * jit the train_step (train_4k) or serve_step (decode_*/long_*) or
+    prefill forward (prefill_32k) with full in/out shardings,
+  * ``.lower().compile()`` — proving the sharding config is coherent,
+  * record ``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs/bytes)
+    and the collective mix parsed from the compiled HLO (§Roofline inputs),
+  * write one JSON artifact per cell under ``experiments/artifacts/``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --multi-pod both
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_configs, shapes_for, \
+    skipped_shapes_for, ALL_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import MeshRules
+from repro.launch.steps import (TrainStepConfig, build_prefill_step,
+                                build_serve_step, build_train_step,
+                                offloaded_bytes, opt_state_for,
+                                opt_state_shardings)
+from repro.models.registry import get_model
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "artifacts")
+
+# v5e hardware constants (per chip) for §Roofline
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link
+
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\]\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind: op count, raw tensor bytes, and modeled
+    wire bytes per device (ring: all-reduce 2(n-1)/n, gather/scatter
+    (n-1)/n, permute 1)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind, suffix = (m.group(1), m.group(2), m.group(3),
+                                     m.group(4))
+        if suffix == "-done":
+            continue  # counted at the matching -start
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+        size = numel * nbytes
+        g = _GROUP_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUP_RE2.search(line)
+            n = int(g2.group(2)) if g2 else 2
+        n = max(n, 2)
+        if kind == "all-reduce":
+            wire = 2 * size * (n - 1) / n
+        elif kind == "collective-permute":
+            wire = size
+        else:  # all-gather result / reduce-scatter operand / all-to-all
+            wire = size * (n - 1) / n
+        slot = out.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                     "wire_bytes": 0.0})
+        slot["count"] += 1
+        slot["bytes"] += size
+        slot["wire_bytes"] += wire
+    return out
+
+
+def _strip_layer_dim(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), tree)
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def _strip_layer_axes(axes_tree):
+    return jax.tree.map(lambda a: tuple(a[1:]) if a and a[0] == "layers"
+                        else tuple(a), axes_tree, is_leaf=_is_axes_leaf)
+
+
+def _act_shard(rules, logical, sds):
+    """Sharding for one activation ShapeDtypeStruct (divisibility-checked)."""
+    return rules.shardings_for(logical, sds)
+
+
+def _body_cost(cfg, shape, rules, api, params, batch,
+               axes=None) -> Dict[str, Any]:
+    """Per-scan-iteration cost of the layer stack.
+
+    XLA's HloCostAnalysis visits a while-loop body ONCE (verified
+    empirically), so the main compile undercounts flops/bytes/collectives
+    by ~n_repeats×.  We compile the superblock body separately — under the
+    same mesh/shardings and matching the real program's remat behaviour
+    (grad of a checkpointed body = fwd + recompute-fwd + bwd, exactly the
+    per-extra-layer cost of the scanned train step) — and scale by
+    (trips − 1).
+    """
+    from repro.models import transformer as T
+    from repro.models import whisper as W
+    from repro.models import layers as L
+
+    results = []
+
+    def shard_of(tree, axes_tree=None):
+        if axes_tree is not None:
+            return rules.shardings_for(axes_tree, tree)
+        return rules.batch_sharding(tree)
+
+    def compile_body(fn, *specs, shardings=None):
+        L.set_active_rules(rules)
+        try:
+            jitted = jax.jit(fn, in_shardings=shardings)
+            return jitted.lower(*specs).compile()
+        finally:
+            L.set_active_rules(None)
+
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.enc_dec:
+        b = shape.global_batch
+        s_enc = shape.seq_len
+        s_dec = max(shape.seq_len // cfg.enc_seq_ratio, 8)
+        if shape.kind == "decode":
+            s_enc = max(shape.seq_len // cfg.enc_seq_ratio, 8)
+        p_enc = _strip_layer_dim(params["enc_blocks"])
+        p_dec = _strip_layer_dim(params["dec_blocks"])
+        if axes is not None:
+            pe_sh = rules.shardings_for(
+                _strip_layer_axes(axes["enc_blocks"]), p_enc)
+            pd_sh = rules.shardings_for(
+                _strip_layer_axes(axes["dec_blocks"]), p_dec)
+        else:
+            pe_sh = pd_sh = None
+
+        def act3(sds):
+            return _act_shard(rules, ("dp", "seq", None), sds)
+
+        def act2(sds):
+            return _act_shard(rules, ("dp", "seq"), sds)
+        x_enc = jax.ShapeDtypeStruct((b, s_enc, cfg.d_model), dt)
+        x_dec = jax.ShapeDtypeStruct((b, s_dec, cfg.d_model), dt)
+        positions_e = jax.ShapeDtypeStruct((b, s_enc), jnp.int32)
+        positions_d = jax.ShapeDtypeStruct((b, s_dec), jnp.int32)
+
+        def enc_body(p, x, pos):
+            h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+            from repro.models.attention import attention_block, \
+                cross_attention_block
+            x = x + attention_block(p["attn"], h, pos, cfg=cfg, causal=False)
+            h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            return x + L.mlp_apply(p["mlp"], h, cfg.mlp_act)
+
+        def dec_body(p, x, pos, ctx):
+            from repro.models.attention import attention_block, \
+                cross_attention_block
+            h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+            x = x + attention_block(p["attn"], h, pos, cfg=cfg, causal=True)
+            h = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+            x = x + cross_attention_block(p["xattn"], h, ctx, cfg=cfg)
+            h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            return x + L.mlp_apply(p["mlp"], h, cfg.mlp_act)
+
+        if shape.kind == "train":
+            def enc_loss(p, x, pos):
+                return jnp.sum(jax.checkpoint(enc_body)(p, x, pos)
+                               .astype(jnp.float32))
+
+            def dec_loss(p, x, pos, ctx):
+                return jnp.sum(jax.checkpoint(dec_body)(p, x, pos, ctx)
+                               .astype(jnp.float32))
+            c1 = compile_body(jax.grad(enc_loss, argnums=(0, 1)),
+                              p_enc, x_enc, positions_e,
+                              shardings=(pe_sh, act3(x_enc),
+                                         act2(positions_e)))
+            c2 = compile_body(jax.grad(dec_loss, argnums=(0, 1, 3)),
+                              p_dec, x_dec, positions_d, x_enc,
+                              shardings=(pd_sh, act3(x_dec),
+                                         act2(positions_d), act3(x_enc)))
+            results = [(c1, cfg.n_enc_layers - 1), (c2, cfg.n_layers - 1)]
+        elif shape.kind == "prefill":
+            c1 = compile_body(enc_body, p_enc, x_enc, positions_e,
+                              shardings=(pe_sh, act3(x_enc),
+                                         act2(positions_e)))
+            c2 = compile_body(dec_body, p_dec, x_dec, positions_d, x_enc,
+                              shardings=(pd_sh, act3(x_dec),
+                                         act2(positions_d), act3(x_enc)))
+            results = [(c1, cfg.n_enc_layers - 1), (c2, cfg.n_layers - 1)]
+        else:
+            c_one = _strip_layer_dim(jax.eval_shape(
+                lambda: W.init_cache(cfg, b, shape.seq_len)[0])["self"])
+            x1 = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+            s_enc_d = max(shape.seq_len // cfg.enc_seq_ratio, 8)
+            ctx = jax.ShapeDtypeStruct((b, s_enc_d, cfg.d_model), dt)
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def dec1(p, x, c, ctx, index):
+                from repro.models.attention import decode_attention_block, \
+                    cross_attention_block
+                h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+                mix, c2_ = decode_attention_block(p["attn"], h, c, index,
+                                                  cfg=cfg)
+                x = x + mix
+                h = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+                x = x + cross_attention_block(p["xattn"], h, ctx, cfg=cfg)
+                h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+                return x + L.mlp_apply(p["mlp"], h, cfg.mlp_act), c2_
+            from repro.models.attention import kv_cache_axes
+            c_sh = rules.shardings_for(kv_cache_axes(), c_one)
+            c1 = compile_body(dec1, p_dec, x1, c_one, ctx, idx,
+                              shardings=(pd_sh,
+                                         _act_shard(rules, ("dp", None, None), x1),
+                                         c_sh,
+                                         _act_shard(rules, ("dp", None, None), ctx),
+                                         None))
+            results = [(c1, cfg.n_layers - 1)]
+    else:
+        b_tok = batch["tokens"].shape[0]
+        s = (shape.seq_len if shape.kind != "decode" else 1)
+        if cfg.frontend == "vision_stub" and shape.kind != "decode":
+            s = shape.seq_len  # patches + text total
+        p_rep = _strip_layer_dim(params["blocks"])
+        p_sh = (rules.shardings_for(_strip_layer_axes(axes["blocks"]), p_rep)
+                if axes is not None else None)
+        x_in = jax.ShapeDtypeStruct((b_tok, s, cfg.d_model), dt)
+        positions = jax.ShapeDtypeStruct((b_tok, s), jnp.int32)
+        x_sh = _act_shard(rules, ("dp", "seq", None), x_in)
+        pos_sh = _act_shard(rules, ("dp", "seq"), positions)
+
+        def body(p, x, pos):
+            aux = jnp.zeros((), jnp.float32)
+            x, aux = T._apply_superblock(p, x, pos, cfg, aux)
+            return x, aux
+
+        if shape.kind == "train":
+            def body_loss(p, x, pos):
+                y, aux = jax.checkpoint(body)(p, x, pos)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+            c1 = compile_body(jax.grad(body_loss, argnums=(0, 1)),
+                              p_rep, x_in, positions,
+                              shardings=(p_sh, x_sh, pos_sh))
+        elif shape.kind == "prefill":
+            c1 = compile_body(body, p_rep, x_in, positions,
+                              shardings=(p_sh, x_sh, pos_sh))
+        else:
+            cache_full = jax.eval_shape(
+                lambda: T.init_cache(cfg, b_tok, shape.seq_len)[0])
+            c_rep = _strip_layer_dim(cache_full["blocks"])
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def dec_body(p, x, c, index):
+                outs = {}
+                for i, spec in enumerate(cfg.block):
+                    x, outs[f"layer{i}"] = T._decode_layer(
+                        p[f"layer{i}"], spec, x, c[f"layer{i}"], index, cfg)
+                return x, outs
+            c_axes = _strip_layer_axes(
+                T.init_cache(cfg, 1, 1)[1]["blocks"])
+            c_sh = rules.shardings_for(c_axes, c_rep)
+            c1 = compile_body(dec_body, p_rep, x_in, c_rep, idx,
+                              shardings=(p_sh, x_sh, c_sh, None))
+        results = [(c1, cfg.n_repeats - 1)]
+
+    extra_flops = extra_bytes = 0.0
+    extra_colls: Dict[str, Dict[str, float]] = {}
+    for compiled, scale in results:
+        if scale <= 0:
+            continue
+        ca = compiled.cost_analysis()
+        extra_flops += scale * float(ca.get("flops", 0.0))
+        extra_bytes += scale * float(ca.get("bytes accessed", 0.0))
+        for kind, slot in parse_collectives(compiled.as_text()).items():
+            agg = extra_colls.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                                "wire_bytes": 0.0})
+            agg["count"] += scale * slot["count"]
+            agg["bytes"] += scale * slot["bytes"]
+            agg["wire_bytes"] += scale * slot["wire_bytes"]
+    return {"flops": extra_flops, "bytes": extra_bytes,
+            "collectives": extra_colls}
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for inference
+    (D = processed tokens)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.enc_dec:
+            tokens = shape.global_batch * (shape.seq_len
+                                           + shape.seq_len // cfg.enc_seq_ratio)
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    api = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = MeshRules(mesh, cfg=cfg)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    t0 = time.time()
+    params, axes = api.abstract_params()
+    p_shard = rules.param_shardings(axes)
+
+    if shape.kind == "train":
+        opt = opt_state_for(params, abstract=True)
+        o_shard = opt_state_shardings(rules, p_shard)
+        batch = api.input_specs(shape, abstract=True)
+        b_shard = rules.batch_sharding(batch)
+        step = build_train_step(api, rules, TrainStepConfig())
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(params, opt, batch)
+        host_bytes = offloaded_bytes(opt)
+    elif shape.kind == "prefill":
+        batch = api.input_specs(shape, abstract=True)
+        b_shard = rules.batch_sharding(batch)
+        step = build_prefill_step(api, rules)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        lowered = jitted.lower(params, batch)
+        host_bytes = 0
+    else:  # decode
+        cache, cache_axes = api.abstract_cache(shape.global_batch,
+                                               shape.seq_len)
+        c_shard = rules.shardings_for(cache_axes, cache)
+        batch = api.decode_input_specs(shape, abstract=True)
+        b_shard = rules.batch_sharding(batch)
+        step = build_serve_step(api, rules)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, c_shard, b_shard, None),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(params, cache, batch,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        host_bytes = 0
+
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+
+    # correct the scan-deflation of HloCostAnalysis (body visited once)
+    corr = _body_cost(cfg, shape, rules, api, params, batch, axes)
+    flops = float(cost.get("flops", 0.0)) + corr["flops"]
+    bytes_accessed = float(cost.get("bytes accessed", 0.0)) + corr["bytes"]
+    for kind, slot in corr["collectives"].items():
+        agg = colls.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                      "wire_bytes": 0.0})
+        agg["count"] += slot["count"]
+        agg["bytes"] += slot["bytes"]
+        agg["wire_bytes"] += slot["wire_bytes"]
+    wire = sum(c["wire_bytes"] for c in colls.values())
+
+    device_bytes = {
+        "arguments": int(mem.argument_size_in_bytes),
+        "outputs": int(mem.output_size_in_bytes),
+        "temps": int(mem.temp_size_in_bytes),
+        "aliased": int(mem.alias_size_in_bytes),
+        "generated_code": int(mem.generated_code_size_in_bytes),
+    }
+    # peak live bytes per device: args + temps + outputs - aliased (donated
+    # buffers are reused in place)
+    peak = (device_bytes["arguments"] + device_bytes["temps"]
+            + device_bytes["outputs"] - device_bytes["aliased"])
+    host_per_device = host_bytes // chips
+
+    m_flops = model_flops_for(cfg, shape)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = wire / ICI_BW
+
+    record = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": dict(mesh.shape), "chips": chips,
+        "multi_pod": multi_pod,
+        "compile_seconds": round(compile_s, 2),
+        "per_device": device_bytes,
+        "per_device_peak_bytes": int(peak),
+        "tensile_host_offload_bytes_per_device": int(host_per_device),
+        "per_device_peak_after_offload": int(peak - host_per_device),
+        "fits_hbm_16g": bool(peak - host_per_device < 16e9),
+        "cost": {"flops": flops, "bytes_accessed": bytes_accessed},
+        "collectives": colls,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)], key=lambda kv: kv[1])[0],
+            "model_flops": m_flops,
+            "model_flops_global": m_flops,
+            "useful_flops_ratio": (m_flops / chips) / flops if flops else 0.0,
+        },
+    }
+    return record
+
+
+def artifact_path(arch: str, shape: str, multi_pod: bool) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    pod = "pod2" if multi_pod else "pod1"
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{pod}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=["0", "1", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    pods = {"0": [False], "1": [True], "both": [False, True]}[args.multi_pod]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_names = ([args.shape] if args.shape
+                       else [s.name for s in shapes_for(cfg)])
+        for sk, reason in skipped_shapes_for(cfg):
+            if args.shape in (None, sk.name):
+                print(f"[skip] {arch} × {sk.name}: {reason}")
+        for shape in shape_names:
+            for mp in pods:
+                path = artifact_path(arch, shape, mp)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[cached] {arch} × {shape} × "
+                          f"{'2pod' if mp else '1pod'}")
+                    continue
+                tag = f"{arch} × {shape} × {'2pod(512)' if mp else '1pod(256)'}"
+                try:
+                    rec = run_cell(arch, shape, mp)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(f"[ok] {tag}: compile={rec['compile_seconds']}s "
+                          f"peak={rec['per_device_peak_bytes']/2**30:.2f}GiB "
+                          f"(offload→{rec['per_device_peak_after_offload']/2**30:.2f}) "
+                          f"flops={rec['cost']['flops']:.3e} "
+                          f"dominant={r['dominant']}")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        return 1
+    print("\nall dry-run cells compiled.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

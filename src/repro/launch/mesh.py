@@ -1,0 +1,36 @@
+"""Production mesh definitions (deliverable (e)).
+
+`make_production_mesh` is a FUNCTION, not a module constant: importing this
+module never touches jax device state (required by the dry-run contract).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (smoke tests, elastic re-meshing)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_devices: Optional[int] = None, model: int = 2):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    n = n_devices or len(jax.devices())
+    model = min(model, n)
+    return make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes that shard the batch (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")

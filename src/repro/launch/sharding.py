@@ -1,0 +1,170 @@
+"""Logical-axis → mesh-axis resolution (the distribution rule table).
+
+Model code annotates parameters and activations with *logical* names; this
+module resolves them against a concrete mesh with per-arch fallbacks:
+
+    embed       → FSDP axes (("pod","data")) when fsdp else replicated
+    heads       → "model" iff n_heads  % model_size == 0 else replicated
+    kv_heads    → "model" iff n_kv_heads % model_size == 0 else replicated
+    mlp / vocab / experts / ssm_inner / ssm_heads → "model"
+    vocab_gather→ embedding-table rows: replicated (gather stays local)
+    dp          → batch axes; tp/ep → "model"; kv_seq → "model" (decode
+                  caches are sequence-sharded; flash-decoding combine)
+    layers      → never sharded (scan dim)
+
+Head-replication fallback (whisper 8H, gemma 8H/1KV, minitron 24H,
+qwen 40H on a 16-way model axis) is deliberate: head_dim-sharding would
+psum S² score tiles (DESIGN.md §4).  The cost shows up in the roofline and
+is a hillclimbing lever.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as _layers
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    cfg: Any = None
+    fsdp: bool = True
+    # Megatron-style sequence sharding of inter-block activations over the
+    # model axis (perf lever: 16× smaller saved residuals, one extra
+    # all-gather per layer)
+    act_seq_shard: bool = False
+    # TENSILE across-iteration residency: opt state / master on host
+    offload_opt_state: bool = False
+
+    def __post_init__(self):
+        names = self.mesh.axis_names
+        self.model_axis = "model" if "model" in names else None
+        self.batch_axes = tuple(a for a in names if a != "model")
+        msize = self.mesh.shape.get("model", 1)
+        fsdp_axes = self.batch_axes if self.fsdp else None
+        cfg = self.cfg
+
+        def fits(n: Optional[int]) -> bool:
+            return bool(n) and msize > 0 and n % msize == 0
+
+        self.table: Dict[Optional[str], Any] = {
+            None: None,
+            "embed": fsdp_axes,
+            "embed_tp": "model",
+            "mlp": "model",
+            "vocab": "model",
+            "vocab_gather": fsdp_axes,
+            "experts": "model",
+            "ssm_inner": "model",
+            "ssm_conv": "model",
+            "ssm_proj": None,
+            "heads": "model" if (cfg is None or fits(cfg.n_heads)) else None,
+            "kv_heads": "model" if (cfg is None or fits(cfg.n_kv_heads))
+                        else None,
+            "layers": None,
+            # activation logical axes
+            "dp": self.batch_axes,
+            "tp": "model" if (cfg is None or fits(getattr(cfg, "n_heads", 0))
+                              or True) else None,
+            "tp_kv": "model" if (cfg is None or fits(cfg.n_kv_heads)) else None,
+            "ep": "model",
+            "cap": self.batch_axes,   # MoE capacity dim over data axes
+            "kv_seq": "model",
+            "seq": "model" if self.act_seq_shard else None,
+        }
+        # activation "tp" is used on mlp-hidden / logits (always divisible)
+        self.table["tp"] = "model"
+        if cfg is not None and not fits(cfg.n_heads):
+            # replicated-heads fallback: per-head activations unsharded
+            self.table["act_heads"] = None
+        else:
+            self.table["act_heads"] = "model"
+
+    # ------------------------------------------------------------------
+    def spec(self, logical: Tuple[Optional[str], ...]) -> P:
+        parts = []
+        for name in logical:
+            parts.append(self.table.get(name, None))
+        return P(*parts)
+
+    def sharding(self, logical: Tuple[Optional[str], ...],
+                 memory_kind: Optional[str] = None) -> NamedSharding:
+        s = NamedSharding(self.mesh, self.spec(logical))
+        if memory_kind:
+            s = s.with_memory_kind(memory_kind)
+        return s
+
+    def param_shardings(self, axes_tree):
+        """Map an axes pytree (tuples of logical names) to NamedShardings."""
+        def leaf(a):
+            return self.sharding(a)
+        return jax.tree.map(leaf, axes_tree,
+                            is_leaf=_is_axes_leaf)
+
+    def shardings_for(self, axes_tree, shape_tree):
+        """Like param_shardings but validated against concrete shapes:
+        logical axes whose mesh extent does not divide the dimension fall
+        back to replicated (e.g. batch=1 caches in long_500k)."""
+        def leaf(a, s):
+            parts = []
+            for dim, name in zip(s.shape, a):
+                m = self.table.get(name, None)
+                size = 1
+                for ax in ((m,) if isinstance(m, str) else (m or ())):
+                    size *= self.mesh.shape[ax]
+                parts.append(m if size > 1 and dim % size == 0 else None)
+            return NamedSharding(self.mesh, P(*parts))
+        return jax.tree.map(leaf, axes_tree, shape_tree,
+                            is_leaf=_is_axes_leaf)
+
+    def batch_sharding(self, batch_specs):
+        def leaf(s):
+            ndim = len(s.shape)
+            n = self.n_batch_shards
+            first = self.batch_axes if (s.shape and s.shape[0] % max(n, 1) == 0
+                                        and n > 1) else None
+            return NamedSharding(self.mesh, P(first, *([None] * (ndim - 1))))
+        return jax.tree.map(leaf, batch_specs)
+
+    def constrain(self, x, logical) -> Any:
+        # drop logical names whose mesh axes do not divide the dim
+        parts = []
+        for dim, name in zip(x.shape, logical):
+            m = self.table.get(name, None)
+            size = 1
+            for a in ((m,) if isinstance(m, str) else (m or ())):
+                size *= self.mesh.shape[a]
+            parts.append(m if size and dim % max(size, 1) == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*parts)))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    @property
+    def n_batch_shards(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    """Install activation-constraint rules for model code."""
+    _layers.set_active_rules(rules)
+    try:
+        yield rules
+    finally:
+        _layers.set_active_rules(None)

@@ -1,0 +1,161 @@
+"""Train / serve step builders — where model, optimizer, TENSILE plan and
+mesh come together.
+
+`build_train_step` returns a pure step function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with: remat policy from the TENSILE decisions (recompute events), optional
+host-offloaded optimizer state (across-iteration swap — the paper's
+Fig. 1(c)) on backends with memory spaces, donation of params/opt buffers,
+optional int8 error-feedback gradient compression on the cross-pod
+exchange, and gradient clipping.
+
+`build_serve_step` returns (params, cache, batch, index) -> (logits, cache)
+with the cache donated (decode updates in place).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_integration import backend_supports_memory_kinds
+from repro.models import layers as _layers
+from repro.optim.adam import AdamState, adamw_init, adamw_update
+from repro.optim.compression import ef_compress_grads
+from .sharding import MeshRules
+
+
+@dataclasses.dataclass
+class TrainStepConfig:
+    learning_rate: float = 1e-4
+    weight_decay: float = 0.01
+    grad_clip_norm: Optional[float] = 1.0
+    use_master: bool = False
+    grad_compression: Optional[str] = None      # None | "int8"
+    offload_opt_state: bool = False             # TENSILE across-iteration
+    remat_policy: Optional[Callable] = None     # from TENSILE decisions
+    microbatches: int = 1                       # grad accumulation (peak/n)
+
+
+def build_train_step(api, rules: Optional[MeshRules],
+                     tcfg: Optional[TrainStepConfig] = None):
+    tcfg = tcfg or TrainStepConfig()
+
+    def train_step(params, opt_state, batch):
+        _layers.set_active_rules(rules)
+        try:
+            def loss_of(p, b):
+                return api.loss(p, b, remat_policy=tcfg.remat_policy)
+
+            n_mb = tcfg.microbatches
+            if n_mb > 1:
+                # gradient accumulation: TENSILE's peak-reduction idea as
+                # scheduling-in-time — activation transients shrink by n
+                # at the cost of an fp32 gradient accumulator
+                mb = jax.tree.map(
+                    lambda x: x.reshape((n_mb, x.shape[0] // n_mb)
+                                        + x.shape[1:]), batch)
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(carry, mslice):
+                    acc, ls = carry
+                    l, g = jax.value_and_grad(loss_of)(params, mslice)
+                    acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                    return (acc, ls + l), None
+
+                (acc, loss), _ = jax.lax.scan(
+                    body, (acc0, jnp.zeros(())), mb)
+                grads = jax.tree.map(lambda a: a / n_mb, acc)
+                loss = loss / n_mb
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_of(p, batch))(params)
+            if tcfg.grad_compression == "int8":
+                grads, opt_state = ef_compress_grads(grads, opt_state)
+            new_params, new_opt = adamw_update(
+                params, grads, opt_state,
+                lr=tcfg.learning_rate, weight_decay=tcfg.weight_decay,
+                grad_clip_norm=tcfg.grad_clip_norm)
+            metrics = {"loss": loss,
+                       "grad_norm": _global_norm(grads)}
+            return new_params, new_opt, metrics
+        finally:
+            _layers.set_active_rules(None)
+
+    return train_step
+
+
+def build_serve_step(api, rules: Optional[MeshRules]):
+    def serve_step(params, cache, batch, index):
+        _layers.set_active_rules(rules)
+        try:
+            logits, new_cache = api.decode(params, batch, cache, index)
+            return logits, new_cache
+        finally:
+            _layers.set_active_rules(None)
+
+    return serve_step
+
+
+def build_prefill_step(api, rules: Optional[MeshRules]):
+    def prefill_step(params, batch):
+        _layers.set_active_rules(rules)
+        try:
+            logits, aux = api.forward(params, batch)
+            return logits
+        finally:
+            _layers.set_active_rules(None)
+
+    return prefill_step
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ----------------------------------------------------------------------
+# Optimizer-state trees + shardings (incl. TENSILE host offload)
+# ----------------------------------------------------------------------
+def opt_state_for(params, *, use_master: bool = False,
+                  abstract: bool = False) -> AdamState:
+    if abstract:
+        return jax.eval_shape(
+            functools.partial(adamw_init, use_master=use_master), params)
+    return adamw_init(params, use_master=use_master)
+
+
+def opt_state_shardings(rules: MeshRules, param_shardings,
+                        *, use_master: bool = False,
+                        offload: bool = False):
+    """Moments mirror the parameter shardings; the TENSILE across-iteration
+    decision places them in pinned_host when the backend supports it
+    (otherwise the accounting layer tracks the would-be host bytes)."""
+    host_ok = offload and backend_supports_memory_kinds()
+
+    def to_host(s):
+        return s.with_memory_kind("pinned_host") if host_ok else s
+
+    mu = jax.tree.map(to_host, param_shardings)
+    nu = jax.tree.map(to_host, param_shardings)
+    master = jax.tree.map(to_host, param_shardings) if use_master else ()
+    return AdamState(step=rules.replicated(), mu=mu, nu=nu, master=master)
+
+
+def offloaded_bytes(opt_state) -> int:
+    """Bytes the TENSILE plan parks on host between steps (moments +
+    master): reported by the dry-run accounting when the backend cannot
+    express memory spaces (DESIGN.md §2)."""
+    total = 0
+    for leaf in jax.tree.leaves((opt_state.mu, opt_state.nu,
+                                 opt_state.master)):
+        shape = getattr(leaf, "shape", ())
+        import numpy as np
+        total += int(np.prod(shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total

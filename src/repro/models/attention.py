@@ -1,0 +1,243 @@
+"""Attention: GQA/MQA + RoPE, with three execution paths.
+
+* `attend_full`    — plain einsum attention (small seqs, smoke tests).
+* `attend_chunked` — memory-efficient online-softmax over KV chunks in pure
+  jnp (lax.scan): never materializes the (S×S) score tensor.  This is the
+  TENSILE insight applied structurally on TPU — the tensor the paper would
+  swap is simply never allocated (DESIGN.md §2).
+* Pallas flash kernel (kernels/flash_attention.py) — TPU target, selected
+  with cfg.use_flash_kernel; validated in interpret mode by tests.
+
+Decode: one-token query against a (possibly sequence-sharded) KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ParamBuilder, apply_rope, constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(b: ParamBuilder, d_model: int, n_heads: int,
+                   n_kv_heads: int, head_dim: int, qkv_bias: bool):
+    b.dense("wq", (d_model, n_heads, head_dim), ("embed", "heads", None))
+    b.dense("wk", (d_model, n_kv_heads, head_dim), ("embed", "kv_heads", None))
+    b.dense("wv", (d_model, n_kv_heads, head_dim), ("embed", "kv_heads", None))
+    b.dense("wo", (n_heads, head_dim, d_model), ("heads", None, "embed"))
+    if qkv_bias:
+        b.zeros("bq", (n_heads, head_dim), ("heads", None))
+        b.zeros("bk", (n_kv_heads, head_dim), ("kv_heads", None))
+        b.zeros("bv", (n_kv_heads, head_dim), ("kv_heads", None))
+
+
+def _project_qkv(p, x, positions, theta):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _group_heads(q, n_kv_heads):
+    """(B,S,H,D) -> (B,S,KV,G,D) splitting query heads into KV groups."""
+    b, s, h, d = q.shape
+    g = h // n_kv_heads
+    return q.reshape(b, s, n_kv_heads, g, d)
+
+
+def attend_full(q, k, v, *, causal: bool, q_offset: int = 0,
+                sliding_window: int = 0):
+    """q: (B,Sq,H,D); k,v: (B,Skv,KV,D).  Returns (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    qg = _group_heads(q, kvh)                      # B,Sq,KV,G,D
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    skv = k.shape[1]
+    if causal or sliding_window:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if sliding_window:
+            mask &= kpos > qpos - sliding_window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def _repeat_kv(k, h):
+    """Broadcast KV heads to the full query-head count.  The (KV,G) grouped
+    form defeats tensor-parallel head sharding whenever KV < tp (the 8×8
+    reshape of kimi's 64 heads cannot map onto a 16-way axis and GSPMD
+    re-gathers); the repeated form shards (B,S,H,D) cleanly and costs only
+    the small repeated K/V reads — it is what flash kernels do anyway."""
+    kvh = k.shape[2]
+    if kvh == h:
+        return k
+    return jnp.repeat(k, h // kvh, axis=2)
+
+
+def attend_chunked(q, k, v, *, causal: bool, chunk: int = 1024,
+                   sliding_window: int = 0):
+    """Online-softmax attention, scanning KV chunks per Q chunk.
+
+    Peak score tile is (B,H,Cq,Ckv) — independent of total seq length.
+    Dots run on the native (bf16) operands with fp32 accumulation
+    (`preferred_element_type`): no fp32 upcast of Q/K/V tensors.
+    """
+    b, sq, h, d = q.shape
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    k = constrain(k, ("dp", None, "tp", None))
+    v = constrain(v, ("dp", None, "tp", None))
+    cq = min(chunk, sq)
+    ckv = min(chunk, k.shape[1])
+    sq_pad = -sq % cq
+    skv = k.shape[1]
+    skv_pad = -skv % ckv
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+    if skv_pad:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+    nq = (sq + sq_pad) // cq
+    nk = (skv + skv_pad) // ckv
+    qg = q.reshape(b, nq, cq, h, d)
+    kc = k.reshape(b, nk, ckv, h, d)
+    vc = v.reshape(b, nk, ckv, h, d)
+    scale = np.float32(1.0 / np.sqrt(d))
+
+    kpos_all = jnp.arange(nk * ckv).reshape(nk, ckv)
+    valid_k = (kpos_all < skv)
+
+    def q_block(qi, qblk):
+        # qblk: (B,Cq,H,D)
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kpos, kvalid = inp
+            s = jnp.einsum("bqhd,bshd->bhqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kvalid[None, :]
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if sliding_window:
+                mask = mask & (kpos[None, :] > qpos[:, None] - sliding_window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        # checkpoint each kv step: the (Cq×Ckv) probability tile is
+        # recomputed in the backward instead of being saved per step —
+        # the flash-backward memory behaviour, in pure jnp
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False), (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpos_all, valid_k))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B,H,Cq,D)
+
+    outs = jax.lax.map(lambda i: q_block(i, qg[:, i]), jnp.arange(nq))
+    # (nq,B,H,Cq,D) -> (B, nq*Cq, H, D)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 3, 2, 4)
+    out = out.reshape(b, nq * cq, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention_block(p, x, positions, *, cfg, causal: bool = True,
+                    use_chunked: Optional[bool] = None):
+    """Self-attention over x: (B,S,D_model)."""
+    q, k, v = _project_qkv(p, x, positions, cfg.rope_theta)
+    q = constrain(q, ("dp", None, "tp", None))
+    k = constrain(k, ("dp", None, "tp_kv", None))
+    v = constrain(v, ("dp", None, "tp_kv", None))
+    if use_chunked is None:
+        use_chunked = x.shape[1] > 2 * cfg.attn_chunk
+    if cfg.use_flash_kernel and causal:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True,
+                              sliding_window=cfg.sliding_window)
+    elif use_chunked:
+        out = attend_chunked(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                             sliding_window=cfg.sliding_window)
+    else:
+        out = attend_full(q, k, v, causal=causal,
+                          sliding_window=cfg.sliding_window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attention_block(p, x, ctx, *, cfg):
+    """Decoder cross-attention: queries from x, keys/values from ctx."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", ctx, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", ctx, p["wv"])
+    if max(q.shape[1], k.shape[1]) > 2 * cfg.attn_chunk:
+        out = attend_chunked(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    else:
+        out = attend_full(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ----------------------------------------------------------------------
+# Decode path (KV cache)
+# ----------------------------------------------------------------------
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype) -> Dict[str, Any]:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+    }
+
+
+def kv_cache_axes() -> Dict[str, Any]:
+    # sequence-sharded cache: attention decode reduces over the sharded seq
+    # axis (flash-decoding style; XLA inserts the combine collectives)
+    return {"k": ("dp", "kv_seq", None, None), "v": ("dp", "kv_seq", None, None)}
+
+
+def decode_attention_block(p, x, cache, index, *, cfg):
+    """x: (B,1,D); cache k/v: (B,max_len,KV,D); index: current position."""
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, positions, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(
+        cache["k"].dtype), index, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(
+        cache["v"].dtype), index, axis=1)
+    b, s, kvh, d = k.shape
+    qg = _group_heads(q, kvh)                                  # B,1,KV,G,D
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    kpos = jnp.arange(s)[None, None, None, None, :]
+    mask = kpos <= index
+    if cfg.sliding_window:
+        mask = mask & (kpos > index - cfg.sliding_window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, 1, qg.shape[2] * qg.shape[3], d).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}

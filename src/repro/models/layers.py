@@ -1,0 +1,245 @@
+"""Core layers (pure JAX, no flax): norms, GLU MLPs, embeddings, init.
+
+Every parameter initializer returns ``(param, logical_axes)`` so the
+distribution layer can map logical axis names ("embed", "heads", "mlp",
+"vocab", "experts", …) onto mesh axes without the model knowing about
+meshes.  Activation sharding constraints go through `constrain`, a no-op
+until `launch.sharding` installs rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------------
+# Activation-sharding context (installed by launch.sharding.use_rules()).
+# ----------------------------------------------------------------------
+_ACTIVE_RULES = None
+
+
+def set_active_rules(rules) -> None:
+    global _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+
+
+def constrain(x, logical: Tuple[Optional[str], ...]):
+    """Constrain an activation to the mesh mapping of `logical` axes."""
+    if _ACTIVE_RULES is None:
+        return x
+    return _ACTIVE_RULES.constrain(x, logical)
+
+
+# ----------------------------------------------------------------------
+# Param initialization.  A "param tree" is a dict pytree; alongside it we
+# build an identically-shaped "axes tree" of logical-axis tuples.
+# ----------------------------------------------------------------------
+def dense_init(key, shape: Sequence[int], axes: Tuple[Optional[str], ...],
+               dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    p = (jax.random.normal(key, tuple(shape), jnp.float32) * scale).astype(dtype)
+    return p, tuple(axes)
+
+
+def zeros_init(shape: Sequence[int], axes: Tuple[Optional[str], ...], dtype):
+    return jnp.zeros(tuple(shape), dtype), tuple(axes)
+
+
+def ones_init(shape: Sequence[int], axes: Tuple[Optional[str], ...], dtype):
+    return jnp.ones(tuple(shape), dtype), tuple(axes)
+
+
+class ParamBuilder:
+    """Collects (params, axes) trees with a split-as-you-go PRNG key.
+
+    `abstract=True` builds ShapeDtypeStructs instead of arrays — used by the
+    multi-pod dry-run, which must never allocate full-size parameters.
+    """
+
+    def __init__(self, key, dtype, abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def _next(self):
+        if self.abstract:
+            return None
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _emit(self, name, shape, axes, maker):
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        else:
+            self.params[name] = maker()
+        self.axes[name] = tuple(axes)
+
+    def dense(self, name: str, shape, axes, scale=None):
+        self._emit(name, shape, axes,
+                   lambda: dense_init(self._next(), shape, axes, self.dtype,
+                                      scale)[0])
+
+    def zeros(self, name: str, shape, axes):
+        self._emit(name, shape, axes,
+                   lambda: jnp.zeros(tuple(shape), self.dtype))
+
+    def ones(self, name: str, shape, axes):
+        self._emit(name, shape, axes,
+                   lambda: jnp.ones(tuple(shape), self.dtype))
+
+    def sub(self, name: str, builder: "ParamBuilder"):
+        self.params[name] = builder.params
+        self.axes[name] = builder.axes
+
+    def child(self) -> "ParamBuilder":
+        return ParamBuilder(self._next(), self.dtype, self.abstract)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# MLP (GLU family)
+# ----------------------------------------------------------------------
+def init_mlp(b: ParamBuilder, d_model: int, d_ff: int, act: str):
+    gated = act in ("swiglu", "geglu")
+    b.dense("wi", (d_model, d_ff), ("embed", "mlp"))
+    if gated:
+        b.dense("wg", (d_model, d_ff), ("embed", "mlp"))
+    b.dense("wo", (d_ff, d_model), ("mlp", "embed"))
+
+
+def mlp_apply(p, x, act: str):
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif act == "relu2":  # squared ReLU (Primer / nemotron family)
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, ("dp", None, "tp"))
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+def init_embedding(b: ParamBuilder, vocab: int, d_model: int, tie: bool):
+    # table: rows FSDP-sharded, d over the model axis (gather stays local
+    # on the model axis; DESIGN.md §4)
+    b.dense("tok", (vocab, d_model), ("vocab_gather", "embed_tp"), scale=1.0)
+    if not tie:
+        b.dense("head", (d_model, vocab), ("embed", "vocab"))
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p, x, tie: bool):
+    if tie:
+        # Reshard the (small) table — vocab to the model axis, d replicated —
+        # instead of letting GSPMD reshard the (huge) logits: the tied table
+        # is FSDP-sharded (vocab over data) for the gather, which conflicts
+        # with batch-over-data logits. ~1 GB table move vs ~10s of GB of
+        # logits movement (EXPERIMENTS.md §Perf, gemma hillclimb G1).
+        w = constrain(p["tok"], ("vocab", None))
+        return jnp.einsum("...d,vd->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x, p["head"])
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Loss
+# ----------------------------------------------------------------------
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Token-mean CE; fp32 logsumexp; labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def fused_unembed_cross_entropy(embed_params, x, labels, tie: bool,
+                                chunk: int = 2048):
+    """LM-head + CE fused over sequence chunks: the (tokens × vocab) fp32
+    logits tensor never materializes — each chunk's logits are produced,
+    reduced to (lse, gold) and rematerialized in the backward
+    (beyond-paper §Perf lever; the compiled analogue of TENSILE swapping
+    the logits, except the tensor simply never exists)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = -s % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)       # (nc,B,C,d)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        tot, cnt = carry
+        xb, lb = inp
+        logits = unembed(embed_params, xb, tie).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((lse - gold) * mask),
+                cnt + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(chunk_loss, prevent_cse=False),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

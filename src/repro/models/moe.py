@@ -1,0 +1,268 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two implementations:
+* `scatter` (default, scales to kimi-k2's 384 experts) — GShard-style
+  capacity dispatch realized with a sort-free rank computation and a
+  scatter into an `(E, C, d)` buffer that shards cleanly over the expert
+  axis (EP on the "model" mesh axis); expert GEMMs are batched einsums so
+  GSPMD partitions them without all-gathering tokens.  FLOPs are
+  `E·C·d·f ≈ capacity_factor × active FLOPs` — no dense-dispatch blowup.
+* `dense` — every expert on every token, einsum-combined; O(E) FLOPs, used
+  only by reduced smoke configs and as the numerical reference in tests.
+
+Router: softmax top-k with normalized weights + the standard load-balance
+auxiliary loss (Switch/GShard).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamBuilder, constrain
+
+
+def init_moe(b: ParamBuilder, d_model: int, n_experts: int, d_ff: int,
+             act: str, n_shared: int = 0):
+    gated = act in ("swiglu", "geglu")
+    b.dense("router", (d_model, n_experts), ("embed", None))
+    b.dense("wi", (n_experts, d_model, d_ff), ("experts", "embed", None))
+    if gated:
+        b.dense("wg", (n_experts, d_model, d_ff), ("experts", "embed", None))
+    b.dense("wo", (n_experts, d_ff, d_model), ("experts", None, "embed"))
+    if n_shared:
+        b.dense("shared_wi", (d_model, n_shared * d_ff), ("embed", "mlp"))
+        if gated:
+            b.dense("shared_wg", (d_model, n_shared * d_ff), ("embed", "mlp"))
+        b.dense("shared_wo", (n_shared * d_ff, d_model), ("mlp", "embed"))
+
+
+def _expert_ffn(p, h_in, act: str):
+    """h_in: (E, C, d) -> (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", h_in, p["wi"])
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", h_in, p["wg"])
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":
+        g = jnp.einsum("ecd,edf->ecf", h_in, p["wg"])
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def _router(p, x2d, top_k: int):
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)          # (T,k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch eq. 4): E * sum_e f_e * P_e
+    e = logits.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = e * jnp.sum(me * ce)
+    return weights, experts, aux
+
+
+def moe_apply_scatter(p, x, *, top_k: int, n_experts: int,
+                      capacity_factor: float, act: str) -> Tuple[Any, Any]:
+    """x: (B,S,d) -> (B,S,d), aux_loss."""
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    weights, experts, aux = _router(p, x2d, top_k)
+
+    srows = t * top_k
+    expert_flat = experts.reshape(srows)                     # token-major
+    w_flat = weights.reshape(srows).astype(x.dtype)
+    token_idx = jnp.repeat(jnp.arange(t), top_k)
+
+    capacity = int(max(1, round(t * top_k / n_experts * capacity_factor)))
+    capacity = -(-capacity // 128) * 128  # align slots for sharding/MXU
+    # rank of each row within its expert via a global sort (O(S log S)
+    # memory O(S) — a (S,E) one-hot cumsum would be terabytes at kimi's
+    # 384 experts × 8M rows)
+    order = jnp.argsort(expert_flat)
+    sorted_e = expert_flat[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[expert_flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(srows, dtype=jnp.int32) - starts[sorted_e]
+    rank = jnp.zeros((srows,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < capacity
+    slot = jnp.where(keep, rank, capacity)                   # C = drop row
+
+    # dispatch: (E, C+1, d) buffer — experts over the model axis (EP),
+    # capacity over the data axes, so expert GEMM work stays balanced
+    # across the whole mesh instead of idling the data axis
+    rows = jnp.where(keep[:, None], x2d[token_idx], 0).astype(x.dtype)
+    buf = jnp.zeros((n_experts, capacity + 1, d), x.dtype)
+    buf = buf.at[expert_flat, slot].add(rows)
+    buf = constrain(buf, ("ep", "cap", None))
+
+    out_e = _expert_ffn(p, buf[:, :capacity], act)
+    out_e = jnp.pad(out_e, ((0, 0), (0, 1), (0, 0)))
+    out_e = constrain(out_e, ("ep", "cap", None))
+
+    # combine
+    gathered = out_e[expert_flat, slot] * (w_flat * keep)[:, None]
+    y = jnp.sum(gathered.reshape(t, top_k, d), axis=1)
+
+    if "shared_wi" in p:
+        y = y + _shared_ffn(p, x2d, act)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_dense(p, x, *, top_k: int, n_experts: int, act: str):
+    """Reference path: run every expert on every token (tiny configs only)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    weights, experts, aux = _router(p, x2d, top_k)
+    h = jnp.einsum("td,edf->tef", x2d, p["wi"])
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("td,edf->tef", x2d, p["wg"])
+        gate = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = gate * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    out_all = jnp.einsum("tef,efd->ted", h, p["wo"])         # (T,E,d)
+    mask = jnp.zeros((x2d.shape[0], n_experts), x.dtype)
+    tok = jnp.arange(x2d.shape[0])[:, None]
+    mask = mask.at[tok, experts].add(weights.astype(x.dtype))
+    y = jnp.einsum("ted,te->td", out_all, mask)
+    if "shared_wi" in p:
+        y = y + _shared_ffn(p, x2d, act)
+    return y.reshape(b, s, d), aux
+
+
+def _shared_ffn(p, x2d, act: str):
+    h = jnp.einsum("td,df->tf", x2d, p["shared_wi"])
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("td,df->tf", x2d, p["shared_wg"])
+        gate = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = gate * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("tf,fd->td", h, p["shared_wo"])
+
+
+def moe_apply_a2a(p, x, *, top_k: int, n_experts: int,
+                  capacity_factor: float, act: str) -> Tuple[Any, Any]:
+    """Expert parallelism with explicit all-to-all dispatch (shard_map).
+
+    GSPMD lowers the global scatter/gather dispatch of `moe_apply_scatter`
+    into partial-sum ALL-REDUCES of the full (rows × d) dispatch tensor —
+    ~30 GB/device/layer on kimi-k2 (EXPERIMENTS.md §Perf K-baseline).  The
+    production pattern instead keeps dispatch local per shard and moves
+    only the (E, C_local, d) buffer through one all-to-all each way:
+
+        local top-k/rank/scatter → all_to_all(E→E/tp, C→tp·C) →
+        local expert GEMMs (weights FSDP-gathered) → all_to_all back →
+        local combine.
+
+    Requires an active mesh (launch.sharding rules); falls back to the
+    scatter path on a single device.
+    """
+    from repro.models import layers as _L
+    rules = _L._ACTIVE_RULES
+    mesh = getattr(rules, "mesh", None)
+    if mesh is None or "model" not in mesh.axis_names \
+            or mesh.shape["model"] == 1 or n_experts % mesh.shape["model"]:
+        return moe_apply_scatter(p, x, top_k=top_k, n_experts=n_experts,
+                                 capacity_factor=capacity_factor, act=act)
+    from jax.sharding import PartitionSpec as P
+    tp = mesh.shape["model"]
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+
+    b, s, d = x.shape
+    # static local token count per (dp, tp) shard (seq over model)
+    b_loc = b // n_dp if b % n_dp == 0 else b
+    s_loc = s // tp if s % tp == 0 else s
+    t_loc = b_loc * s_loc
+    cap = int(max(1, round(t_loc * top_k / n_experts * capacity_factor)))
+    cap = -(-cap // 8) * 8
+    gated = act in ("swiglu", "geglu")
+
+    x_spec = P(dp_axes if b % n_dp == 0 else None,
+               "model" if s % tp == 0 else None, None)
+
+    def block(x_l, router, wi, wg, wo):
+        tl = x_l.shape[0] * x_l.shape[1]
+        x2d = x_l.reshape(tl, d)
+        weights, experts, aux = _router({"router": router}, x2d, top_k)
+        aux = jax.lax.pmean(aux, "model")
+        for ax in dp_axes:
+            aux = jax.lax.pmean(aux, ax)
+        srows = tl * top_k
+        e_flat = experts.reshape(srows)
+        w_flat = weights.reshape(srows).astype(x_l.dtype)
+        token_idx = jnp.repeat(jnp.arange(tl), top_k)
+        order = jnp.argsort(e_flat)
+        counts = jnp.zeros((n_experts,), jnp.int32).at[e_flat].add(1)
+        starts = jnp.cumsum(counts) - counts
+        rank_sorted = jnp.arange(srows, dtype=jnp.int32) \
+            - starts[e_flat[order]]
+        rank = jnp.zeros((srows,), jnp.int32).at[order].set(rank_sorted)
+        keep = rank < cap
+        slot = jnp.where(keep, rank, cap)
+        rows = jnp.where(keep[:, None], x2d[token_idx], 0).astype(x_l.dtype)
+        buf = jnp.zeros((n_experts, cap + 1, d), x_l.dtype)
+        buf = buf.at[e_flat, slot].add(rows)[:, :cap]
+
+        # dispatch: experts to their shard, capacities concatenated
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                 tiled=True)          # (E/tp, tp*cap, d)
+        # FSDP weight gather (d is sharded over the data axes)
+        for ax in dp_axes:
+            wi = jax.lax.all_gather(wi, ax, axis=1, tiled=True)
+            if wg is not None:
+                wg = jax.lax.all_gather(wg, ax, axis=1, tiled=True)
+            wo = jax.lax.all_gather(wo, ax, axis=2, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", buf, wi)
+        if gated:
+            g = jnp.einsum("ecd,edf->ecf", buf, wg)
+            h = (jax.nn.silu(g) if act == "swiglu"
+                 else jax.nn.gelu(g, approximate=True)) * h
+        else:
+            h = jax.nn.gelu(h, approximate=True)
+        out = jnp.einsum("ecf,efd->ecd", h, wo)       # (E/tp, tp*cap, d)
+        out = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0,
+                                 tiled=True)          # (E, cap, d)
+        out = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))
+        gathered = out[e_flat, slot] * (w_flat * keep)[:, None]
+        y = jnp.sum(gathered.reshape(tl, top_k, d), axis=1)
+        return y.reshape(x_l.shape), aux
+
+    wg_arg = p.get("wg")
+    # weights are FSDP-stored: declare their true layout so shard_map does
+    # not gather them up front (we gather inside, per layer)
+    wi_spec = P("model", dp_axes, None)
+    wo_spec = P("model", None, dp_axes)
+    y, aux = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(x_spec, P(None, None), wi_spec,
+                  (wi_spec if gated else P()), wo_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)(
+        x, p["router"], p["wi"],
+        (wg_arg if gated else jnp.zeros((), x.dtype)), p["wo"])
+    if "shared_wi" in p:
+        y = y + _shared_ffn(p, x.reshape(b * s, d), act).reshape(x.shape)
+    return y, aux
+
+
+def moe_apply(p, x, cfg) -> Tuple[Any, Any]:
+    kwargs = dict(top_k=cfg.top_k, n_experts=cfg.n_experts, act=cfg.mlp_act)
+    if cfg.moe_impl == "dense":
+        return moe_apply_dense(p, x, **kwargs)
+    if cfg.moe_impl == "a2a":
+        return moe_apply_a2a(p, x, capacity_factor=cfg.capacity_factor,
+                             **kwargs)
+    return moe_apply_scatter(p, x, capacity_factor=cfg.capacity_factor,
+                             **kwargs)

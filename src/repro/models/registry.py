@@ -1,0 +1,162 @@
+"""Uniform model API over every architecture family.
+
+    api = get_model(cfg)
+    params, axes = api.init(key)            # or api.abstract_params()
+    loss = api.loss(params, batch)
+    logits, aux = api.forward(params, batch)
+    cache, cache_axes = api.init_cache(batch, max_len)
+    logits, cache = api.decode(params, batch, cache, index)
+    batch = api.input_specs(shape_spec, abstract=True)
+
+`input_specs` follows the assignment: ``decode_*``/``long_*`` build a
+one-new-token batch against a seq_len-deep cache; ``[audio]``/``[vlm]``
+stub frontends supply precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from . import transformer, whisper
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _concrete(batch_specs, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in batch_specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, 32, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    abstract_params: Callable
+    loss: Callable
+    forward: Callable
+    init_cache: Callable
+    abstract_cache: Callable
+    decode: Callable
+    input_specs: Callable
+    decode_input_specs: Callable
+
+
+# ----------------------------------------------------------------------
+def _lm_api(cfg: ModelConfig) -> ModelAPI:
+    def input_specs(shape: ShapeSpec, abstract: bool = True,
+                    per_device_batch: Optional[int] = None):
+        b = per_device_batch or shape.global_batch
+        s = shape.seq_len
+        dt = cfg.dtype
+        if cfg.frontend == "vision_stub":
+            n_txt = s - cfg.n_patches
+            specs = {"tokens": _spec((b, n_txt), jnp.int32),
+                     "labels": _spec((b, n_txt), jnp.int32),
+                     "extra_embeds": _spec((b, cfg.n_patches, cfg.d_model), dt)}
+        else:
+            specs = {"tokens": _spec((b, s), jnp.int32),
+                     "labels": _spec((b, s), jnp.int32)}
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs if abstract else _concrete(specs)
+
+    def decode_input_specs(shape: ShapeSpec, abstract: bool = True,
+                           per_device_batch: Optional[int] = None):
+        b = per_device_batch or shape.global_batch
+        specs = {"tokens": _spec((b, 1), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            specs["extra_embeds"] = _spec((b, 0, cfg.d_model), cfg.dtype)
+        return specs if abstract else _concrete(specs)
+
+    def loss(params, batch, remat_policy=None):
+        return transformer.loss_fn(params, batch, cfg,
+                                   remat_policy=remat_policy)
+
+    def fwd(params, batch):
+        return transformer.forward(params, batch["tokens"], cfg,
+                                   extra_embeds=batch.get("extra_embeds"))
+
+    def init_cache(batch: int, max_len: int):
+        return transformer.init_cache(cfg, batch, max_len)
+
+    def abstract_cache(batch: int, max_len: int):
+        cache = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, batch, max_len)[0])
+        _, axes = transformer.init_cache(cfg, 1, 1)
+        return cache, axes
+
+    def decode(params, batch, cache, index):
+        return transformer.decode_step(params, cfg, batch["tokens"], cache,
+                                       index)
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_model(cfg, key),
+        abstract_params=lambda: transformer.abstract_model(cfg),
+        loss=loss, forward=fwd,
+        init_cache=init_cache, abstract_cache=abstract_cache,
+        decode=decode, input_specs=input_specs,
+        decode_input_specs=decode_input_specs)
+
+
+# ----------------------------------------------------------------------
+def _whisper_api(cfg: ModelConfig) -> ModelAPI:
+    def input_specs(shape: ShapeSpec, abstract: bool = True,
+                    per_device_batch: Optional[int] = None):
+        b = per_device_batch or shape.global_batch
+        s_enc = shape.seq_len
+        s_dec = max(shape.seq_len // cfg.enc_seq_ratio, 8)
+        specs = {"audio_feats": _spec((b, s_enc, cfg.d_model), cfg.dtype),
+                 "tokens": _spec((b, s_dec), jnp.int32),
+                 "labels": _spec((b, s_dec), jnp.int32)}
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs if abstract else _concrete(specs)
+
+    def decode_input_specs(shape: ShapeSpec, abstract: bool = True,
+                           per_device_batch: Optional[int] = None):
+        b = per_device_batch or shape.global_batch
+        s_enc = max(shape.seq_len // cfg.enc_seq_ratio, 8)
+        specs = {"tokens": _spec((b, 1), jnp.int32),
+                 "enc_out": _spec((b, s_enc, cfg.d_model), cfg.dtype)}
+        return specs if abstract else _concrete(specs)
+
+    def loss(params, batch, remat_policy=None):
+        return whisper.loss_fn(params, batch, cfg, remat_policy=remat_policy)
+
+    def decode(params, batch, cache, index):
+        return whisper.decode_step(params, cfg, batch["tokens"], cache,
+                                   index, batch["enc_out"])
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: whisper.init_whisper(cfg, key),
+        abstract_params=lambda: whisper.abstract_whisper(cfg),
+        loss=loss,
+        forward=lambda params, batch: whisper.forward(params, batch, cfg),
+        init_cache=lambda b, m: whisper.init_cache(cfg, b, m),
+        abstract_cache=lambda b, m: (
+            jax.eval_shape(lambda: whisper.init_cache(cfg, b, m)[0]),
+            whisper.init_cache(cfg, 1, 1)[1]),
+        decode=decode, input_specs=input_specs,
+        decode_input_specs=decode_input_specs)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.enc_dec:
+        return _whisper_api(cfg)
+    return _lm_api(cfg)

@@ -1,0 +1,243 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward: within a chunk the recurrence is computed as a masked
+matmul (the "dual" quadratic form, MXU-friendly); across chunks a small
+sequential scan carries the (H, P, N) state.  Decode is the O(1) recurrent
+update — this is why `long_500k` runs for SSM archs.
+
+Projections are **separate GEMMs per component** (z, x, B, C, dt) rather
+than one fused in_proj: the fused output splits at boundaries that are not
+multiples of the tensor-parallel shard size, which would force GSPMD to
+all-gather a (tokens × 33k) tensor per layer (jamba).  Separate GEMMs give
+each component its natural sharding (dinner → "model", B/C replicated,
+heads → "model") with zero resharding.  Fusing them back is a recorded
+single-device optimization, not a distribution win (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ParamBuilder, constrain, rmsnorm
+
+
+def mamba_dims(cfg) -> Dict[str, int]:
+    dinner = cfg.ssm_expand * cfg.d_model
+    nheads = dinner // cfg.ssm_head_dim
+    return dict(dinner=dinner, nheads=nheads, headdim=cfg.ssm_head_dim,
+                nstate=cfg.ssm_state, conv_w=cfg.ssm_conv_width)
+
+
+def init_mamba2(b: ParamBuilder, cfg):
+    dm = mamba_dims(cfg)
+    d, dinner, h, n, w = (cfg.d_model, dm["dinner"], dm["nheads"],
+                          dm["nstate"], dm["conv_w"])
+    b.dense("wz", (d, dinner), ("embed", "ssm_inner"))
+    b.dense("wx", (d, dinner), ("embed", "ssm_inner"))
+    b.dense("wb", (d, n), ("embed", None))
+    b.dense("wc", (d, n), ("embed", None))
+    b.dense("wdt", (d, h), ("embed", "ssm_heads"))
+    b.dense("conv_wx", (w, dinner), (None, "ssm_inner"), scale=0.5)
+    b.zeros("conv_bx", (dinner,), ("ssm_inner",))
+    b.dense("conv_wb", (w, n), (None, None), scale=0.5)
+    b.zeros("conv_bb", (n,), (None,))
+    b.dense("conv_wc", (w, n), (None, None), scale=0.5)
+    b.zeros("conv_bc", (n,), (None,))
+    b.zeros("a_log", (h,), ("ssm_heads",))
+    b.ones("d_skip", (h,), ("ssm_heads",))
+    b.zeros("dt_bias", (h,), ("ssm_heads",))
+    b.ones("norm_scale", (dinner,), ("ssm_inner",))
+    b.dense("out_proj", (dinner, d), ("ssm_inner", "embed"))
+
+
+def _causal_conv(u, w, b, state=None):
+    """u: (B,S,C); w: (W,C) depthwise.  Returns (silu(out), new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(width))
+    new_state = full[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out + b), new_state
+
+
+def _project(p, x, cfg, conv_state=None):
+    """x: (B,S,d) -> z, xh, bb, cc, dt (+ new conv states)."""
+    dm = mamba_dims(cfg)
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"])
+    xc = jnp.einsum("bsd,di->bsi", x, p["wx"])
+    bb = jnp.einsum("bsd,dn->bsn", x, p["wb"])
+    cc = jnp.einsum("bsd,dn->bsn", x, p["wc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    cs = conv_state or {}
+    xc, s_x = _causal_conv(xc, p["conv_wx"], p["conv_bx"], cs.get("x"))
+    bb, s_b = _causal_conv(bb, p["conv_wb"], p["conv_bb"], cs.get("b"))
+    cc, s_c = _causal_conv(cc, p["conv_wc"], p["conv_bc"], cs.get("c"))
+    new_cs = {"x": s_x, "b": s_b, "c": s_c}
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, xc, bb, cc, dt, new_cs
+
+
+def _segsum(dA):
+    """log-space cumulative decay: L[i,j] = sum_{j<k<=i} dA_k (i>=j)."""
+    s = jnp.cumsum(dA, axis=-1)
+    diff = s[..., :, None] - s[..., None, :]
+    q = dA.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, bb, cc, chunk: int, initial_state=None,
+                use_kernel: bool = False):
+    """SSD scan.
+
+    xh: (B,S,H,P) value heads; dt: (B,S,H) (post-softplus);
+    a: (H,) negative decay rates; bb/cc: (B,S,N).
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    b, s, h, p = xh.shape
+    n = bb.shape[-1]
+    q = min(chunk, s)
+    pad = -s % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bb.reshape(b, nc, q, n)
+    ccx = cc.reshape(b, nc, q, n)
+
+    dA = dtc * a[None, None, None, :]                      # (B,nc,Q,H) <= 0
+    dA_cum = jnp.cumsum(dA, axis=2)
+    dA_total = dA_cum[:, :, -1]                            # (B,nc,H)
+
+    if use_kernel:
+        from repro.kernels.ops import ssd_intra_chunk
+        y_diag, states = ssd_intra_chunk(xc, dtc, dA, bc, ccx)
+    else:
+        # blocked over chunks: only one chunk's (B,H,Q,Q) decay/score tile
+        # is live at a time — the jnp mirror of the Pallas kernel's VMEM
+        # tiling (materializing all tiles is O(B·nc·H·Q²) = TBs at 4k+).
+        # Heads stay a vectorized (tensor-parallel-sharded) dimension.
+        def tile(args):
+            da_t, dt_t, x_t, b_t, c_t = args
+            # da_t/dt_t: (B,Q,H); x_t: (B,Q,H,P); b_t/c_t: (B,Q,N)
+            cum = jnp.cumsum(da_t, axis=1)                 # (B,Q,H)
+            diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,K,H)
+            mask = jnp.tril(jnp.ones((q, q), bool))
+            lm = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+            sc = jnp.einsum("bqn,bkn->bqk", c_t, b_t)      # (B,Q,K)
+            y_t = jnp.einsum("bqk,bqkh,bkh,bkhp->bqhp",
+                             sc, lm, dt_t, x_t)
+            dec_end = jnp.exp(cum[:, -1:, :] - cum) * dt_t  # (B,Q,H)
+            st_t = jnp.einsum("bqh,bqn,bqhp->bhpn", dec_end, b_t, x_t)
+            return y_t, st_t
+
+        ys, sts = jax.lax.map(
+            jax.checkpoint(tile, prevent_cse=False),
+            (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dtc, 1, 0),
+             jnp.moveaxis(xc, 1, 0), jnp.moveaxis(bc, 1, 0),
+             jnp.moveaxis(ccx, 1, 0)))
+        y_diag = jnp.moveaxis(ys, 0, 1)                    # (B,nc,Q,H,P)
+        states = jnp.moveaxis(sts, 0, 1)                   # (B,nc,H,P,N)
+
+    # inter-chunk recurrence (sequential over chunks)
+    chunk_decay = jnp.exp(dA_total)                        # (B,nc,H)
+    if initial_state is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def scan_step(st, inp):
+        s_c, dec = inp
+        out_prev = st
+        st = st * dec[..., None, None] + s_c
+        return st, out_prev
+
+    states_seq = jnp.moveaxis(states.astype(jnp.float32), 1, 0)   # (nc,B,H,P,N)
+    decay_seq = jnp.moveaxis(chunk_decay, 1, 0)                   # (nc,B,H)
+    final, prev_states = jax.lax.scan(scan_step, h0, (states_seq, decay_seq))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (B,nc,H,P,N)
+
+    in_decay = jnp.exp(dA_cum)                                    # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", ccx, in_decay, prev_states)
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)
+    return y[:, :s].astype(xh.dtype), final
+
+
+def mamba2_block(p, x, cfg, conv_state=None, ssm_state=None,
+                 return_state: bool = False):
+    """Full Mamba-2 mixer.  x: (B,S,d)."""
+    dm = mamba_dims(cfg)
+    z, xc, bb, cc, dt, _ = _project(p, x, cfg, conv_state)
+    h, pd = dm["nheads"], dm["headdim"]
+    xh = xc.reshape(*xc.shape[:-1], h, pd)
+    xh = constrain(xh, ("dp", None, "tp", None))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(xh, dt, a, bb.astype(jnp.float32),
+                                 cc.astype(jnp.float32), cfg.ssm_chunk,
+                                 initial_state=ssm_state,
+                                 use_kernel=cfg.use_flash_kernel)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(*y.shape[:-2], dm["dinner"])
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        return out, final_state
+    return out
+
+
+# ----------------------------------------------------------------------
+# Decode (recurrent, O(1) per token)
+# ----------------------------------------------------------------------
+def init_ssm_cache(batch: int, cfg, dtype) -> Dict[str, Any]:
+    dm = mamba_dims(cfg)
+    w = dm["conv_w"] - 1
+    return {
+        "conv_x": jnp.zeros((batch, w, dm["dinner"]), dtype),
+        "conv_b": jnp.zeros((batch, w, dm["nstate"]), dtype),
+        "conv_c": jnp.zeros((batch, w, dm["nstate"]), dtype),
+        "state": jnp.zeros((batch, dm["nheads"], dm["headdim"],
+                            dm["nstate"]), jnp.float32),
+    }
+
+
+def ssm_cache_axes() -> Dict[str, Any]:
+    return {"conv_x": ("dp", None, "tp"),
+            "conv_b": ("dp", None, None),
+            "conv_c": ("dp", None, None),
+            "state": ("dp", "tp", None, None)}
+
+
+def mamba2_decode_step(p, x, cache, cfg):
+    """x: (B,1,d); cache: {conv_x, conv_b, conv_c, state}."""
+    dm = mamba_dims(cfg)
+    conv_state = {"x": cache["conv_x"], "b": cache["conv_b"],
+                  "c": cache["conv_c"]}
+    z, xc, bb, cc, dt, new_cs = _project(p, x, cfg, conv_state)
+    h, pd = dm["nheads"], dm["headdim"]
+    xh = xc[:, 0].reshape(x.shape[0], h, pd)               # (B,H,P)
+    dt1 = dt[:, 0]                                          # (B,H) fp32
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * a[None, :])                        # (B,H)
+    outer = jnp.einsum("bh,bn,bhp->bhpn", dt1,
+                       bb[:, 0].astype(jnp.float32),
+                       xh.astype(jnp.float32))
+    state = cache["state"] * dec[..., None, None] + outer
+    y = jnp.einsum("bn,bhpn->bhp", cc[:, 0].astype(jnp.float32), state)
+    y = y + xh.astype(jnp.float32) \
+        * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(x.shape[0], 1, dm["dinner"]).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv_x": new_cs["x"], "conv_b": new_cs["b"],
+                 "conv_c": new_cs["c"], "state": state}

@@ -1,0 +1,274 @@
+"""Decoder LM supporting every assigned architecture family.
+
+Structure: optional unscanned `prefix` layers, then `n_repeats` copies of a
+`block` (a tuple of LayerSpecs) applied under `jax.lax.scan` with
+layer-stacked parameters (MaxText-style — keeps HLO size and compile time
+independent of depth).  Hybrid archs (jamba) interleave mamba/attn mixers
+and dense/moe FFNs *inside* the block; pure archs have a single-layer block.
+
+All parameters carry logical sharding axes (see layers.ParamBuilder);
+activation constraints use logical names resolved by launch.sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, decode_attention_block,
+                        init_attention, init_kv_cache, kv_cache_axes)
+from .layers import (ParamBuilder, constrain, embed_tokens, init_embedding,
+                     init_mlp, mlp_apply, rmsnorm, softmax_cross_entropy,
+                     unembed)
+from .moe import init_moe, moe_apply
+from .ssm import (init_mamba2, init_ssm_cache, mamba2_block,
+                  mamba2_decode_step, ssm_cache_axes)
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+def _init_layer(b: ParamBuilder, spec, cfg, d_ff: Optional[int] = None):
+    b.ones("ln1", (cfg.d_model,), ("embed",))
+    if spec.mixer == "attn":
+        c = b.child()
+        init_attention(c, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.qkv_bias)
+        b.sub("attn", c)
+    else:
+        c = b.child()
+        init_mamba2(c, cfg)
+        b.sub("mamba", c)
+    if spec.ffn != "none":
+        b.ones("ln2", (cfg.d_model,), ("embed",))
+        c = b.child()
+        if spec.ffn == "moe":
+            init_moe(c, cfg.d_model, cfg.n_experts, cfg.moe_d_ff,
+                     cfg.mlp_act, cfg.n_shared_experts)
+            b.sub("moe", c)
+        else:
+            init_mlp(c, cfg.d_model, d_ff or cfg.d_ff, cfg.mlp_act)
+            b.sub("mlp", c)
+
+
+def _init_superblock(key, cfg, abstract: bool = False) -> Tuple[Dict, Dict]:
+    b = ParamBuilder(key, jnp.dtype(cfg.dtype), abstract=abstract)
+    for i, spec in enumerate(cfg.block):
+        c = b.child()
+        _init_layer(c, spec, cfg)
+        b.sub(f"layer{i}", c)
+    return b.params, b.axes
+
+
+def _build_model(cfg, key, abstract: bool) -> Tuple[Dict, Dict]:
+    b = ParamBuilder(key, jnp.dtype(cfg.dtype), abstract=abstract)
+    c = b.child()
+    init_embedding(c, cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings)
+    b.sub("embed", c)
+    for i, spec in enumerate(cfg.prefix):
+        c = b.child()
+        _init_layer(c, spec, cfg, d_ff=cfg.prefix_d_ff or cfg.d_ff)
+        b.sub(f"prefix{i}", c)
+
+    _, block_axes = _init_superblock(None, cfg, abstract=True)
+    if abstract:
+        one, _ = _init_superblock(None, cfg, abstract=True)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_repeats,) + s.shape,
+                                           s.dtype), one)
+    else:
+        keys = jax.random.split(b._next(), cfg.n_repeats)
+        stacked = jax.vmap(lambda k: _init_superblock(k, cfg)[0])(keys)
+    b.params["blocks"] = stacked
+    b.axes["blocks"] = jax.tree.map(
+        lambda a: ("layers",) + tuple(a), block_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    b.ones("final_norm", (cfg.d_model,), ("embed",))
+    return b.params, b.axes
+
+
+def init_model(cfg, key) -> Tuple[Dict, Dict]:
+    """Concrete parameters + logical axes (smoke tests, examples)."""
+    return _build_model(cfg, key, abstract=False)
+
+
+def abstract_model(cfg) -> Tuple[Dict, Dict]:
+    """ShapeDtypeStruct parameters + logical axes (dry-run: no allocation)."""
+    return _build_model(cfg, None, abstract=True)
+
+
+# ----------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------
+def _apply_layer(p, spec, x, positions, cfg, aux):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix = attention_block(p["attn"], h, positions, cfg=cfg)
+    else:
+        mix = mamba2_block(p["mamba"], h, cfg)
+    x = x + mix
+    x = constrain(x, ("dp", "seq", None))
+    if spec.ffn != "none":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            ff, a = moe_apply(p["moe"], h, cfg)
+            aux = aux + a
+        else:
+            ff = mlp_apply(p["mlp"], h, cfg.mlp_act)
+        x = x + ff
+        x = constrain(x, ("dp", "seq", None))
+    return x, aux
+
+
+def _apply_superblock(p, x, positions, cfg, aux):
+    for i, spec in enumerate(cfg.block):
+        x, aux = _apply_layer(p[f"layer{i}"], spec, x, positions, cfg, aux)
+    return x, aux
+
+
+def _backbone(params, tokens, cfg, *, extra_embeds=None,
+              remat_policy=None) -> Tuple[Any, Any]:
+    """Everything up to (and including) the final norm: (hidden, aux)."""
+    x = embed_tokens(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    seq = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                 x.shape[:2])
+    x = constrain(x, ("dp", "seq", None))
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, spec in enumerate(cfg.prefix):
+        x, aux = _apply_layer(params[f"prefix{i}"], spec, x, positions,
+                              cfg, aux)
+
+    block_fn = functools.partial(_apply_superblock, cfg=cfg)
+
+    def body(carry, p_rep):
+        x, aux = carry
+        x, aux = block_fn(p_rep, x, positions, aux=aux)
+        return (x, aux), None
+
+    if remat_policy is not None:
+        body = jax.checkpoint(body, policy=remat_policy,
+                              prevent_cse=False)
+    elif cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def forward(params, tokens, cfg, *, extra_embeds=None,
+            remat_policy=None) -> Tuple[Any, Any]:
+    """tokens: (B,S_txt) int32; extra_embeds: (B,S_extra,d) stub-frontend
+    embeddings prepended (pixtral patches / whisper handled in whisper.py).
+    Returns (logits, aux_loss)."""
+    x, aux = _backbone(params, tokens, cfg, extra_embeds=extra_embeds,
+                       remat_policy=remat_policy)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    logits = constrain(logits, ("dp", None, "tp"))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, remat_policy=None):
+    if cfg.loss_chunk:
+        from .layers import fused_unembed_cross_entropy
+        x, aux = _backbone(params, batch["tokens"], cfg,
+                           extra_embeds=batch.get("extra_embeds"),
+                           remat_policy=remat_policy)
+        labels = batch["labels"]
+        if x.shape[1] != labels.shape[1]:
+            x = x[:, -labels.shape[1]:]
+        ce = fused_unembed_cross_entropy(params["embed"], x, labels,
+                                         cfg.tie_embeddings,
+                                         chunk=cfg.loss_chunk)
+        return ce + 0.01 * aux
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          extra_embeds=batch.get("extra_embeds"),
+                          remat_policy=remat_policy)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]  # drop frontend positions
+    ce = softmax_cross_entropy(logits, labels)
+    return ce + 0.01 * aux
+
+
+# ----------------------------------------------------------------------
+# Decode (serve path)
+# ----------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int) -> Tuple[Dict, Dict]:
+    """(cache, logical_axes) for one-token decode against max_len context."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def layer_cache(spec):
+        if spec.mixer == "attn":
+            return (init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                  cfg.head_dim, dtype), kv_cache_axes())
+        return (init_ssm_cache(batch, cfg, dtype), ssm_cache_axes())
+
+    cache: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.prefix):
+        cache[f"prefix{i}"], axes[f"prefix{i}"] = layer_cache(spec)
+
+    blk_cache, blk_axes = {}, {}
+    for i, spec in enumerate(cfg.block):
+        c, a = layer_cache(spec)
+        blk_cache[f"layer{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_repeats,) + x.shape), c)
+        blk_axes[f"layer{i}"] = jax.tree.map(
+            lambda t: ("layers",) + tuple(t), a,
+            is_leaf=lambda x: isinstance(x, tuple))
+    cache["blocks"] = blk_cache
+    axes["blocks"] = blk_axes
+    return cache, axes
+
+
+def _decode_layer(p, spec, x, cache, index, cfg):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix, new_cache = decode_attention_block(p["attn"], h, cache, index,
+                                                cfg=cfg)
+    else:
+        mix, new_cache = mamba2_decode_step(p["mamba"], h, cache, cfg)
+    x = x + mix
+    if spec.ffn != "none":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            ff, _ = moe_apply(p["moe"], h, cfg)
+        else:
+            ff = mlp_apply(p["mlp"], h, cfg.mlp_act)
+        x = x + ff
+    return x, new_cache
+
+
+def decode_step(params, cfg, tokens, cache, index):
+    """One decode step.  tokens: (B,1) int32; index: int32 scalar position.
+    Returns (logits (B,1,V), new_cache)."""
+    x = embed_tokens(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    new_cache: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.prefix):
+        x, new_cache[f"prefix{i}"] = _decode_layer(
+            params[f"prefix{i}"], spec, x, cache[f"prefix{i}"], index, cfg)
+
+    def body(carry, scanned):
+        x = carry
+        p_rep, c_rep = scanned
+        outs = {}
+        for i, spec in enumerate(cfg.block):
+            x, outs[f"layer{i}"] = _decode_layer(
+                p_rep[f"layer{i}"], spec, x, c_rep[f"layer{i}"], index, cfg)
+        return x, outs
+
+    x, blocks_cache = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = blocks_cache
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits, new_cache

@@ -1,0 +1,102 @@
+"""AdamW from scratch (paper §II notes Adam's 1st/2nd moment vectors as
+prime scheduling targets — they double the parameter footprint, which is
+exactly what TENSILE's Opt-phase offloading removes from the device).
+
+Pure-pytree implementation; no optax.  Supports:
+  * decoupled weight decay (AdamW)
+  * optional fp32 master copies when training params are bf16
+  * optional host-offloaded moments (the TENSILE across-iteration schedule):
+    the train-step builder places these leaves in `pinned_host` memory when
+    the backend supports it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # 1st moment pytree
+    nu: Any          # 2nd moment pytree
+    master: Any      # fp32 master params (or empty tuple)
+    ef: Any = ()     # error-feedback residual (grad compression)
+
+
+def adamw_init(params: Any, *, use_master: bool = False,
+               moment_dtype=jnp.float32,
+               grad_compression: bool = False) -> AdamState:
+    mu = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    nu = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if use_master else ())
+    ef = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+          if grad_compression else ())
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu,
+                     master=master, ef=ef)
+
+
+def adamw_update(params: Any, grads: Any, state: AdamState, *,
+                 lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8, weight_decay: float = 0.0,
+                 grad_clip_norm: Optional[float] = None,
+                 ) -> Tuple[Any, AdamState]:
+    step = state.step + 1
+    stepf = step.astype(jnp.float32)
+
+    if grad_clip_norm is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+
+    def upd(p, g, m, v, pm):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        base = (pm if pm is not None else p).astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * base)
+        return new, m, v
+
+    use_master = state.master != ()
+    leaves_p, tdef = jax.tree.flatten(params)
+    leaves_g = jax.tree.flatten(grads)[0]
+    leaves_m = jax.tree.flatten(state.mu)[0]
+    leaves_v = jax.tree.flatten(state.nu)[0]
+    leaves_pm = jax.tree.flatten(state.master)[0] if use_master else [None] * len(leaves_p)
+
+    new_p, new_m, new_v, new_pm = [], [], [], []
+    for p, g, m, v, pm in zip(leaves_p, leaves_g, leaves_m, leaves_v, leaves_pm):
+        n32, m2, v2 = upd(p, g, m, v, pm)
+        new_m.append(m2.astype(m.dtype))
+        new_v.append(v2.astype(v.dtype))
+        if use_master:
+            new_pm.append(n32)
+        new_p.append(n32.astype(p.dtype))
+
+    params_out = jax.tree.unflatten(tdef, new_p)
+    mu = jax.tree.unflatten(tdef, new_m)
+    nu = jax.tree.unflatten(tdef, new_v)
+    master = jax.tree.unflatten(tdef, new_pm) if use_master else ()
+    return params_out, AdamState(step=step, mu=mu, nu=nu, master=master,
+                                 ef=state.ef)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def sgd_update(params: Any, grads: Any, lr: float) -> Any:
+    return jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+                        params, grads)

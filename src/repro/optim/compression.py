@@ -1,0 +1,91 @@
+"""Gradient compression for the cross-pod exchange.
+
+Int8 block-quantized gradients with **error feedback** (residual carried to
+the next step — Seide et al. 2014 / EF-SGD): the quantization error does
+not bias the optimizer, it is re-injected next step.
+
+Two layers:
+* `compressed_allreduce` — a real collective: quantize → int32 psum →
+  dequantize with a max-reduced scale, usable inside shard_map.  Unit
+  tests run it on a host-device mesh and check the error bound.
+* `ef_compress_grads` — the train-step integration: quantize/dequantize
+  with error feedback applied to the already-reduced gradients.  On the
+  compiled pjit path the DP reduction itself is GSPMD-inserted, so the
+  numerics of compression are exercised here while the byte saving on the
+  pod links is accounted analytically in the roofline (collective bytes ×
+  compression ratio); the shard_map collective above is the
+  mechanism a torch-style explicit-DP runtime would call.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def _quant(x):
+    flat = x.reshape(-1)
+    pad = -flat.size % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def _dequant(q, scale, pad, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def quantize_dequantize(x):
+    q, s, pad = _quant(x.astype(jnp.float32))
+    return _dequant(q, s, pad, x.shape, x.dtype)
+
+
+def compressed_psum_mean(x, axis_name: str):
+    """Real compressed collective (use inside shard_map): int8-quantize the
+    local contribution, integer-psum, dequantize with a max-combined scale.
+    Bytes on the wire: 1 B/element + 4/BLOCK ≈ 25% of fp32."""
+    n = jax.lax.psum(1, axis_name)
+    q, scale, pad = _quant(x.astype(jnp.float32))
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # renormalize local values to the shared scale, then integer-reduce
+    q_shared = jnp.clip(jnp.round(q.astype(jnp.float32) * scale / scale_max),
+                        -127, 127).astype(jnp.int32)
+    summed = jax.lax.psum(q_shared, axis_name)
+    out = _dequant(summed, scale_max, pad, x.shape, x.dtype)
+    return out / n
+
+
+def ef_compress_grads(grads: Any, opt_state) -> Tuple[Any, Any]:
+    """Error-feedback int8 compression over the gradient pytree.
+
+    The residual lives in `opt_state.ef` (create the state with
+    ``adamw_init(..., grad_compression=True)``).
+    """
+    residual = opt_state.ef if opt_state.ef != () else jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def comp(g, r):
+        x = g.astype(jnp.float32) + r
+        xq = quantize_dequantize(x)
+        return xq.astype(g.dtype), x - xq.astype(jnp.float32)
+
+    pairs = jax.tree.map(comp, grads, residual)
+    new_grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_resid = jax.tree.map(lambda p: p[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, opt_state._replace(ef=new_resid)
+
+
+def wire_bytes_ratio(dtype) -> float:
+    """Compressed bytes / uncompressed bytes for the collective."""
+    return (1.0 + 4.0 / BLOCK) / jnp.dtype(dtype).itemsize

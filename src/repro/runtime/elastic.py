@@ -1,0 +1,67 @@
+"""Elastic scaling: re-mesh and re-shard a live training state.
+
+When the fleet grows or shrinks (preemptions, capacity changes, straggler
+eviction), the coordinator rebuilds the mesh over the surviving devices and
+the training state must follow.  `reshard_state` moves every leaf onto the
+new mesh's shardings (jax.device_put resharding — on real pods this is the
+cross-host resharding path; combined with CheckpointManager.restore it also
+covers the restart-on-new-topology case).
+
+`plan_elastic_mesh` picks the largest (data × model) grid that preserves
+the model-parallel degree when possible (TP degree changes force a weight
+re-layout; DP degree changes only re-slice the batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import MeshRules
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    kept_model_degree: bool
+    dp_degree: int
+    tp_degree: int
+
+
+def plan_elastic_mesh(n_devices: int, prev_tp: int) -> ElasticPlan:
+    """Largest usable grid: keep TP degree if it divides the new world,
+    else the largest power-of-two TP that fits."""
+    tp = prev_tp if n_devices % prev_tp == 0 else _largest_pow2_divisor(
+        n_devices, prev_tp)
+    dp = n_devices // tp
+    return ElasticPlan(mesh_shape=(dp, tp), axes=("data", "model"),
+                       kept_model_degree=(tp == prev_tp),
+                       dp_degree=dp, tp_degree=tp)
+
+
+def _largest_pow2_divisor(n: int, cap: int) -> int:
+    t = 1
+    while t * 2 <= cap and n % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def reshard_state(state: Any, axes_tree: Any, new_mesh,
+                  cfg=None, fsdp: bool = True) -> Tuple[Any, MeshRules]:
+    """Move a pytree onto a new mesh.  Returns (state, new rules)."""
+    rules = MeshRules(new_mesh, cfg=cfg, fsdp=fsdp)
+    shardings = rules.shardings_for(
+        axes_tree, jax.tree.map(lambda x: x, state)) \
+        if _has_shapes(state) else rules.param_shardings(axes_tree)
+    new_state = jax.tree.map(
+        lambda x, s: jax.device_put(jax.numpy.asarray(x), s),
+        state, shardings)
+    return new_state, rules
+
+
+def _has_shapes(tree) -> bool:
+    leaves = jax.tree.leaves(tree)
+    return bool(leaves) and all(hasattr(l, "shape") for l in leaves)

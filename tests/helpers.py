@@ -1,0 +1,85 @@
+"""Shared test fixtures: tiny train steps + synthetic access sequences."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import capture_train_step
+from repro.core.access import (AccessSequence, Operator, TensorKind,
+                               TensorSpec)
+from repro.optim.adam import adamw_init, adamw_update
+
+
+def mlp_params(key, sizes):
+    ps = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        ps.append({"w": jax.random.normal(k, (sizes[i], sizes[i + 1])) * 0.02,
+                   "b": jnp.zeros(sizes[i + 1])})
+    return ps
+
+
+def mlp_forward(params, x):
+    h = x
+    for i, p in enumerate(params):
+        h = h @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def mlp_train_step(params, opt_state, batch):
+    x, y = batch
+
+    def loss_fn(p):
+        return jnp.mean((mlp_forward(p, x) - y) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt_state = adamw_update(params, grads, opt_state, lr=1e-3)
+    return params, opt_state, loss
+
+
+def capture_mlp(sizes=(64, 128, 128, 8), batch=16, job_id="job0"):
+    params = mlp_params(jax.random.PRNGKey(0), list(sizes))
+    opt = adamw_init(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, sizes[0]))
+    y = jax.random.normal(jax.random.PRNGKey(2), (batch, sizes[-1]))
+    seq, closed = capture_train_step(mlp_train_step, params, opt, (x, y),
+                                     job_id=job_id)
+    return seq, closed, (params, opt, (x, y))
+
+
+def synthetic_chain(n_ops=10, sizes=None, latency=1.0, job_id="chain",
+                    with_params=True, seed=0) -> AccessSequence:
+    """A linear producer-consumer chain with a backward-like reuse pattern:
+    act_i produced by op_i, consumed by op_{i+1} and op_{2n-i} (mirror)."""
+    rng = np.random.default_rng(seed)
+    n_t = n_ops
+    sizes = sizes or (rng.integers(1, 64, n_t) * 1024).tolist()
+    tensors = {}
+    ops = []
+    if with_params:
+        tensors["p0"] = TensorSpec("p0", 8 * 1024, kind=TensorKind.PARAM,
+                                   job_id=job_id)
+    for i in range(n_t):
+        tensors[f"a{i}"] = TensorSpec(f"a{i}", int(sizes[i]),
+                                      kind=TensorKind.ACTIVATION,
+                                      job_id=job_id)
+    total = 2 * n_ops
+    for i in range(n_ops):
+        ins = [f"a{i-1}"] if i > 0 else []
+        if with_params:
+            ins.append("p0")
+        ops.append(Operator(idx=i, name=f"fwd{i}", inputs=tuple(ins),
+                            outputs=(f"a{i}",), latency=latency,
+                            job_id=job_id))
+    for j in range(n_ops):
+        i = n_ops - 1 - j
+        idx = n_ops + j
+        ins = [f"a{i}"]
+        outs = ()
+        ops.append(Operator(idx=idx, name=f"bwd{i}", inputs=tuple(ins),
+                            outputs=outs, latency=latency, job_id=job_id))
+    initial = ["p0"] if with_params else []
+    return AccessSequence(job_id, ops, tensors, initial_resident=initial)

@@ -1,0 +1,177 @@
+"""Simulator, recompute, baselines, cost model, graph capture, TENSILE
+compiled-path decisions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, EWMATracker, LatencyMLP, MachineProfile,
+                        evaluate, schedule_single, simulate)
+from repro.core.access import (AccessSequence, Operator, TensorKind,
+                               TensorSpec)
+from repro.core.baselines import capuchin_plan, vdnn_conv_plan
+from repro.core.peak_analysis import analyze
+from repro.core.plan import EventType
+from repro.core.recompute_planner import RecomputePlanner
+from repro.core.scheduler import MemoryScheduler, SchedulerConfig
+
+from helpers import capture_mlp, synthetic_chain
+
+PROFILE = MachineProfile(host_link_bw=1e6, host_link_latency=1e-3,
+                         compute_flops=1e9, mem_bw=1e9)
+
+
+# ---------------------------------------------------------------- simulator
+def test_simulator_vanilla_peak_matches_analysis():
+    seq = synthetic_chain(n_ops=10, latency=2.0, seed=4)
+    sim = simulate([seq], None, PROFILE, iterations=1)
+    rep = analyze([seq])
+    assert sim.peak_bytes == rep.peak_bytes
+
+
+def test_simulator_multi_iteration_steady():
+    seq = synthetic_chain(n_ops=6, latency=1.0, seed=2)
+    s1 = simulate([seq], None, PROFILE, iterations=1)
+    s3 = simulate([seq], None, PROFILE, iterations=3)
+    assert s3.peak_bytes == s1.peak_bytes  # steady state, no leak
+    assert s3.total_time > 2.5 * s1.total_time
+
+
+def test_simulator_async_jobs_interleave():
+    a = synthetic_chain(n_ops=6, latency=1.0, job_id="a", seed=1)
+    b = synthetic_chain(n_ops=6, latency=1.0, job_id="b", seed=2)
+    both = simulate([a, b], None, PROFILE, iterations=1)
+    apart = simulate([a, b], None, PROFILE, iterations=1,
+                     offsets={"b": 100.0})
+    assert apart.peak_bytes <= both.peak_bytes
+
+
+# ---------------------------------------------------------------- recompute
+def _tight_channel_profile():
+    # swaps effectively impossible: 1 B/s link
+    return MachineProfile(host_link_bw=1.0, host_link_latency=100.0,
+                          compute_flops=1e9, mem_bw=1e9)
+
+
+def test_recompute_when_swap_impossible():
+    seq = synthetic_chain(n_ops=10, latency=1.0, seed=9)
+    prof = _tight_channel_profile()
+    sched = MemoryScheduler(prof, SchedulerConfig(memory_budget_bytes=1))
+    sched.register_job(seq)
+    res = sched.schedule()
+    assert res.swaps_scheduled == 0
+    assert res.recomputes_scheduled > 0
+    assert res.final_report.peak_bytes < res.initial_report.peak_bytes
+
+
+def test_recompute_msps_ordering():
+    seq = synthetic_chain(n_ops=8, latency=1.0, seed=5)
+    from repro.core.plan import SchedulingPlan
+    plan = SchedulingPlan(job_id=seq.job_id)
+    rp = RecomputePlanner(seq, plan)
+    cands = rp.candidates(analyze([seq]))
+    msps = [c.msps for c in cands]
+    assert msps == sorted(msps, reverse=True)
+
+
+def test_recompute_skipped_when_budget_fits():
+    seq = synthetic_chain(n_ops=10, latency=1.0, seed=9)
+    prof = _tight_channel_profile()
+    sched = MemoryScheduler(prof, SchedulerConfig(
+        memory_budget_bytes=2 ** 62))
+    sched.register_job(seq)
+    res = sched.schedule()
+    assert res.recomputes_scheduled == 0  # paper Alg 3 line 13 gate
+
+
+# ---------------------------------------------------------------- baselines
+def test_vdnn_swaps_only_heavy_feature_maps():
+    seq, _, _ = capture_mlp()
+    plan = vdnn_conv_plan(seq, PROFILE)
+    heavy_io = set()
+    for op in seq.operators:
+        if op.name in ("dot_general", "conv_general_dilated"):
+            heavy_io |= set(op.inputs) | set(op.outputs)
+    for ev in plan.events:
+        assert ev.tensor_id in heavy_io
+        assert seq.tensors[ev.tensor_id].kind is TensorKind.ACTIVATION
+
+
+def test_capuchin_within_iteration_only():
+    seq, _, _ = capture_mlp()
+    res = capuchin_plan(seq, budget_bytes=10_000, profile=PROFILE)
+    assert all(not e.crosses_iteration for e in res.plan.events)
+    kinds = {seq.tensors[e.tensor_id].kind for e in res.plan.events}
+    assert TensorKind.OPT_STATE not in kinds  # cannot schedule Opt phase
+
+
+def test_comparative_ordering_tensile_wins_cbr():
+    seq, _, _ = capture_mlp(sizes=(64, 512, 512, 512, 8), batch=64)
+    prof = MachineProfile(host_link_bw=12e9, compute_flops=13e12,
+                          mem_bw=600e9)
+    res = schedule_single(seq, profile=prof)
+    t = evaluate([seq], res.plans, prof)
+    v = evaluate([seq], {seq.job_id: vdnn_conv_plan(seq, prof)}, prof,
+                 free_at_last_use=False)
+    assert t["MSR"] >= v["MSR"]
+    # CBR dominance holds when vDNN saves non-trivially (a near-zero EOR
+    # denominator on a tiny saving can inflate vDNN's ratio)
+    if v["MSR"] >= 0.5 * t["MSR"]:
+        assert t["CBR"] >= v["CBR"]
+
+
+# --------------------------------------------------------------- cost model
+def test_cost_model_dot_flops():
+    import jax.numpy as jnp
+    cm = CostModel()
+    closed = jax.make_jaxpr(lambda a, b: a @ b)(
+        jnp.zeros((32, 64)), jnp.zeros((64, 16)))
+    flops, bts = cm.eqn_cost(closed.jaxpr.eqns[0])
+    assert flops == 2 * 32 * 64 * 16
+    assert bts == 4 * (32 * 64 + 64 * 16 + 32 * 16)
+
+
+def test_cost_model_scan_multiplies_trip_count():
+    def f(x, ws):
+        return jax.lax.scan(lambda h, w: (jnp.tanh(h @ w), None), x, ws)[0]
+    closed = jax.make_jaxpr(f)(jnp.zeros((8, 16)), jnp.zeros((5, 16, 16)))
+    cm = CostModel()
+    scan_eqn = [e for e in closed.jaxpr.eqns if e.primitive.name == "scan"][0]
+    flops, _ = cm.eqn_cost(scan_eqn)
+    assert flops >= 5 * 2 * 8 * 16 * 16  # trip count included
+
+
+def test_ewma_tracker():
+    t = EWMATracker(alpha=0.5)
+    t.update(0, 1.0)
+    assert t.update(0, 3.0) == 2.0
+    assert t.drift_ratio(1.0) == 1.0
+
+
+def test_latency_mlp_learns_monotonicity():
+    rng = np.random.default_rng(0)
+    flops = 10 ** rng.uniform(6, 12, 200)
+    bts = flops / 10
+    util = rng.uniform(0, 1, 200).astype(np.float32)
+    lat = flops / 1e12 * (1 + util) + 1e-6
+    mlp = LatencyMLP(hidden=16)
+    r2 = mlp.fit(flops, bts, util, lat, steps=800)
+    assert r2 > 0.9
+    assert mlp.predict_one(1e12, 1e11, 0.0) > mlp.predict_one(1e8, 1e7, 0.0)
+
+
+# ------------------------------------------------------- compiled-path glue
+def test_schedule_for_budget_decisions():
+    from repro.core import schedule_for_budget
+    seq, _, _ = capture_mlp(sizes=(64, 512, 512, 8), batch=64)
+    dec = schedule_for_budget(seq, budget_bytes=1, profile=PROFILE)
+    # a 1-byte budget forces both offloads and remat decisions
+    assert dec.offload_opt_state or dec.offload_names or dec.remat_names
+
+
+def test_make_remat_policy_cpu_fallback():
+    from repro.core import TensileDecisions, make_remat_policy
+    dec = TensileDecisions(remat_names=frozenset({"x"}),
+                           save_names=frozenset({"keep"}))
+    pol = make_remat_policy(dec, offload=True)  # CPU: falls back
+    assert callable(pol)

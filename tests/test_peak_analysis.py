@@ -1,0 +1,102 @@
+"""Algorithm 2 (GPU memory peak analysis) unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.access import (AccessSequence, Operator, TensorKind,
+                               TensorSpec)
+from repro.core.peak_analysis import analyze, unroll, vanilla_peak
+from repro.core.plan import EventType, ScheduleEvent, SchedulingPlan
+
+from helpers import synthetic_chain
+
+
+def tiny_seq():
+    """op0: (in) -> a (100B); op1: a -> b (200B); op2: a,b -> out (50B)."""
+    tensors = {
+        "in": TensorSpec("in", 10, kind=TensorKind.INPUT),
+        "a": TensorSpec("a", 100),
+        "b": TensorSpec("b", 200),
+        "out": TensorSpec("out", 50, kind=TensorKind.OUTPUT),
+    }
+    ops = [
+        Operator(0, "op0", ("in",), ("a",), latency=1.0),
+        Operator(1, "op1", ("a",), ("b",), latency=1.0),
+        Operator(2, "op2", ("a", "b"), ("out",), latency=1.0),
+    ]
+    return AccessSequence("t", ops, tensors, initial_resident=["in"])
+
+
+def test_hand_computed_peak():
+    seq = tiny_seq()
+    rep = analyze([seq])
+    # in freed after op0; during op2 (t∈[2,3)): a + b + out co-resident
+    assert rep.peak_bytes == 100 + 200 + 50
+    ids = rep.mpt_ids()
+    assert set(ids) >= {"a", "b", "out"}
+
+
+def test_vanilla_no_free_is_higher_or_equal():
+    seq = synthetic_chain(n_ops=12, seed=3)
+    assert vanilla_peak(seq, free_at_last_use=False) >= \
+        analyze([seq]).peak_bytes
+
+
+def test_updated_param_aliases_storage():
+    tensors = {
+        "p": TensorSpec("p", 1000, kind=TensorKind.PARAM),
+        "g": TensorSpec("g", 1000, kind=TensorKind.GRAD),
+        "p_new": TensorSpec("p_new", 1000, kind=TensorKind.PARAM,
+                            updates="p"),
+    }
+    ops = [
+        Operator(0, "fwd", ("p",), ("g",), latency=1.0),
+        Operator(1, "upd", ("p", "g"), ("p_new",), latency=1.0),
+    ]
+    seq = AccessSequence("t", ops, tensors, initial_resident=["p"])
+    rep = analyze([seq])
+    # p_new reuses p's storage: peak = p + g, NOT p + g + p_new
+    assert rep.peak_bytes == 2000
+
+
+def test_swap_events_change_peak():
+    seq = tiny_seq()
+    base = analyze([seq]).peak_bytes
+    plan = SchedulingPlan(job_id="t")
+    # swap `a` out right after op1 consumed it, back before op2
+    plan.add(ScheduleEvent(EventType.SWAP_OUT, "a", "t", trigger_op=1,
+                           delta=0.0, start=1.0, end=1.5, size_bytes=100))
+    plan.add(ScheduleEvent(EventType.SWAP_IN, "a", "t", trigger_op=1,
+                           delta=0.4, start=1.9, end=2.0, size_bytes=100,
+                           target_op=2))
+    rep = analyze([seq], plans={"t": plan})
+    # 'a' absent during (1.5, 2.0) but b alloc at t2 and out at t3 —
+    # peak at t3: in + a + b + out unchanged... but at 2.0 a returns, so
+    # peak is the same interval; a was only out between its uses
+    assert rep.peak_bytes <= base
+
+
+def test_multi_job_merge_offsets():
+    s1 = synthetic_chain(n_ops=6, job_id="j1", seed=1)
+    s2 = synthetic_chain(n_ops=6, job_id="j2", seed=2)
+    together = analyze([s1, s2]).peak_bytes
+    apart = analyze([s1, s2],
+                    offsets={"j2": s1.iteration_time * 2}).peak_bytes
+    assert apart <= together
+    assert analyze([s1]).peak_bytes <= together
+
+
+def test_unroll_keeps_persistent_identity():
+    seq = synthetic_chain(n_ops=4, job_id="u", seed=5)
+    u2 = unroll(seq, 2)
+    assert len(u2.operators) == 2 * len(seq.operators)
+    # param appears once (shared storage); activations duplicated
+    assert "p0" in u2.tensors
+    assert "a0~0" in u2.tensors and "a0~1" in u2.tensors
+
+
+def test_peak_time_and_timeline_monotonic_bytes():
+    seq = synthetic_chain(n_ops=8, seed=7)
+    rep = analyze([seq])
+    assert rep.peak_time >= 0
+    peak_seen = max(m for _, m in rep.timeline)
+    assert peak_seen == rep.peak_bytes

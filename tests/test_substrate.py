@@ -1,0 +1,241 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing,
+fault tolerance, stragglers, elastic planning."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
+from repro.optim.adam import adamw_init, adamw_update
+from repro.optim.compression import (ef_compress_grads, quantize_dequantize,
+                                     wire_bytes_ratio)
+from repro.runtime.elastic import plan_elastic_mesh
+from repro.runtime.fault_tolerance import FTConfig, resilient_train_loop
+from repro.runtime.stragglers import StragglerConfig, StragglerMonitor
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_matches_numpy_reference():
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, -0.2], [0.3, 0.0]])}
+    st_ = adamw_init(p)
+    p1, st1 = adamw_update(p, g, st_, lr=0.1, b1=0.9, b2=0.999,
+                           weight_decay=0.0)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = np.asarray(p["w"]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-5)
+    assert int(st1.step) == 1
+
+
+def test_adamw_master_weights_bf16():
+    p = {"w": jnp.ones((8,), jnp.bfloat16)}
+    st_ = adamw_init(p, use_master=True)
+    g = {"w": jnp.full((8,), 1e-3, jnp.bfloat16)}
+    p2, st2 = adamw_update(p, g, st_, lr=1e-4)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert st2.master["w"].dtype == jnp.float32
+    # master accumulates sub-bf16 updates
+    assert float(jnp.max(jnp.abs(st2.master["w"] - 1.0))) > 0
+
+
+def test_grad_clipping():
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    st_ = adamw_init(p)
+    p1, _ = adamw_update(p, g, st_, lr=1.0, grad_clip_norm=1.0)
+    assert np.isfinite(np.asarray(p1["w"])).all()
+
+
+# -------------------------------------------------------------- compression
+def test_quant_dequant_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 5
+    xq = quantize_dequantize(x)
+    assert float(jnp.max(jnp.abs(xq - x))) <= float(
+        jnp.max(jnp.abs(x))) / 127 + 1e-6
+    assert wire_bytes_ratio(jnp.float32) < 0.26
+
+
+def test_error_feedback_unbiased_over_steps():
+    """EF property: the accumulated compressed signal tracks the raw sum
+    (residual stays bounded, error does not accumulate)."""
+    rng = np.random.default_rng(0)
+    opt = adamw_init({"w": jnp.zeros((512,))}, grad_compression=True)
+    total_raw = np.zeros(512)
+    total_comp = np.zeros(512)
+    for _ in range(30):
+        g = {"w": jnp.asarray(rng.standard_normal(512) * 1e-3, jnp.float32)}
+        cg, opt = ef_compress_grads(g, opt)
+        total_raw += np.asarray(g["w"])
+        total_comp += np.asarray(cg["w"])
+    resid = np.abs(total_raw - total_comp).max()
+    one_step_err = 2e-3 / 127 * 3
+    assert resid < one_step_err * 3  # residual bounded, not growing ~30×
+
+
+def test_training_with_compression_converges():
+    from helpers import mlp_params, mlp_forward
+    p = mlp_params(jax.random.PRNGKey(0), [16, 32, 4])
+    opt = adamw_init(p, grad_compression=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y = jax.random.normal(jax.random.PRNGKey(2), (32, 4))
+
+    @jax.jit
+    def step(p, opt):
+        loss, g = jax.value_and_grad(
+            lambda pp: jnp.mean((mlp_forward(pp, x) - y) ** 2))(p)
+        g, opt = ef_compress_grads(g, opt)
+        p, opt = adamw_update(p, g, opt, lr=3e-3)
+        return p, opt, loss
+
+    losses = []
+    for _ in range(40):
+        p, opt, l = step(p, opt)
+        losses.append(float(l))
+    assert losses[-1] < 0.7 * losses[0]
+
+
+# ---------------------------------------------------------------------- data
+def test_stream_determinism_and_resume():
+    cfg = DataConfig(seq_len=32, global_batch=4, vocab_size=128, seed=7)
+    s1 = TokenStream(cfg)
+    batches = [s1.batch_at(i)["tokens"] for i in range(5)]
+    s2 = TokenStream(cfg)
+    s2.load_state_dict({"step": 3})
+    np.testing.assert_array_equal(s2.batch_at(3)["tokens"], batches[3])
+    # host sharding: different hosts → different data
+    h0 = TokenStream(cfg, host_id=0, n_hosts=2).batch_at(0)["tokens"]
+    h1 = TokenStream(cfg, host_id=1, n_hosts=2).batch_at(0)["tokens"]
+    assert h0.shape[0] == 2 and not np.array_equal(h0, h1)
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=64)
+    b = TokenStream(cfg).batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetcher():
+    cfg = DataConfig(seq_len=8, global_batch=2, vocab_size=32)
+    stream = TokenStream(cfg)
+    pf = Prefetcher(stream, depth=2)
+    b1 = next(pf)
+    b2 = next(pf)
+    assert b1["tokens"].shape == (2, 8)
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+    pf.close()
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.arange(8, dtype=jnp.float32),
+             "nested": {"b": jnp.ones((3,))}}
+    mgr.save(10, state)
+    mgr.save(20, state)
+    # a fake torn save must be ignored
+    os.makedirs(tmp_path / "step_000000030")
+    assert mgr.latest_step() == 20
+    restored, meta = mgr.restore(template=state)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+    assert meta["step"] == 20
+
+
+def test_checkpoint_gc_keep(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.ones((128,))}
+    mgr.save_async(5, state)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+# ----------------------------------------------------------- fault tolerance
+def test_restart_on_injected_failure(tmp_path):
+    from helpers import mlp_params, mlp_forward
+    p = mlp_params(jax.random.PRNGKey(0), [8, 16, 2])
+    opt = adamw_init(p)
+
+    def step(params, opt_state, batch):
+        x, y = batch
+        loss, g = jax.value_and_grad(
+            lambda pp: jnp.mean((mlp_forward(pp, x) - y) ** 2))(params)
+        params, opt_state = adamw_update(params, g, opt_state, lr=1e-3)
+        return params, opt_state, {"loss": loss}
+
+    def data():
+        k = jax.random.PRNGKey(3)
+        while True:
+            yield (jax.random.normal(k, (4, 8)),
+                   jax.random.normal(k, (4, 2)))
+
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_restarts=2,
+                  async_save=False)
+    res = resilient_train_loop(step, (p, opt), data(), 20, ft=ft,
+                               fail_at={12: 1})
+    assert res.restarts == 1
+    assert res.final_step == 19
+    assert not res.preempted
+    assert all(np.isfinite(m["loss"]) for m in res.metrics_history)
+
+
+def test_restart_exhaustion_raises(tmp_path):
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100, max_restarts=1,
+                  async_save=False)
+
+    def step(p, o, b):
+        return p, o, {"loss": jnp.zeros(())}
+
+    with pytest.raises(RuntimeError):
+        resilient_train_loop(step, ((), ()), iter(lambda: ((), ()), 1),
+                             10, ft=ft, fail_at={3: 5})
+
+
+# -------------------------------------------------------------- stragglers
+def test_straggler_detection_and_rebalance():
+    mon = StragglerMonitor(n_hosts=8, config=StragglerConfig(
+        window=10, z_threshold=3.0, min_samples=5))
+    for step in range(10):
+        for h in range(8):
+            t = 1.0 if h != 3 else 2.5  # host 3 is slow
+            mon.record(h, step, t + 0.01 * (h + step % 3))
+    flagged = mon.stragglers()
+    assert flagged and flagged[0][0] == 3
+    plan = mon.rebalance({h: 4 for h in range(8)})
+    assert plan[3] == 3 and sum(plan.values()) == 32
+
+
+def test_straggler_eviction_streak():
+    mon = StragglerMonitor(n_hosts=4, config=StragglerConfig(
+        window=5, evict_after=3, min_samples=3))
+    for step in range(12):
+        for h in range(4):
+            mon.record(h, step, 10.0 if h == 1 else 1.0)
+        mon.stragglers()
+    assert 1 in mon.should_evict()
+
+
+# ------------------------------------------------------------------ elastic
+def test_elastic_mesh_planning():
+    plan = plan_elastic_mesh(512, prev_tp=16)
+    assert plan.mesh_shape == (32, 16) and plan.kept_model_degree
+    plan2 = plan_elastic_mesh(384, prev_tp=16)  # 384 = 24×16
+    assert plan2.tp_degree == 16
+    plan3 = plan_elastic_mesh(100, prev_tp=16)  # keep largest pow2 divisor
+    assert plan3.tp_degree == 4 and plan3.dp_degree == 25
