@@ -130,6 +130,28 @@ def paper_tables() -> str:
             "allocator overheads ours does not model. CBR falls with batch "
             "everywhere (more bytes to move per step), matching the "
             "paper's DenseNet observation.\n")
+    pp = _load("pipelines.json")
+    if pp:
+        out.append("### Planning pipelines — every registered policy over "
+                   "one pass engine\n")
+        out.append("(vanilla/vdnn/capuchin/tensile/tensile+compressed-"
+                   "offload are pass configurations over the same "
+                   "`passes.Pipeline` convergence loop; rows are directly "
+                   "comparable because the policy is the only variable.  "
+                   "Select with `python -m benchmarks.run --only pipelines "
+                   "--policy <names>`.)\n")
+        out.append("| workload | pipeline | MSR | EOR | CBR | swaps | "
+                   "recomputes |")
+        out.append("|---|---|---|---|---|---|---|")
+        for w, by_name in pp.items():
+            for name, r in by_name.items():
+                cbr = (f"{r['CBR']:.4f}" if r["CBR"] < 1e3
+                       else "≫100 (EOR≈0)")
+                out.append(
+                    f"| {w} | {name} | {r['MSR']:.4f} | {r['EOR']:.4f} "
+                    f"| {cbr} | {r.get('swaps', 0)} "
+                    f"| {r.get('recomputes', 0)} |")
+        out.append("")
     lm = _load("latency_model.json")
     if lm:
         out.append("### §IV-C — cold-start latency MLP\n")

@@ -69,6 +69,56 @@ def bench_latency_model() -> None:
           f"r2_test={r['r2_test']:.3f};r2_expensive={r['r2_expensive_ops']:.3f}")
 
 
+def bench_pipelines(policies=None, workloads=("vgg16", "tinyllama-r")) -> None:
+    """Policy comparison by *pipeline name*: every registered planning
+    pipeline (vanilla / vdnn / capuchin / tensile / tensile+compressed-
+    offload / ...) over the same workloads, MSR/EOR/CBR per row.
+
+    Protocol follows the paper's Table I: Capuchin's budget is set to
+    TENSILE's achieved peak and charged its passive observation epoch;
+    vDNN/vanilla run without activity-analysis releases (their frameworks
+    lack them)."""
+    from repro.core import SchedulerConfig, build_pipeline, evaluate
+    from repro.core.passes import PIPELINES
+
+    from .workloads import GPU_PROFILE, get_workload
+
+    names = list(policies) if policies else list(PIPELINES)
+    # tensile first: its achieved peak is the budget baselines plan toward
+    names.sort(key=lambda n: (n != "tensile", n))
+    table = {}
+    for w in workloads:
+        seq = get_workload(w)
+        table[w] = {}
+        budget = None
+        if "tensile" not in names:
+            # keep the Table-I protocol even for partial selections: the
+            # budget is always TENSILE's achieved peak
+            budget = build_pipeline("tensile", profile=GPU_PROFILE) \
+                .plan([seq]).final_report.peak_bytes
+        for name in names:
+            cfg = SchedulerConfig(memory_budget_bytes=budget)
+            pipe = build_pipeline(name, profile=GPU_PROFILE, config=cfg)
+            res = pipe.plan([seq])
+            if name == "tensile":
+                budget = res.final_report.peak_bytes
+            m = evaluate([seq], res.plans, GPU_PROFILE,
+                         free_at_last_use=pipe.free_at_last_use)
+            if pipe.passive_iterations:
+                # observation epoch surcharge (Capuchin passive mode)
+                m["EOR"] += (pipe.passive_iterations * seq.iteration_time
+                             / max(m["vanilla_time"], 1e-12))
+                m["CBR"] = m["MSR"] / m["EOR"] if m["EOR"] > 0 else 0.0
+            m["swaps"] = res.swaps_scheduled
+            m["recomputes"] = res.recomputes_scheduled
+            m["pass_steps"] = res.pass_steps
+            table[w][name] = m
+            _emit(f"pipelines/{w}/{name}", m["time"] * 1e6,
+                  f"MSR={m['MSR']:.4f};EOR={m['EOR']:.4f};CBR={m['CBR']:.4f}")
+    with open(os.path.join(RESULTS, "pipelines.json"), "w") as f:
+        json.dump(table, f, indent=1)
+
+
 def bench_executor_validation() -> None:
     """Real-execution check: interpreter peak/MSR vs simulator prediction
     and bit-exactness of outputs under the plan (CPU-sized workload)."""
@@ -122,6 +172,7 @@ ALL = {
     "mixed": bench_mixed,
     "batch_size": bench_batch_size,
     "latency_model": bench_latency_model,
+    "pipelines": bench_pipelines,
     "executor_validation": bench_executor_validation,
 }
 
@@ -130,12 +181,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(ALL))
+    ap.add_argument("--policy", default=None,
+                    help="comma-separated planning-pipeline names for the "
+                         "`pipelines` benchmark (default: all registered; "
+                         "see repro.core.passes.PIPELINES)")
     args = ap.parse_args()
     os.makedirs(RESULTS, exist_ok=True)
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     for n in names:
-        ALL[n]()
+        if n == "pipelines":
+            bench_pipelines(policies=args.policy.split(",")
+                            if args.policy else None)
+        else:
+            ALL[n]()
 
 
 if __name__ == "__main__":

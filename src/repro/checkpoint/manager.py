@@ -36,7 +36,10 @@ except Exception:  # pragma: no cover
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path landed after 0.4.x; fall back to tree_util
+    flatten = getattr(jax.tree, "flatten_with_path",
+                      jax.tree_util.tree_flatten_with_path)
+    flat, treedef = flatten(tree)
     return [("/".join(str(p) for p in path), leaf) for path, leaf in flat], \
         treedef
 

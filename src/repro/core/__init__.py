@@ -3,19 +3,28 @@ JAX systems (Zhang et al., 2021), adapted for TPU.
 
 Public API:
     capture / capture_train_step  — jaxpr → Tensor Access Sequence
-    MemoryScheduler / schedule_single — Algorithm 3
+    Pipeline / build_pipeline / PIPELINES — composable planning passes
+                                    (vanilla/vdnn/capuchin/tensile/
+                                     tensile+compressed-offload by name)
+    MemoryScheduler / schedule_single — Algorithm 3 (tensile pipeline)
     analyze / vanilla_peak        — Algorithm 2 (peak analysis)
+    MemoryEngine / DeviceLedger / DmaChannel — the shared memory-event
+                                    engine both runtimes execute against
     simulate / evaluate           — discrete-event metrics (MSR/EOR/CBR)
     JaxprExecutor                 — interpreting executor with real host swap
     GlobalController              — multi-workload runtime (paper Fig. 3)
-    baselines                     — vanilla / vDNN_conv / Capuchin
+    baselines                     — vanilla / vDNN_conv / Capuchin wrappers
     schedule_for_budget           — plan → compiled-path decisions
+
+See docs/architecture.md for the engine + pass-pipeline layering.
 """
 from .access import (AccessSequence, AccessType, Operator, Phase, TensorKind,
                      TensorSpec, format_bytes)
 from .baselines import capuchin_plan, vanilla_plan, vdnn_conv_plan
 from .cost_model import (CostModel, DeviceCalibration, EWMATracker,
                          LatencyMLP, calibrate_cpu)
+from .engine import (DeviceLedger, DmaChannel, EngineTrace, JobContext,
+                     MemoryEngine)
 from .executor import (DeviceAccountant, ExecutionStats, JaxprExecutor,
                        SwapChannel, reference_outputs)
 from .graph_capture import CaptureSpec, capture, capture_train_step
@@ -23,6 +32,9 @@ from .jax_integration import (TensileDecisions, backend_supports_memory_kinds,
                               checkpoint_name, make_remat_policy,
                               plan_decisions, schedule_for_budget)
 from .multiplexer import GlobalController, JobHandle
+from .passes import (PIPELINES, CompressedOffloadPass, PassiveProfilePass,
+                     Pipeline, PlanningPass, RecomputePass, SwapPass,
+                     VdnnSwapPass, build_pipeline)
 from .peak_analysis import PeakReport, analyze, unroll, vanilla_peak
 from .plan import (ChannelReservation, EventType, MachineProfile,
                    ScheduleEvent, SchedulingPlan)

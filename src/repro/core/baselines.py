@@ -1,98 +1,52 @@
 """Baseline planners reproduced for the paper's comparisons (§V-A).
 
-* **vanilla** — no scheduling: free-at-last-use only (the normalizer for all
-  metrics; VMP / VTC in the paper).
-* **vDNN_conv** (Rhu et al., MICRO'16) — *layer* granularity: offload the
-  feature maps of the heavy ("conv-like") layers after their forward use,
-  static swap-in (prefetch when the previous backward layer starts).  No
-  recomputation, no Opt-phase events, single-workload design.
-* **Capuchin** (Peng et al., ASPLOS'20) — *tensor* granularity: requires one
-  passive-mode observation iteration (counted into its overhead), then
-  schedules swap for tensors whose transfer hides under compute and
-  recompute (by MSPS) otherwise.  Within-iteration only: updated parameters
-  and optimizer state are never scheduled, so cross-iteration prefetch is
-  impossible (the gap TENSILE closes).
+All three baselines are now *pass configurations* over the same pipeline
+engine that drives TENSILE (see ``passes.PIPELINES``), so the comparison
+isolates the scheduling policy exactly as the paper argues ("what we want to
+compare is the scheduling algorithm itself ... run on the same platform"):
 
-Both baselines are driven through the same simulator as TENSILE so the
-comparison isolates the *scheduling policy*, exactly as the paper argues
-("what we want to compare is the scheduling algorithm itself ... run on the
-same platform").
+* **vanilla** — ``Pipeline([])``: no scheduling, free-at-last-use only (the
+  normalizer for all metrics; VMP / VTC in the paper).
+* **vDNN_conv** (Rhu et al., MICRO'16) — ``Pipeline([VdnnSwapPass])``:
+  *layer* granularity, static prefetch, no recomputation, no Opt-phase
+  events, single-workload design.
+* **Capuchin** (Peng et al., ASPLOS'20) — ``Pipeline([PassiveProfilePass,
+  SwapPass(style="capuchin"), RecomputePass(style="capuchin")])``: *tensor*
+  granularity after one passive observation iteration (counted into its
+  overhead), swap when the transfer hides under compute, recompute (by MSPS)
+  otherwise.  Within-iteration only: updated parameters and optimizer state
+  are never scheduled, so cross-iteration prefetch is impossible (the gap
+  TENSILE closes).
+
+This module keeps the seed's functional entry points as thin wrappers so
+existing callers and benchmarks are unaffected.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Optional
 
-from .access import AccessSequence, AccessType, TensorKind
-from .peak_analysis import PERSISTENT_KINDS, analyze, storage_of
-from .plan import (EventType, MachineProfile, ScheduleEvent, SchedulingPlan)
+from .access import AccessSequence
+from .passes import HEAVY_OPS, SchedulerConfig, build_pipeline
+from .plan import MachineProfile, SchedulingPlan
 
-HEAVY_OPS = {"dot_general", "conv_general_dilated"}
+__all__ = ["HEAVY_OPS", "CapuchinResult", "capuchin_plan", "vanilla_plan",
+           "vdnn_conv_plan"]
 
 
 def vanilla_plan(seq: AccessSequence) -> SchedulingPlan:
-    return SchedulingPlan(job_id=seq.job_id)
+    return build_pipeline("vanilla").plan([seq]).plans[seq.job_id]
 
 
-# ----------------------------------------------------------------------
 def vdnn_conv_plan(seq: AccessSequence,
                    profile: Optional[MachineProfile] = None) -> SchedulingPlan:
     """vDNN_conv: swap out every heavy-layer forward feature map right after
     the layer finishes; swap it back when the op *before* its backward
     consumer starts (static one-layer lookahead prefetch)."""
-    profile = profile or MachineProfile()
-    plan = SchedulingPlan(job_id=seq.job_id)
-    # vDNN offloads the feature maps flowing through heavy layers: tensors
-    # produced by OR consumed by a conv-like op in the forward pass and
-    # reused much later (their backward consumer).
-    heavy_io: set = set()
-    for op in seq.operators:
-        if op.name in HEAVY_OPS:
-            heavy_io.update(op.inputs)
-            heavy_io.update(op.outputs)
-    min_gap = max(4, len(seq.operators) // 10)
-    # vDNN's framework manages layer activations: the feature maps flowing
-    # through its layers are freed after their last (backward) use — but
-    # nothing else is (tensors inside a "layer" and optimizer interim
-    # tensors are invisible to layer granularity; paper §II).
-    last_use = seq.activity_analysis()
-    for tid, spec in seq.tensors.items():
-        if spec.kind is TensorKind.ACTIVATION and tid in heavy_io:
-            plan.release_after_op[tid] = last_use[tid]
-    for tid, spec in seq.tensors.items():
-        if spec.kind is not TensorKind.ACTIVATION or tid not in heavy_io:
-            continue
-        accs = seq.tensor_accesses(tid)
-        tga = seq.tga(tid)
-        if tga is None:
-            continue
-        tuas = [a for a in accs if a.access_type is AccessType.TUA]
-        # feature map reused much later (backward): the vDNN candidate set
-        later = [a for a in tuas if a.op_idx > tga.op_idx + min_gap]
-        if not later:
-            continue
-        first_fwd_use_end = (tuas[0].end_time if tuas else tga.end_time)
-        back = later[-1]
-        dur = profile.swap_time(spec.size_bytes)
-        out_start = max(tga.end_time, first_fwd_use_end)
-        # static prefetch trigger: one op before the backward consumer
-        prefetch_op = max(back.op_idx - 1, tga.op_idx)
-        in_start = seq.op_start[prefetch_op]
-        if in_start <= out_start + dur:
-            continue  # vDNN skips maps it cannot prefetch in time
-        plan.add(ScheduleEvent(
-            event_type=EventType.SWAP_OUT, tensor_id=tid, job_id=seq.job_id,
-            trigger_op=tga.op_idx, delta=out_start - tga.end_time,
-            start=out_start, end=out_start + dur, size_bytes=spec.size_bytes))
-        plan.add(ScheduleEvent(
-            event_type=EventType.SWAP_IN, tensor_id=tid, job_id=seq.job_id,
-            trigger_op=prefetch_op, delta=0.0, start=in_start,
-            end=in_start + dur, size_bytes=spec.size_bytes,
-            target_op=back.op_idx))
-    return plan
+    pipe = build_pipeline("vdnn", profile=profile)
+    return pipe.plan([seq]).plans[seq.job_id]
 
 
-# ----------------------------------------------------------------------
 @dataclasses.dataclass
 class CapuchinResult:
     plan: SchedulingPlan
@@ -106,75 +60,9 @@ def capuchin_plan(seq: AccessSequence,
     choose swap when the transfer hides under the compute between the
     eviction and the next access, else recompute by MSPS.  Schedules only
     within one iteration and only F/B-phase tensors."""
-    profile = profile or MachineProfile()
-    plan = SchedulingPlan(job_id=seq.job_id)
-    report = analyze([seq])
-    # candidates: activations resident at the peak, largest first
-    cands: List[Tuple[str, int]] = []
-    for sid, job, size in report.peak_tensors:
-        spec = None
-        for t in seq.tensors.values():
-            if storage_of(t) == sid and t.kind is TensorKind.ACTIVATION:
-                spec = t
-                break
-        if spec is not None:
-            cands.append((spec.tid, size))
-
-    freed = 0
-    need = max(0, report.peak_bytes - budget_bytes)
-    for tid, size in cands:
-        if freed >= need:
-            break
-        spec = seq.tensors[tid]
-        accs = seq.tensor_accesses(tid)
-        tuas = [a for a in accs if a.access_type is AccessType.TUA]
-        tga = seq.tga(tid)
-        if tga is None or not tuas:
-            continue
-        # the idle window between the access before the peak and the next one
-        prev, nxt = tga, None
-        for a in tuas:
-            if prev.end_time <= report.peak_time <= a.time:
-                nxt = a
-                break
-            prev = a
-        if nxt is None:
-            continue
-        dur = profile.swap_time(spec.size_bytes)
-        window = nxt.time - prev.end_time
-        if window >= 2 * dur:
-            # swap: out right after prev, in right before nxt ("free" —
-            # hidden under compute)
-            plan.add(ScheduleEvent(
-                event_type=EventType.SWAP_OUT, tensor_id=tid,
-                job_id=seq.job_id, trigger_op=prev.op_idx, delta=0.0,
-                start=prev.end_time, end=prev.end_time + dur,
-                size_bytes=spec.size_bytes))
-            plan.add(ScheduleEvent(
-                event_type=EventType.SWAP_IN, tensor_id=tid,
-                job_id=seq.job_id, trigger_op=max(nxt.op_idx - 1, 0),
-                delta=0.0, start=nxt.time - dur, end=nxt.time,
-                size_bytes=spec.size_bytes, target_op=nxt.op_idx))
-            freed += size
-        else:
-            # recompute if producer is cheap (high MSPS) and inputs persist
-            producer = seq.operators[tga.op_idx]
-            inputs_ok = all(
-                seq.tensors[i].kind in PERSISTENT_KINDS
-                or (seq.last_access(i) and seq.last_access(i).end_time >= nxt.time)
-                for i in producer.inputs if i in seq.tensors)
-            if not inputs_ok:
-                continue
-            plan.add(ScheduleEvent(
-                event_type=EventType.RELEASE, tensor_id=tid,
-                job_id=seq.job_id, trigger_op=prev.op_idx, delta=0.0,
-                start=prev.end_time, end=prev.end_time,
-                size_bytes=spec.size_bytes))
-            plan.add(ScheduleEvent(
-                event_type=EventType.RECOMPUTE, tensor_id=tid,
-                job_id=seq.job_id, trigger_op=max(nxt.op_idx - 1, 0),
-                delta=0.0, start=nxt.time - producer.latency, end=nxt.time,
-                size_bytes=spec.size_bytes, target_op=nxt.op_idx,
-                recompute_ops=[tga.op_idx]))
-            freed += size
-    return CapuchinResult(plan=plan)
+    pipe = build_pipeline(
+        "capuchin", profile=profile,
+        config=SchedulerConfig(memory_budget_bytes=budget_bytes))
+    plan = pipe.plan([seq]).plans[seq.job_id]
+    return CapuchinResult(plan=plan,
+                          passive_iterations=max(plan.passive_iterations, 1))

@@ -21,6 +21,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+# row-block width of the quantize-on-offload Pallas kernel
+# (kernels/offload_quant.BLOCK; duplicated so this module stays jax-free)
+OFFLOAD_QUANT_BLOCK = 512
+
 ELEMENTWISE_FLOPS = {
     "add": 1, "sub": 1, "mul": 1, "div": 1, "max": 1, "min": 1, "neg": 1,
     "exp": 8, "log": 8, "tanh": 10, "logistic": 10, "erf": 10, "rsqrt": 4,
@@ -114,6 +118,29 @@ class CostModel:
                     bts += b
         n_iter = eqn.params.get("length", 1) if eqn.primitive.name == "scan" else 1
         return flops * n_iter, bts * n_iter
+
+    # ------------------------------------------------------------------
+    def offload_quant_latency(self, size_bytes: int) -> float:
+        """Latency of the quantize-on-offload Pallas kernel
+        (kernels/offload_quant: per 1×512 tile, absmax → scale → int8 pack).
+
+        The kernel is bandwidth-bound: it reads the source tensor once and
+        writes int8 + one fp32 scale per block (≈1.25× the source bytes
+        moved for fp32 input), plus a small per-block issue overhead.  Used
+        by CompressedOffloadPass to price the compressed swap path and to
+        calibrate MachineProfile.offload_quant_bw."""
+        c = self.calib
+        block_bytes = 4 * OFFLOAD_QUANT_BLOCK
+        blocks = max(1, math.ceil(size_bytes / block_bytes))
+        moved = size_bytes * (1.0 + 0.25 + 4.0 / block_bytes)
+        return c.overhead_s + moved / c.mem_bw + blocks * 2e-9
+
+    def offload_quant_bandwidth(self, probe_bytes: int = 16 << 20) -> float:
+        """Effective source-bytes/s of the quantize path — plug into
+        MachineProfile.offload_quant_bw so the planner's compressed swap
+        times match this device."""
+        return probe_bytes / max(self.offload_quant_latency(probe_bytes),
+                                 1e-12)
 
     # ------------------------------------------------------------------
     def latency(self, flops: float, bytes_accessed: float,

@@ -1,0 +1,393 @@
+"""Shared memory-event engine: one residency/channel/event-semantics core
+for BOTH the discrete-event simulator and the interpreting executor.
+
+The paper's framework has exactly one memory model — device residency changes
+at the five situations of §IV-B, transfers serialize on one host-DMA channel
+(§IV-A), plan events fire as (trigger op, Δt) pairs (§III-D), and a prefetch
+that misses its TUA degrades to a passive swap-in stall.  The seed
+implemented that model twice (simulator.py and executor.py), which is the
+main source of sim-vs-real drift.  This module owns it once:
+
+  * ``DeviceLedger``    — byte-exact device residency accounting keyed by
+                          (job, storage): idempotent alloc/free, global and
+                          per-job peaks, OOM counting, timeline.
+  * ``DmaChannel``      — the single host<->device transfer channel, usable
+                          in *virtual time* (``acquire``: FIFO busy-until,
+                          conflict counting — simulator) and in *real time*
+                          (``transfer``: lock-serialized callable — executor).
+  * ``JobContext``      — per-job static indices (storage aliasing, planned
+                          sizes, trigger->events, last use) + the host-store
+                          set, and the shared DECISION RULES: when a planned
+                          event applies vs is skipped, when an operand needs
+                          a passive swap-in, when a tensor auto-releases.
+  * ``MemoryEngine``    — bundles ledger + channel + jobs and records an
+                          ``EngineTrace`` of every decision, so a simulated
+                          run and a real run of the same plan can be checked
+                          for *identical* residency behaviour (the parity
+                          test in tests/test_engine_parity.py).
+
+Runtimes stay thin: the simulator advances a virtual clock, the executor
+moves real arrays; everything they *decide* comes from here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time as _time
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .access import AccessSequence, TensorKind
+from .peak_analysis import PERSISTENT_KINDS, storage_of
+from .plan import EventType, MachineProfile, ScheduleEvent, SchedulingPlan
+
+
+# ----------------------------------------------------------------------
+# Residency accounting
+# ----------------------------------------------------------------------
+class DeviceLedger:
+    """Logical device-memory accounting shared by every job on the device.
+
+    Keyed by (job_id, storage): an alloc of an already-resident storage and a
+    free of an absent one are no-ops (the five-situation model makes both
+    legal races), so double counting is impossible by construction.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = None,
+                 trace: Optional["EngineTrace"] = None):
+        self.capacity = capacity_bytes
+        self.used = 0
+        self.peak = 0
+        self.oom_events = 0
+        self.lock = threading.Lock()
+        self.timeline: List[Tuple[float, int]] = []
+        self.trace = trace
+        self._resident: Dict[Tuple[str, str], int] = {}
+        self._job_bytes: Dict[str, int] = {}
+        self._job_peak: Dict[str, int] = {}
+
+    # -- queries -------------------------------------------------------
+    def is_resident(self, job_id: str, storage: str) -> bool:
+        return (job_id, storage) in self._resident
+
+    def resident_bytes(self, job_id: str, storage: str) -> int:
+        return self._resident.get((job_id, storage), 0)
+
+    def job_bytes(self, job_id: str) -> int:
+        return self._job_bytes.get(job_id, 0)
+
+    def job_peak(self, job_id: str) -> int:
+        return self._job_peak.get(job_id, 0)
+
+    def resident_storages(self, job_id: str) -> List[str]:
+        return [st for j, st in self._resident if j == job_id]
+
+    # -- mutations -----------------------------------------------------
+    def alloc(self, job_id: str, storage: str, nbytes: int,
+              t: Optional[float] = None) -> bool:
+        """Returns True if bytes were actually added (not already resident)."""
+        with self.lock:
+            key = (job_id, storage)
+            if key in self._resident:
+                return False
+            self._resident[key] = nbytes
+            self.used += nbytes
+            if self.capacity is not None and self.used > self.capacity:
+                self.oom_events += 1
+            self.peak = max(self.peak, self.used)
+            jb = self._job_bytes.get(job_id, 0) + nbytes
+            self._job_bytes[job_id] = jb
+            self._job_peak[job_id] = max(self._job_peak.get(job_id, 0), jb)
+            self.timeline.append(
+                (t if t is not None else _time.perf_counter(), self.used))
+            if self.trace is not None:
+                self.trace.record("alloc", job_id, storage)
+            return True
+
+    def free(self, job_id: str, storage: str,
+             t: Optional[float] = None) -> int:
+        """Returns the bytes freed (0 if the storage was not resident)."""
+        with self.lock:
+            key = (job_id, storage)
+            if key not in self._resident:
+                return 0
+            nbytes = self._resident.pop(key)
+            self.used -= nbytes
+            self._job_bytes[job_id] = self._job_bytes.get(job_id, 0) - nbytes
+            self.timeline.append(
+                (t if t is not None else _time.perf_counter(), self.used))
+            if self.trace is not None:
+                self.trace.record("free", job_id, storage)
+            return nbytes
+
+
+# ----------------------------------------------------------------------
+# The single host-DMA channel
+# ----------------------------------------------------------------------
+class DmaChannel:
+    """One transfer at a time across every job (paper §IV-A).
+
+    Virtual time (simulator): ``acquire(t, dur)`` books the next free slot
+    FIFO and counts cross-job conflicts.  Real time (executor): ``transfer``
+    serializes actual copies behind one lock and accounts busy seconds.
+    """
+
+    def __init__(self):
+        # virtual-time state
+        self.busy_until = 0.0
+        self.conflicts = 0
+        # real-time state
+        self.lock = threading.Lock()
+        self.busy_s = 0.0
+
+    def acquire(self, t: float, dur: float) -> Tuple[float, float]:
+        if t < self.busy_until:
+            self.conflicts += 1
+            t = self.busy_until
+        self.busy_until = t + dur
+        return t, t + dur
+
+    def transfer(self, fn: Callable):
+        with self.lock:
+            t0 = _time.perf_counter()
+            out = fn()
+            self.busy_s += _time.perf_counter() - t0
+            return out
+
+
+class ResidencyView:
+    """Minimal residency oracle the decision rules consult.  DeviceLedger is
+    one (the simulator's); the executor supplies a view over its own value
+    store, because under the multi-workload controller the global ledger
+    outlives a single iteration's executor instance."""
+
+    def __init__(self, store):
+        self._store = store
+
+    def is_resident(self, job_id: str, storage: str) -> bool:
+        return storage in self._store
+
+
+# ----------------------------------------------------------------------
+# Decision trace (sim-vs-real parity)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class TraceRecord:
+    action: str          # alloc|free|swap_out|swap_in|passive_in|recompute|release|skip
+    job_id: str
+    storage: str
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.action, self.job_id, self.storage)
+
+
+class EngineTrace:
+    """Ordered record of residency decisions; two runs of the same plan on
+    the same engine semantics must produce identical traces."""
+
+    def __init__(self):
+        self.records: List[TraceRecord] = []
+        self.lock = threading.Lock()
+        # paused while a runtime does harness work outside the modeled
+        # iteration (e.g. the executor materializing outputs to return
+        # them to Python — steady state would leave them on host)
+        self.paused = False
+
+    def record(self, action: str, job_id: str, storage: str) -> None:
+        if self.paused:
+            return
+        with self.lock:
+            self.records.append(TraceRecord(action, job_id, storage))
+
+    def keys(self) -> List[Tuple[str, str, str]]:
+        return [r.key() for r in self.records]
+
+
+# ----------------------------------------------------------------------
+# Per-job context: static indices + host store + decision rules
+# ----------------------------------------------------------------------
+# what an operator must do about a not-yet-resident input
+INPUT_RESIDENT = "resident"          # nothing to do
+INPUT_AWAIT_PREFETCH = "await"       # planned swap-in in flight: stall on it
+INPUT_PASSIVE_SWAP_IN = "passive"    # host copy exists: blocking swap-in
+INPUT_RECOMPUTE = "recompute"        # regenerate from the producer op
+
+
+class JobContext:
+    """Everything the engine knows statically about one job's plan, plus the
+    host-store set that evolves as the plan runs."""
+
+    def __init__(self, seq: AccessSequence,
+                 plan: Optional[SchedulingPlan] = None,
+                 offset: float = 0.0):
+        self.seq = seq
+        self.plan = plan
+        self.offset = offset
+        self.job_id = seq.job_id
+
+        # storage aliasing + planned byte sizes (max over aliases)
+        self.storage: Dict[str, str] = {}
+        self.sizes: Dict[str, int] = {}
+        for t in seq.tensors.values():
+            st = storage_of(t)
+            self.storage[t.tid] = st
+            self.sizes[st] = max(self.sizes.get(st, 0), t.size_bytes)
+
+        # last use per *storage* (max over aliases; §IV-B situation 5)
+        self.last_use: Dict[str, int] = {}
+        for tid, idx in seq.activity_analysis().items():
+            st = self.storage.get(tid, tid)
+            self.last_use[st] = max(self.last_use.get(st, -1), idx)
+
+        # storages that persist across iterations / must not auto-release
+        self.protected: Set[str] = set()
+        for t in seq.tensors.values():
+            if (t.kind in PERSISTENT_KINDS or t.updates is not None
+                    or t.kind is TensorKind.OUTPUT):
+                self.protected.add(storage_of(t))
+
+        # plan indices
+        self.by_trigger: Dict[int, List[ScheduleEvent]] = {}
+        self.recompute_for: Dict[str, ScheduleEvent] = {}
+        if plan:
+            for ev in plan.events:
+                self.by_trigger.setdefault(ev.trigger_op, []).append(ev)
+                if ev.event_type is EventType.RECOMPUTE:
+                    self.recompute_for[self.st(ev.tensor_id)] = ev
+
+        # host-store membership (the data lives there; values are runtime-
+        # specific — the simulator keeps none, the executor keeps arrays)
+        self.host: Set[str] = set()
+        # storages whose host copy went through the quantize-on-offload
+        # path — fetching them back pays the compressed transfer time
+        self.host_compressed: Set[str] = set()
+
+    # -- helpers -------------------------------------------------------
+    def st(self, tid: str) -> str:
+        return self.storage.get(tid, tid)
+
+    def size_of(self, tid_or_storage: str) -> int:
+        st = self.st(tid_or_storage)
+        return self.sizes.get(st, 0)
+
+    def events_triggered_by(self, op_idx: int) -> List[ScheduleEvent]:
+        return self.by_trigger.get(op_idx, [])
+
+    # -- decision rules (THE shared semantics) -------------------------
+    def input_action(self, residency, tid: str,
+                     prefetch_inflight: bool = False) -> str:
+        """What must happen before an operator may read `tid` (paper
+        Executor semantics: prefetch-wait, else passive swap-in, else
+        recompute from the producer).  `residency` is any object with
+        ``is_resident(job_id, storage)`` — the DeviceLedger or an
+        executor's ResidencyView."""
+        st = self.st(tid)
+        if residency.is_resident(self.job_id, st):
+            return INPUT_RESIDENT
+        if prefetch_inflight:
+            return INPUT_AWAIT_PREFETCH
+        if st in self.host:
+            return INPUT_PASSIVE_SWAP_IN
+        return INPUT_RECOMPUTE
+
+    def should_auto_release(self, tid: str, op_idx: int,
+                            free_at_last_use: bool = True) -> bool:
+        """Situation 5: free after the storage's last access — unless the
+        plan overrides the release point, the tensor persists across
+        iterations (params/opt-state/updated aliases), or it is a job
+        output."""
+        st = self.st(tid)
+        if self.plan is not None:
+            rel_op = self.plan.release_after_op.get(tid)
+            if rel_op is not None:
+                return rel_op == op_idx
+        if not free_at_last_use:
+            return False
+        return self.last_use.get(st) == op_idx and st not in self.protected
+
+    def event_applies(self, residency, ev: ScheduleEvent) -> bool:
+        """Skip rules shared by sim and executor: a swap-out needs a device
+        copy; a swap-in needs a host copy and no device copy (iteration-0
+        cold start of a cross-iteration plan has neither); a planned release
+        is only safe when a host copy or a recompute event can restore the
+        value; a recompute only fires when the value is absent."""
+        st = self.st(ev.tensor_id)
+        resident = residency.is_resident(self.job_id, st)
+        if ev.event_type is EventType.SWAP_OUT:
+            return resident
+        if ev.event_type is EventType.SWAP_IN:
+            return (not resident) and st in self.host
+        if ev.event_type is EventType.RELEASE:
+            return resident and (st in self.host or st in self.recompute_for)
+        if ev.event_type is EventType.RECOMPUTE:
+            return not resident
+        return False
+
+
+# ----------------------------------------------------------------------
+# Engine: ledger + channel + jobs + event timing
+# ----------------------------------------------------------------------
+def event_duration(profile: MachineProfile, ev: ScheduleEvent) -> float:
+    """Planned transfer duration of a swap event.  The planner stamps
+    ``start``/``end`` from the cost model (incl. the quantize-on-offload
+    latency for compressed events); fall back to the profile for
+    hand-constructed events."""
+    if ev.end > ev.start:
+        return ev.end - ev.start
+    return profile.transfer_time(ev.size_bytes, compressed=ev.compressed)
+
+
+class MemoryEngine:
+    """The one memory model both runtimes execute against."""
+
+    def __init__(self, profile: Optional[MachineProfile] = None,
+                 capacity_bytes: Optional[int] = None,
+                 ledger: Optional[DeviceLedger] = None,
+                 channel: Optional[DmaChannel] = None,
+                 trace: bool = False):
+        self.profile = profile or MachineProfile()
+        self.trace = EngineTrace() if trace else None
+        self.ledger = ledger or DeviceLedger(capacity_bytes, trace=self.trace)
+        if trace and self.ledger.trace is None:
+            self.ledger.trace = self.trace
+        self.channel = channel or DmaChannel()
+        self.jobs: Dict[str, JobContext] = {}
+
+    def add_job(self, seq: AccessSequence,
+                plan: Optional[SchedulingPlan] = None,
+                offset: float = 0.0) -> JobContext:
+        job = JobContext(seq, plan, offset)
+        self.jobs[job.job_id] = job
+        return job
+
+    def job(self, job_id: str) -> JobContext:
+        return self.jobs[job_id]
+
+    # -- traced wrappers (decision + accounting in one place) ----------
+    def record(self, action: str, job: JobContext, storage: str) -> None:
+        if self.trace is not None:
+            self.trace.record(action, job.job_id, storage)
+
+    def complete_swap_out(self, job: JobContext, storage: str,
+                          t: Optional[float] = None,
+                          compressed: bool = False) -> int:
+        """Eviction lands: host copy exists, device copy freed."""
+        job.host.add(storage)
+        if compressed:
+            job.host_compressed.add(storage)
+        else:
+            job.host_compressed.discard(storage)
+        self.record("swap_out", job, storage)
+        return self.ledger.free(job.job_id, storage, t)
+
+    def complete_swap_in(self, job: JobContext, storage: str,
+                         t: Optional[float] = None,
+                         passive: bool = False) -> bool:
+        """Prefetch (or passive fetch) lands: device copy restored.  The
+        host copy is retained — later planned release+swap-in pairs reuse
+        it (paper: 'swap-in the rest of accesses greedily')."""
+        self.record("passive_in" if passive else "swap_in", job, storage)
+        return self.ledger.alloc(job.job_id, storage,
+                                 job.sizes.get(storage, 0), t)
+
+    def event_duration(self, ev: ScheduleEvent) -> float:
+        return event_duration(self.profile, ev)

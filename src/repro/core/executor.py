@@ -1,23 +1,30 @@
 """Interpreting Executor (paper §III-D: Executor + Swap Executor).
 
-Runs a captured jaxpr equation-by-equation with an explicit device-residency
-accountant, a host store, and plan-driven swap / release / recompute events —
-the same architecture as the paper's framework (which interprets a tinyflow
-graph op-by-op).  On this container "device" and "host" are both CPU RAM, so
-residency is tracked logically (exact aval bytes) while the *data path* is
-real: swapped tensors are copied into the host store, dropped from the device
-store, and swapped back (or recomputed from their producer equation) before
-use; final outputs are verified against an un-scheduled reference execution.
+Runs a captured jaxpr equation-by-equation against the shared MemoryEngine:
+the engine's DeviceLedger does the byte-exact residency accounting, its
+DmaChannel serializes transfers, and its JobContext supplies every residency
+*decision* (when a planned event applies, when an operand needs a passive
+swap-in or a recompute, when a tensor auto-releases) — the same rules the
+discrete-event simulator runs, so simulated and real executions of a plan
+agree by construction (tests/test_engine_parity.py).
+
+On this container "device" and "host" are both CPU RAM, so residency is
+tracked logically (exact aval bytes) while the *data path* is real: swapped
+tensors are copied into the host store, dropped from the device store, and
+swapped back (or recomputed from their producer equation) before use;
+compressed events round-trip through the Pallas quantize-on-offload kernels.
+Final outputs are verified against an un-scheduled reference execution.
 
 Both stores are keyed by **storage id**: an updated parameter aliases the old
 parameter's storage (paper §IV-B situation 2), so the Opt-phase update
 overwrites in place instead of double-counting.
 
 Two swap modes:
-  * sync  — swap events execute inline at their trigger (deterministic; tests).
+  * sync  — swap events execute inline at their trigger (deterministic;
+            tests and the parity check against simulate(transfer_mode="sync")).
   * async — a Swap Executor thread drains an event queue while compute
-            proceeds, serialized by a channel lock (paper Fig. 4); used by
-            the multi-workload runtime for real overlap and contention.
+            proceeds, serialized by the engine channel (paper Fig. 4); used
+            by the multi-workload runtime for real overlap and contention.
 """
 from __future__ import annotations
 
@@ -31,34 +38,16 @@ import jax
 import numpy as np
 from jax.extend import core as jcore
 
-from .access import AccessSequence, TensorKind
-from .peak_analysis import PERSISTENT_KINDS, storage_of
+from .access import AccessSequence
+from .engine import (INPUT_AWAIT_PREFETCH, INPUT_PASSIVE_SWAP_IN,
+                     INPUT_RECOMPUTE, INPUT_RESIDENT, DeviceLedger,
+                     DmaChannel, MemoryEngine, ResidencyView)
 from .plan import EventType, ScheduleEvent, SchedulingPlan
 
-
-class DeviceAccountant:
-    """Logical device-memory accounting shared by all jobs on the device."""
-
-    def __init__(self, capacity_bytes: Optional[int] = None):
-        self.capacity = capacity_bytes
-        self.used = 0
-        self.peak = 0
-        self.lock = threading.Lock()
-        self.timeline: List[Tuple[float, int]] = []
-        self.oom_events = 0
-
-    def alloc(self, n: int) -> None:
-        with self.lock:
-            self.used += n
-            if self.capacity is not None and self.used > self.capacity:
-                self.oom_events += 1
-            self.peak = max(self.peak, self.used)
-            self.timeline.append((_time.perf_counter(), self.used))
-
-    def free(self, n: int) -> None:
-        with self.lock:
-            self.used -= n
-            self.timeline.append((_time.perf_counter(), self.used))
+# Back-compat names: the seed defined these locally; they now live in (and
+# are shared through) the engine.
+DeviceAccountant = DeviceLedger
+SwapChannel = DmaChannel
 
 
 @dataclasses.dataclass
@@ -69,30 +58,16 @@ class ExecutionStats:
     swap_in_count: int = 0
     passive_swap_ins: int = 0
     recompute_count: int = 0
+    compressed_swaps: int = 0
     op_latencies: Optional[List[float]] = None
     stall_time_s: float = 0.0
 
 
-class SwapChannel:
-    """One transfer at a time, across every job on the host (paper §IV-A)."""
-
-    def __init__(self):
-        self.lock = threading.Lock()
-        self.busy_s = 0.0
-
-    def transfer(self, fn):
-        with self.lock:
-            t0 = _time.perf_counter()
-            out = fn()
-            self.busy_s += _time.perf_counter() - t0
-            return out
-
-
 class AsyncSwapExecutor:
     """Paper Fig. 4: an execution-queue thread pops swap events and runs them
-    on the shared channel."""
+    on the shared engine channel."""
 
-    def __init__(self, channel: SwapChannel):
+    def __init__(self, channel: DmaChannel):
         self.channel = channel
         self.q: "queue.Queue" = queue.Queue()
         self.inflight: Dict[str, threading.Event] = {}
@@ -136,17 +111,21 @@ def _is_dropvar(v) -> bool:
 class JaxprExecutor:
     def __init__(self, closed_jaxpr, seq: AccessSequence,
                  plan: Optional[SchedulingPlan] = None,
-                 accountant: Optional[DeviceAccountant] = None,
-                 channel: Optional[SwapChannel] = None,
+                 accountant: Optional[DeviceLedger] = None,
+                 channel: Optional[DmaChannel] = None,
                  async_swap: bool = False,
                  measure_latency: bool = False,
-                 host_resident_inputs: Optional[Set[str]] = None):
+                 host_resident_inputs: Optional[Set[str]] = None,
+                 engine: Optional[MemoryEngine] = None):
         self.closed = closed_jaxpr
         self.jaxpr = closed_jaxpr.jaxpr
         self.seq = seq
         self.plan = plan
-        self.accountant = accountant or DeviceAccountant()
-        self.channel = channel or SwapChannel()
+        self.engine = engine or MemoryEngine(ledger=accountant,
+                                             channel=channel)
+        self.ctx = self.engine.add_job(seq, plan)
+        self.accountant = self.engine.ledger
+        self.channel = self.engine.channel
         self.async_exec = AsyncSwapExecutor(self.channel) if async_swap else None
         self.measure_latency = measure_latency
         # storages whose *input* value starts on host (previous iteration's
@@ -154,15 +133,10 @@ class JaxprExecutor:
         self.host_resident_inputs: Set[str] = set(host_resident_inputs or ())
 
         self.device: Dict[str, Any] = {}
-        self.host: Dict[str, np.ndarray] = {}
-        # stores keyed by storage id: updated params alias the old param's
-        # storage (paper §IV-B), the Opt update overwrites in place
-        self.storage: Dict[str, str] = {}
-        self.sizes: Dict[str, int] = {}
-        for t in seq.tensors.values():
-            st = storage_of(t)
-            self.storage[t.tid] = st
-            self.sizes[st] = max(self.sizes.get(st, 0), t.size_bytes)
+        self.host: Dict[str, Any] = {}
+        # decisions consult THIS iteration's value store, not the (possibly
+        # longer-lived, controller-shared) ledger
+        self.resident = ResidencyView(self.device)
 
         self.var_by_name: Dict[str, Any] = {}
         self._name: Dict[Any, str] = {}
@@ -173,26 +147,10 @@ class JaxprExecutor:
             for v in eqn.outvars:
                 self._name_of(v)
 
-        # last use per *storage* (any alias)
-        self.last_use: Dict[str, int] = {}
-        for tid, idx in seq.activity_analysis().items():
-            st = self.storage.get(tid, tid)
-            self.last_use[st] = max(self.last_use.get(st, -1), idx)
-
-        self.by_trigger: Dict[int, List[ScheduleEvent]] = {}
-        self.recompute_for: Dict[str, ScheduleEvent] = {}
-        if plan:
-            for ev in plan.events:
-                self.by_trigger.setdefault(ev.trigger_op, []).append(ev)
-                if ev.event_type is EventType.RECOMPUTE:
-                    self.recompute_for[self._st(ev.tensor_id)] = ev
         self.producer: Dict[str, int] = {}
         for i, eqn in enumerate(self.jaxpr.eqns):
             for v in eqn.outvars:
                 self.producer[self._name_of(v)] = i
-        self.outvar_names = {self._name_of(v) for v in self.jaxpr.outvars
-                             if not _is_dropvar(v)
-                             and not isinstance(v, jcore.Literal)}
         self.stats = ExecutionStats(op_latencies=[] if measure_latency else None)
         self._cur_idx = -1
 
@@ -205,7 +163,7 @@ class JaxprExecutor:
         return self._name[v]
 
     def _st(self, name: str) -> str:
-        return self.storage.get(name, name)
+        return self.ctx.st(name)
 
     def _put_device(self, name: str, val: Any) -> None:
         st = self._st(name)
@@ -213,34 +171,61 @@ class JaxprExecutor:
             self.device[st] = val  # in-place overwrite (aliased update)
             return
         self.device[st] = val
-        self.accountant.alloc(self.sizes.get(st, _arr_bytes(val)))
+        self.accountant.alloc(self.ctx.job_id, st,
+                              self.ctx.sizes.get(st, _arr_bytes(val)))
 
     def _drop_device(self, name: str) -> None:
         st = self._st(name)
         if st in self.device:
-            val = self.device.pop(st)
-            self.accountant.free(self.sizes.get(st, _arr_bytes(val)))
+            self.device.pop(st)
+            self.accountant.free(self.ctx.job_id, st)
 
     def _get(self, name: str):
         return self.device.get(self._st(name))
 
     # ------------------------------------------------------------------
-    def _swap_out(self, name: str) -> None:
+    def _host_put(self, st: str, val: Any, compressed: bool) -> None:
+        self.host[st] = val
+        self.ctx.host.add(st)
+        if compressed:
+            self.ctx.host_compressed.add(st)
+        else:
+            self.ctx.host_compressed.discard(st)
+
+    def _host_fetch(self, st: str):
+        """Materialize a device value from the host store (dequantizing a
+        compressed copy through the Pallas kernel)."""
+        val = self.host[st]
+        if st in self.ctx.host_compressed:
+            from repro.kernels.offload_quant import dequantize_blocked
+            q, s, meta = val
+            return dequantize_blocked(q, s, meta)
+        return jax.numpy.asarray(val)
+
+    def _swap_out(self, name: str, compressed: bool = False) -> None:
         st = self._st(name)
         if st not in self.device:
             return
         val = self.device[st]
 
         def do():
-            self.host[st] = np.asarray(val)  # real data path
+            if compressed:
+                from repro.kernels.offload_quant import quantize_blocked
+                self._host_put(st, quantize_blocked(jax.numpy.asarray(val)),
+                               compressed=True)
+            else:
+                self._host_put(st, np.asarray(val), compressed=False)
 
         if self.async_exec:
             done = self.async_exec.submit("out:" + st, do)
             done.wait()  # eviction frees only after the copy lands (paper)
         else:
             self.channel.transfer(do)
+        self.engine.record("swap_out", self.ctx, st)
         self._drop_device(st)
         self.stats.swap_out_count += 1
+        if compressed:
+            self.stats.compressed_swaps += 1
 
     def _swap_in(self, name: str, passive: bool) -> bool:
         """Prefetch from host; returns False when there is nothing to fetch
@@ -252,8 +237,10 @@ class JaxprExecutor:
             return False
 
         def do():
-            self._put_device(st, jax.numpy.asarray(self.host[st]))
+            self._put_device(st, self._host_fetch(st))
 
+        self.engine.record("passive_in" if passive else "swap_in",
+                           self.ctx, st)
         if self.async_exec and not passive:
             self.async_exec.submit("in:" + st, do)
         else:
@@ -267,17 +254,22 @@ class JaxprExecutor:
 
     def _ensure_input(self, name: str) -> None:
         """An operator needs `name` now: prefetch-wait, passive swap-in, or
-        recompute from the producer equation (paper Executor semantics)."""
+        recompute from the producer equation (engine decision rules)."""
         st = self._st(name)
-        if st in self.device:
+        inflight = bool(self.async_exec
+                        and ("in:" + st) in self.async_exec.inflight)
+        action = self.ctx.input_action(self.resident, name,
+                                       prefetch_inflight=inflight)
+        if action is INPUT_RESIDENT:
             return
-        if self.async_exec and ("in:" + st) in self.async_exec.inflight:
+        if action is INPUT_AWAIT_PREFETCH:
             ts = _time.perf_counter()
             self.async_exec.inflight["in:" + st].wait()
             self.stats.stall_time_s += _time.perf_counter() - ts
             if st in self.device:
                 return
-        if self._swap_in(st, passive=True):
+            action = self.ctx.input_action(self.resident, name)
+        if action is INPUT_PASSIVE_SWAP_IN and self._swap_in(st, passive=True):
             return
         self._recompute(name)
 
@@ -303,6 +295,8 @@ class JaxprExecutor:
     # ------------------------------------------------------------------
     def run(self, *args: Any) -> Any:
         t_start = _time.perf_counter()
+        # absorb host values preloaded by the controller between iterations
+        self.ctx.host |= set(self.host)
         flat, _ = jax.tree.flatten(args)
         assert len(flat) == len(self.jaxpr.invars), \
             f"expected {len(self.jaxpr.invars)} leaves, got {len(flat)}"
@@ -312,7 +306,7 @@ class JaxprExecutor:
             if st in self.host_resident_inputs:
                 # previous iteration parked this storage on host; it enters
                 # the device only via its planned swap-in (or passively)
-                self.host[st] = np.asarray(val)
+                self._host_put(st, np.asarray(val), compressed=False)
             else:
                 self._put_device(nm, val)
         for v, val in zip(self.jaxpr.constvars, self.closed.consts):
@@ -334,47 +328,42 @@ class JaxprExecutor:
                 jax.block_until_ready(outs)
                 self.stats.op_latencies.append(_time.perf_counter() - t0)
             for v, o in zip(eqn.outvars, outs):
-                if not _is_dropvar(v):
-                    self._put_device(self._name_of(v), o)
+                # dropped results still occupy their buffer until the op's
+                # releases run — the allocator model both runtimes share
+                self._put_device(self._name_of(v), o)
 
-            # releases: plan overrides, then free-at-last-use
+            # releases: plan overrides, then free-at-last-use (engine rule)
             for v in list(eqn.invars) + list(eqn.outvars):
-                if isinstance(v, jcore.Literal) or _is_dropvar(v):
+                if isinstance(v, jcore.Literal):
                     continue
                 nm = self._name_of(v)
-                st = self._st(nm)
-                spec = self.seq.tensors.get(nm)
-                rel_op = (self.plan.release_after_op.get(nm)
-                          if self.plan else None)
-                if rel_op is not None and rel_op == idx:
-                    self._drop_device(nm)
-                    continue
-                if (self.last_use.get(st) == idx
-                        and (spec is None or (spec.kind not in PERSISTENT_KINDS
-                                              and spec.updates is None))
-                        and st not in self.outvar_names
-                        and nm not in self.outvar_names):
+                if self.ctx.should_auto_release(nm, idx):
+                    self.engine.record("release", self.ctx, self._st(nm))
                     self._drop_device(nm)
 
-            # plan events triggered by this op
-            for ev in self.by_trigger.get(idx, []):
+            # plan events triggered by this op (engine skip rules)
+            for ev in self.ctx.events_triggered_by(idx):
                 st = self._st(ev.tensor_id)
+                if not self.ctx.event_applies(self.resident, ev):
+                    continue
                 if ev.event_type is EventType.SWAP_OUT:
-                    self._swap_out(ev.tensor_id)
+                    self._swap_out(ev.tensor_id, compressed=ev.compressed)
                 elif ev.event_type is EventType.SWAP_IN:
-                    # no-op on cold start (nothing on host yet)
                     self._swap_in(ev.tensor_id, passive=False)
                 elif ev.event_type is EventType.RELEASE:
-                    # only release when a host copy or a recompute plan can
-                    # restore the value (paper Executor safety check)
-                    if st in self.host or st in self.recompute_for:
-                        self._drop_device(ev.tensor_id)
+                    self.engine.record("release", self.ctx, st)
+                    self._drop_device(ev.tensor_id)
                 elif ev.event_type is EventType.RECOMPUTE:
-                    if st not in self.device:
-                        self._recompute(ev.tensor_id)
+                    self.engine.record("recompute", self.ctx, st)
+                    self._recompute(ev.tensor_id)
 
         if self.async_exec:
             self.async_exec.drain()
+        # fetching outputs back to Python is harness work, not part of the
+        # modeled iteration (steady state leaves swapped outputs on host) —
+        # pause the trace for it, resume afterwards for later iterations
+        if self.engine.trace is not None:
+            self.engine.trace.paused = True
         outs = []
         for v in self.jaxpr.outvars:
             if isinstance(v, jcore.Literal):
@@ -384,6 +373,8 @@ class JaxprExecutor:
             if self._get(nm) is None:
                 self._ensure_input(nm)
             outs.append(self._get(nm))
+        if self.engine.trace is not None:
+            self.engine.trace.paused = False
         self.stats.wall_time_s = _time.perf_counter() - t_start
         self.stats.peak_bytes = self.accountant.peak
         return outs

@@ -23,7 +23,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .access import AccessSequence
 from .cost_model import CostModel, EWMATracker
-from .executor import DeviceAccountant, JaxprExecutor, SwapChannel
+from .engine import DeviceLedger, DmaChannel, MemoryEngine
+from .executor import JaxprExecutor
 from .graph_capture import capture_train_step
 from .plan import MachineProfile, SchedulingPlan
 from .scheduler import MemoryScheduler, SchedulerConfig
@@ -55,8 +56,11 @@ class GlobalController:
         self.profile = profile or MachineProfile()
         self.scheduler = MemoryScheduler(self.profile, scheduler_config)
         self.cost_model = cost_model or CostModel()
-        self.accountant = DeviceAccountant(device_capacity)
-        self.channel = SwapChannel()
+        # one engine ledger + DMA channel shared by every job on the device
+        self.engine = MemoryEngine(self.profile,
+                                   capacity_bytes=device_capacity)
+        self.accountant: DeviceLedger = self.engine.ledger
+        self.channel: DmaChannel = self.engine.channel
         self.async_swap = async_swap
         self.jobs: Dict[str, JobHandle] = {}
         self.ewma: Dict[str, EWMATracker] = {}
@@ -118,20 +122,27 @@ class GlobalController:
                         ex.close()
                     # carry the host store across plan versions
                     old_host = ex.host if ex is not None else {}
+                    old_compressed = (set(ex.ctx.host_compressed)
+                                      if ex is not None else set())
                     ex = JaxprExecutor(
                         handle.closed_jaxpr, handle.seq, plan,
                         accountant=self.accountant, channel=self.channel,
                         async_swap=self.async_swap, measure_latency=True)
                     ex.host.update(old_host)
+                    ex.ctx.host_compressed |= old_compressed
                     version_used = version
                 else:
                     # fresh per-iteration stores, persistent host cache
+                    # (incl. which parked copies are quantized — fetching
+                    # them must go through the dequantize path)
                     host = ex.host
+                    compressed = set(ex.ctx.host_compressed)
                     ex = JaxprExecutor(
                         handle.closed_jaxpr, handle.seq, plan,
                         accountant=self.accountant, channel=self.channel,
                         async_swap=self.async_swap, measure_latency=True)
                     ex.host.update(host)
+                    ex.ctx.host_compressed |= compressed
                 t0 = _time.perf_counter()
                 outs = ex.run(*args)
                 handle.step_times.append(_time.perf_counter() - t0)

@@ -1,0 +1,645 @@
+"""Composable planning passes + the Pipeline that drives them (paper §IV-F).
+
+TENSILE's core claim (Alg. 3) is that swap and recomputation are
+*interchangeable actions scheduled per-tensor under one peak-analysis loop*.
+This module makes that loop a first-class, policy-agnostic driver:
+
+  * ``PlanningPass``  — the protocol every planning strategy implements:
+        ``run(seq, plan, report, profile) -> plan``
+    plus an incremental interface (``setup``/``gate``/``step``) the Pipeline
+    uses to interleave passes one greedy action at a time, exactly as
+    Algorithm 3 interleaves swapping and recomputation.
+  * ``Pipeline``      — owns the convergence loop (patience, minimum
+    improvement, iteration cap) and the vanilla/planned peak bookkeeping.
+    Passes are tried in order; a pass that can no longer make progress is
+    retired; the loop ends when no gated pass remains or the peak stagnates.
+
+Every policy in the repo — the paper's TENSILE scheduler and both
+reproduced baselines — is now a pass configuration over this one engine:
+
+    vanilla  = Pipeline([])
+    vdnn     = Pipeline([VdnnSwapPass])
+    capuchin = Pipeline([PassiveProfilePass, SwapPass(style="capuchin"),
+                         RecomputePass(style="capuchin")])
+    tensile  = Pipeline([SwapPass(), RecomputePass()], cross_iteration=True)
+    tensile+compressed-offload
+             = Pipeline([SwapPass(), CompressedOffloadPass(),
+                         RecomputePass()], cross_iteration=True)
+
+New policies are one-file additions: implement the protocol, register a
+configuration in ``PIPELINES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from .access import AccessSequence, AccessType, TensorKind
+from .peak_analysis import PERSISTENT_KINDS, PeakReport, analyze, storage_of
+from .plan import (EventType, MachineProfile, ScheduleEvent, SchedulingPlan)
+from .recompute_planner import RecomputePlanner, plan_one_recompute
+from .swap_planner import SwapPlanner, plan_one_swap
+
+HEAVY_OPS = {"dot_general", "conv_general_dilated"}
+
+
+# ----------------------------------------------------------------------
+# Configuration + result (Alg. 3 knobs; shared with MemoryScheduler)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class SchedulerConfig:
+    memory_budget_bytes: Optional[int] = None   # None: device size from profile
+    max_swap_ratio: float = 1.0                 # per-job MSR limit (can be dict)
+    per_job_swap_ratio: Optional[Dict[str, float]] = None
+    min_improvement: float = 5e-4               # 0.05 % (paper Alg 3)
+    patience_iters: int = 100
+    patience_window: int = 3
+    update_threshold: float = 0.2               # latency-drift replan trigger
+    ewma_alpha: float = 0.3
+    max_iterations: int = 10000
+    # quantize-on-offload: only tensors at or below this size take the
+    # compressed path (confines int8 error to small peak contributors)
+    compressed_max_bytes: int = 64 * 2 ** 20
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    plans: Dict[str, SchedulingPlan]
+    initial_report: PeakReport
+    final_report: PeakReport
+    iterations: int
+    swaps_scheduled: int
+    recomputes_scheduled: int
+    plan_wallclock_s: float
+    pass_steps: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def memory_saving_ratio(self) -> float:
+        """MSR against the merged vanilla peak (paper §V-A)."""
+        v = self.initial_report.peak_bytes
+        return (v - self.final_report.peak_bytes) / v if v else 0.0
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Everything passes share while a Pipeline converges."""
+    jobs: Dict[str, AccessSequence]
+    plans: Dict[str, SchedulingPlan]
+    profile: MachineProfile
+    config: SchedulerConfig
+    offsets: Dict[str, float]
+    budget: int
+    cross_iteration: bool = True
+    shared: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def solo(seq: AccessSequence, plan: SchedulingPlan,
+             profile: Optional[MachineProfile],
+             config: Optional[SchedulerConfig] = None) -> "PipelineState":
+        profile = profile or MachineProfile()
+        cfg = config or SchedulerConfig()
+        return PipelineState(
+            jobs={seq.job_id: seq}, plans={seq.job_id: plan},
+            profile=profile, config=cfg, offsets={},
+            budget=(cfg.memory_budget_bytes
+                    if cfg.memory_budget_bytes is not None
+                    else profile.device_memory_bytes))
+
+
+# ----------------------------------------------------------------------
+# The pass protocol
+# ----------------------------------------------------------------------
+class PlanningPass:
+    """A composable planning strategy.
+
+    Protocol: ``run(seq, plan, report, profile) -> plan`` plans one job to
+    exhaustion.  Pipelines use the finer-grained hooks instead — ``setup``
+    binds the pass to the job set, ``gate`` says whether it may act under
+    the current report, ``step`` performs ONE greedy action and returns
+    whether it changed any plan — so several passes interleave under one
+    convergence loop (Alg. 3's swap/recompute interleaving generalized).
+    """
+
+    name = "pass"
+    kind = "swap"          # counted as swap or recompute in ScheduleResult
+
+    def setup(self, state: PipelineState) -> None:
+        self.state = state
+
+    def gate(self, report: PeakReport) -> bool:
+        return True
+
+    def step(self, report: PeakReport) -> bool:
+        raise NotImplementedError
+
+    def run(self, seq: AccessSequence, plan: SchedulingPlan,
+            report: PeakReport,
+            profile: Optional[MachineProfile] = None) -> SchedulingPlan:
+        """Standalone single-job entry point (the protocol)."""
+        self.setup(PipelineState.solo(seq, plan, profile))
+        while self.gate(report) and self.step(report):
+            report = analyze([seq], plans={seq.job_id: plan})
+        return plan
+
+
+# ----------------------------------------------------------------------
+# TENSILE passes (Algorithms 1 & §IV-D wrapped as passes)
+# ----------------------------------------------------------------------
+class SwapPass(PlanningPass):
+    """Greedy swap scheduling (paper Alg. 1): one MPT tensor per step,
+    largest first across all jobs.  ``style="capuchin"`` instead replays the
+    swap half of the Capuchin candidate walk prepared by
+    PassiveProfilePass."""
+
+    name = "swap"
+    kind = "swap"
+
+    def __init__(self, style: str = "tensile"):
+        self.style = style
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        cfg = state.config
+        if self.style == "tensile":
+            self.planners = {
+                j: SwapPlanner(state.jobs[j], state.plans[j], state.profile,
+                               (cfg.per_job_swap_ratio or {}).get(
+                                   j, cfg.max_swap_ratio),
+                               cross_iteration=state.cross_iteration)
+                for j in state.jobs}
+
+    def step(self, report: PeakReport) -> bool:
+        if self.style == "capuchin":
+            return _capuchin_step(self.state, want="swap")
+        return plan_one_swap(self.planners, report)
+
+
+class RecomputePass(PlanningPass):
+    """MSPS-ranked recomputation (paper §IV-D): gated on the predicted peak
+    still exceeding the budget, runs only after swapping is exhausted (the
+    Pipeline's pass order encodes that, exactly like Alg. 3)."""
+
+    name = "recompute"
+    kind = "recompute"
+
+    def __init__(self, style: str = "tensile"):
+        self.style = style
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        if self.style == "tensile":
+            self.planners = {
+                j: RecomputePlanner(state.jobs[j], state.plans[j])
+                for j in state.jobs}
+
+    def gate(self, report: PeakReport) -> bool:
+        if self.style == "capuchin":
+            return True
+        return report.peak_bytes >= self.state.budget
+
+    def step(self, report: PeakReport) -> bool:
+        if self.style == "capuchin":
+            return _capuchin_step(self.state, want="recompute")
+        return plan_one_recompute(self.planners, report)
+
+
+class CompressedOffloadPass(PlanningPass):
+    """Beyond-paper policy: tensors still causing the peak after plain
+    swapping get another chance through the Pallas quantize-on-offload path
+    (kernels/offload_quant) — the channel booking shrinks to the compressed
+    transfer time (plan.MachineProfile.compressed_swap_time, calibrated by
+    cost_model.offload_quant_latency), so windows too tight for a full-
+    precision swap can still hide an int8 copy.  Restricted to tensors at or
+    below ``compressed_max_bytes`` to confine quantization error."""
+
+    name = "compressed-offload"
+    kind = "swap"
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        self.planners = None   # built lazily: picks up prior passes' events
+
+    def _build(self) -> None:
+        state = self.state
+        cfg = state.config
+        self.planners = {
+            j: SwapPlanner(state.jobs[j], state.plans[j], state.profile,
+                           (cfg.per_job_swap_ratio or {}).get(
+                               j, cfg.max_swap_ratio),
+                           cross_iteration=state.cross_iteration,
+                           compressed=True,
+                           max_tensor_bytes=cfg.compressed_max_bytes)
+            for j in state.jobs}
+
+    def step(self, report: PeakReport) -> bool:
+        if self.planners is None:
+            self._build()
+        state = self.state
+        seqs = list(state.jobs.values())
+        # a swap pair can also EXTEND residency (the swap-in supersedes the
+        # activity-analysis release), so unlike plain Alg-1 greed each
+        # compressed step is verified against the peak and rolled back if
+        # it does not help; rejected tensors stay marked and are not retried
+        while True:
+            before = {j: len(state.plans[j].events) for j in state.plans}
+            if not plan_one_swap(self.planners, report):
+                return False
+            new_report = analyze(seqs, plans=state.plans,
+                                 offsets=state.offsets)
+            # strict improvement only: a zero-saving compressed swap still
+            # costs two transfers plus a lossy int8 round trip
+            if new_report.peak_bytes < report.peak_bytes:
+                return True
+            for j, n in before.items():
+                plan = state.plans[j]
+                added = plan.events[n:]
+                for ev in added:
+                    if ev.event_type in (EventType.SWAP_OUT,
+                                         EventType.SWAP_IN):
+                        try:
+                            self.planners[j].channel.release(
+                                ev.start, ev.duration)
+                        except ValueError:
+                            pass
+                    plan.remove(ev)
+
+
+# ----------------------------------------------------------------------
+# vDNN_conv (Rhu et al., MICRO'16) as a one-shot pass
+# ----------------------------------------------------------------------
+class VdnnSwapPass(PlanningPass):
+    """*Layer* granularity: offload the feature maps of the heavy
+    ("conv-like") layers after their forward use, static swap-in (prefetch
+    when the previous backward layer starts).  No recomputation, no
+    Opt-phase events, single-workload design — one shot per job."""
+
+    name = "vdnn-swap"
+    kind = "swap"
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        self._done = False
+
+    def step(self, report: PeakReport) -> bool:
+        if self._done:
+            return False
+        self._done = True
+        changed = False
+        for j, seq in self.state.jobs.items():
+            changed |= self._plan_job(seq, self.state.plans[j],
+                                      self.state.profile)
+        return changed
+
+    @staticmethod
+    def _plan_job(seq: AccessSequence, plan: SchedulingPlan,
+                  profile: MachineProfile) -> bool:
+        changed = False
+        # vDNN offloads the feature maps flowing through heavy layers:
+        # tensors produced by OR consumed by a conv-like op in the forward
+        # pass and reused much later (their backward consumer).
+        heavy_io: set = set()
+        for op in seq.operators:
+            if op.name in HEAVY_OPS:
+                heavy_io.update(op.inputs)
+                heavy_io.update(op.outputs)
+        min_gap = max(4, len(seq.operators) // 10)
+        # vDNN's framework manages layer activations: the feature maps
+        # flowing through its layers are freed after their last (backward)
+        # use — but nothing else is (tensors inside a "layer" and optimizer
+        # interim tensors are invisible to layer granularity; paper §II).
+        last_use = seq.activity_analysis()
+        for tid, spec in seq.tensors.items():
+            if spec.kind is TensorKind.ACTIVATION and tid in heavy_io:
+                plan.release_after_op[tid] = last_use[tid]
+                changed = True
+        for tid, spec in seq.tensors.items():
+            if spec.kind is not TensorKind.ACTIVATION or tid not in heavy_io:
+                continue
+            accs = seq.tensor_accesses(tid)
+            tga = seq.tga(tid)
+            if tga is None:
+                continue
+            tuas = [a for a in accs if a.access_type is AccessType.TUA]
+            # feature map reused much later (backward): the vDNN candidates
+            later = [a for a in tuas if a.op_idx > tga.op_idx + min_gap]
+            if not later:
+                continue
+            first_fwd_use_end = (tuas[0].end_time if tuas else tga.end_time)
+            back = later[-1]
+            dur = profile.swap_time(spec.size_bytes)
+            out_start = max(tga.end_time, first_fwd_use_end)
+            # static prefetch trigger: one op before the backward consumer
+            prefetch_op = max(back.op_idx - 1, tga.op_idx)
+            in_start = seq.op_start[prefetch_op]
+            if in_start <= out_start + dur:
+                continue  # vDNN skips maps it cannot prefetch in time
+            plan.add(ScheduleEvent(
+                event_type=EventType.SWAP_OUT, tensor_id=tid,
+                job_id=seq.job_id, trigger_op=tga.op_idx,
+                delta=out_start - tga.end_time, start=out_start,
+                end=out_start + dur, size_bytes=spec.size_bytes))
+            plan.add(ScheduleEvent(
+                event_type=EventType.SWAP_IN, tensor_id=tid,
+                job_id=seq.job_id, trigger_op=prefetch_op, delta=0.0,
+                start=in_start, end=in_start + dur,
+                size_bytes=spec.size_bytes, target_op=back.op_idx))
+            changed = True
+        return changed
+
+
+# ----------------------------------------------------------------------
+# Capuchin (Peng et al., ASPLOS'20): passive profiling + candidate walk
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class _CapuchinAction:
+    job_id: str
+    mode: str                      # "swap" | "recompute"
+    events: List[ScheduleEvent]
+
+
+class PassiveProfilePass(PlanningPass):
+    """Capuchin's observation epoch: one passive-mode iteration per job
+    (counted into its overhead by the benchmarks), after which the eviction
+    candidates and their swap-vs-recompute decisions are fixed — Capuchin
+    schedules *within* one iteration from per-job profiles, so each job is
+    profiled independently of the merged timeline."""
+
+    name = "passive-profile"
+    kind = "swap"
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        self._done = False
+
+    def step(self, report: PeakReport) -> bool:
+        if self._done:
+            return False
+        self._done = True
+        actions: List[_CapuchinAction] = []
+        for j, seq in self.state.jobs.items():
+            actions.extend(_capuchin_decisions(
+                seq, self.state.budget, self.state.profile))
+        self.state.shared["capuchin_actions"] = actions
+        for plan in self.state.plans.values():
+            plan.passive_iterations = 1
+        return True
+
+
+def _capuchin_decisions(seq: AccessSequence, budget_bytes: int,
+                        profile: MachineProfile) -> List["_CapuchinAction"]:
+    """The Capuchin candidate walk: evict peak-contributing activations,
+    largest first, until the predicted need is covered; per candidate,
+    choose swap when the transfer hides under the compute between the
+    eviction and the next access, else recompute by MSPS.  Decisions depend
+    only on the passive profile, so they are fixed up front; the Pipeline
+    applies them one per step through SwapPass/RecomputePass."""
+    report = analyze([seq])
+    cands: List[Tuple[str, int]] = []
+    for sid, job, size in report.peak_tensors:
+        spec = None
+        for t in seq.tensors.values():
+            if storage_of(t) == sid and t.kind is TensorKind.ACTIVATION:
+                spec = t
+                break
+        if spec is not None:
+            cands.append((spec.tid, size))
+
+    actions: List[_CapuchinAction] = []
+    freed = 0
+    need = max(0, report.peak_bytes - budget_bytes)
+    for tid, size in cands:
+        if freed >= need:
+            break
+        spec = seq.tensors[tid]
+        accs = seq.tensor_accesses(tid)
+        tuas = [a for a in accs if a.access_type is AccessType.TUA]
+        tga = seq.tga(tid)
+        if tga is None or not tuas:
+            continue
+        # the idle window between the access before the peak and the next
+        prev, nxt = tga, None
+        for a in tuas:
+            if prev.end_time <= report.peak_time <= a.time:
+                nxt = a
+                break
+            prev = a
+        if nxt is None:
+            continue
+        dur = profile.swap_time(spec.size_bytes)
+        window = nxt.time - prev.end_time
+        if window >= 2 * dur:
+            # swap: out right after prev, in right before nxt ("free" —
+            # hidden under compute)
+            actions.append(_CapuchinAction(seq.job_id, "swap", [
+                ScheduleEvent(
+                    event_type=EventType.SWAP_OUT, tensor_id=tid,
+                    job_id=seq.job_id, trigger_op=prev.op_idx, delta=0.0,
+                    start=prev.end_time, end=prev.end_time + dur,
+                    size_bytes=spec.size_bytes),
+                ScheduleEvent(
+                    event_type=EventType.SWAP_IN, tensor_id=tid,
+                    job_id=seq.job_id, trigger_op=max(nxt.op_idx - 1, 0),
+                    delta=0.0, start=nxt.time - dur, end=nxt.time,
+                    size_bytes=spec.size_bytes, target_op=nxt.op_idx)]))
+            freed += size
+        else:
+            # recompute if producer is cheap (high MSPS) and inputs persist
+            producer = seq.operators[tga.op_idx]
+            inputs_ok = all(
+                seq.tensors[i].kind in PERSISTENT_KINDS
+                or (seq.last_access(i)
+                    and seq.last_access(i).end_time >= nxt.time)
+                for i in producer.inputs if i in seq.tensors)
+            if not inputs_ok:
+                continue
+            actions.append(_CapuchinAction(seq.job_id, "recompute", [
+                ScheduleEvent(
+                    event_type=EventType.RELEASE, tensor_id=tid,
+                    job_id=seq.job_id, trigger_op=prev.op_idx, delta=0.0,
+                    start=prev.end_time, end=prev.end_time,
+                    size_bytes=spec.size_bytes),
+                ScheduleEvent(
+                    event_type=EventType.RECOMPUTE, tensor_id=tid,
+                    job_id=seq.job_id, trigger_op=max(nxt.op_idx - 1, 0),
+                    delta=0.0, start=nxt.time - producer.latency,
+                    end=nxt.time, size_bytes=spec.size_bytes,
+                    target_op=nxt.op_idx, recompute_ops=[tga.op_idx])]))
+            freed += size
+    return actions
+
+
+def _capuchin_step(state: PipelineState, want: str) -> bool:
+    """Apply the next prepared Capuchin action of the wanted mode."""
+    actions = state.shared.get("capuchin_actions", [])
+    key = f"capuchin_cursor_{want}"
+    i = state.shared.get(key, 0)
+    while i < len(actions):
+        act = actions[i]
+        i += 1
+        if act.mode != want:
+            continue
+        state.shared[key] = i
+        for ev in act.events:
+            state.plans[act.job_id].add(ev)
+        return True
+    state.shared[key] = i
+    return False
+
+
+# ----------------------------------------------------------------------
+# The Pipeline: Algorithm 3's convergence loop over ordered passes
+# ----------------------------------------------------------------------
+PassSpec = Union[PlanningPass, type]
+
+
+class Pipeline:
+    """Ordered passes under one peak-analysis convergence loop.
+
+    Per iteration the first still-active pass whose ``gate`` admits the
+    current report takes one greedy step; a pass whose step makes no change
+    is retired.  Stops when no pass is eligible, when the iteration cap is
+    hit, or when the average peak reduction over ``patience_window``
+    iterations falls below ``min_improvement`` after ``patience_iters``
+    iterations (paper Alg 3 line 4).
+    """
+
+    def __init__(self, passes: Sequence[PassSpec], *,
+                 name: str = "pipeline",
+                 cross_iteration: bool = False,
+                 profile: Optional[MachineProfile] = None,
+                 config: Optional[SchedulerConfig] = None,
+                 free_at_last_use: bool = True,
+                 passive_iterations: int = 0):
+        self.pass_specs = list(passes)
+        self.name = name
+        self.cross_iteration = cross_iteration
+        self.profile = profile or MachineProfile()
+        self.config = config or SchedulerConfig()
+        # evaluation semantics of the policy's host framework:
+        # vDNN/vanilla platforms have no activity-analysis releases
+        self.free_at_last_use = free_at_last_use
+        self.passive_iterations = passive_iterations
+
+    def _instantiate(self) -> List[PlanningPass]:
+        return [p() if isinstance(p, type) else p for p in self.pass_specs]
+
+    # ------------------------------------------------------------------
+    def plan(self, seqs: Sequence[AccessSequence],
+             offsets: Optional[Dict[str, float]] = None) -> ScheduleResult:
+        t0 = _time.perf_counter()
+        cfg = self.config
+        offsets = offsets or {}
+        jobs = {s.job_id: s for s in seqs}
+        plans = {j: SchedulingPlan(job_id=j) for j in jobs}
+        budget = (cfg.memory_budget_bytes
+                  if cfg.memory_budget_bytes is not None
+                  else self.profile.device_memory_bytes)
+        state = PipelineState(jobs=jobs, plans=plans, profile=self.profile,
+                              config=cfg, offsets=dict(offsets),
+                              budget=budget,
+                              cross_iteration=self.cross_iteration)
+        passes = self._instantiate()
+        for p in passes:
+            p.setup(state)
+
+        # vanilla normalizer (paper platform: no free-at-last-use)
+        initial = analyze(seqs, plans=None, offsets=offsets,
+                          free_at_last_use=False)
+        # working reports use the policy's own platform semantics —
+        # vanilla/vdnn frameworks have no activity-analysis releases
+        falu = self.free_at_last_use
+        report = analyze(seqs, plans=plans, offsets=offsets,
+                         free_at_last_use=falu)
+        history: List[int] = [report.peak_bytes]
+        active = [True] * len(passes)
+        steps: Dict[str, int] = {p.name: 0 for p in passes}
+        iters = 0
+
+        while any(active):
+            if iters >= cfg.max_iterations:
+                break
+            # paper Alg 3 line 4: early stop on stagnation
+            if iters > cfg.patience_iters and len(history) > cfg.patience_window:
+                prev = history[-cfg.patience_window - 1]
+                cur = history[-1]
+                if prev > 0 and (prev - cur) / prev < cfg.min_improvement:
+                    break
+            idx = next((i for i, p in enumerate(passes)
+                        if active[i] and p.gate(report)), None)
+            if idx is None:
+                break
+            if passes[idx].step(report):
+                steps[passes[idx].name] += 1
+            else:
+                active[idx] = False
+            report = analyze(seqs, plans=plans, offsets=offsets,
+                             free_at_last_use=falu)
+            history.append(report.peak_bytes)
+            iters += 1
+
+        wall = _time.perf_counter() - t0
+        for j in jobs:
+            plans[j].vanilla_peak_bytes = initial.per_job_peak.get(j, 0)
+            plans[j].planned_peak_bytes = report.per_job_peak.get(j, 0)
+            plans[j].plan_wallclock_s = wall
+        # counts reflect the PLANS, not the pass bookkeeping: one per
+        # distinct swapped tensor (seed semantics) / recompute event
+        n_swaps = sum(len(p.swapped_tensors()) for p in plans.values())
+        n_recs = sum(len(p.recomputes()) for p in plans.values())
+        return ScheduleResult(
+            plans=plans, initial_report=initial, final_report=report,
+            iterations=iters, swaps_scheduled=n_swaps,
+            recomputes_scheduled=n_recs, plan_wallclock_s=wall,
+            pass_steps=steps)
+
+
+# ----------------------------------------------------------------------
+# Policy registry: every planner in the repo, by name
+# ----------------------------------------------------------------------
+def _vanilla(profile=None, config=None) -> Pipeline:
+    return Pipeline([], name="vanilla", profile=profile, config=config,
+                    free_at_last_use=False)
+
+
+def _vdnn(profile=None, config=None) -> Pipeline:
+    return Pipeline([VdnnSwapPass], name="vdnn", profile=profile,
+                    config=config, free_at_last_use=False)
+
+
+def _capuchin(profile=None, config=None) -> Pipeline:
+    return Pipeline([PassiveProfilePass(), SwapPass(style="capuchin"),
+                     RecomputePass(style="capuchin")],
+                    name="capuchin", profile=profile, config=config,
+                    passive_iterations=1)
+
+
+def _tensile(profile=None, config=None) -> Pipeline:
+    return Pipeline([SwapPass(), RecomputePass()], name="tensile",
+                    cross_iteration=True, profile=profile, config=config)
+
+
+def _tensile_compressed(profile=None, config=None) -> Pipeline:
+    return Pipeline([SwapPass(), CompressedOffloadPass(), RecomputePass()],
+                    name="tensile+compressed-offload", cross_iteration=True,
+                    profile=profile, config=config)
+
+
+PIPELINES: Dict[str, Callable[..., Pipeline]] = {
+    "vanilla": _vanilla,
+    "vdnn": _vdnn,
+    "capuchin": _capuchin,
+    "tensile": _tensile,
+    "tensile+compressed-offload": _tensile_compressed,
+}
+
+
+def build_pipeline(name: str,
+                   profile: Optional[MachineProfile] = None,
+                   config: Optional[SchedulerConfig] = None) -> Pipeline:
+    try:
+        factory = PIPELINES[name]
+    except KeyError:
+        raise KeyError(f"unknown pipeline {name!r}; "
+                       f"known: {sorted(PIPELINES)}") from None
+    return factory(profile=profile, config=config)

@@ -36,6 +36,10 @@ class ScheduleEvent:
     recompute_ops: Optional[List[int]] = None
     # True for events scheduled across the iteration boundary (paper Fig 1(c))
     crosses_iteration: bool = False
+    # True when the transfer goes through the quantize-on-offload path
+    # (kernels/offload_quant): fewer bytes on the DMA channel, plus the
+    # quantize/dequantize kernel latency (cost_model.offload_quant_latency)
+    compressed: bool = False
 
     @property
     def duration(self) -> float:
@@ -66,6 +70,9 @@ class SchedulingPlan:
     planned_peak_bytes: int = 0
     vanilla_peak_bytes: int = 0
     plan_wallclock_s: float = 0.0
+    # observation iterations the policy charges before the plan is live
+    # (Capuchin's passive-mode epoch; TENSILE/vDNN: 0)
+    passive_iterations: int = 0
 
     def add(self, ev: ScheduleEvent) -> None:
         self.events.append(ev)
@@ -196,10 +203,28 @@ class MachineProfile:
     mem_bw: float = 819e9                            # HBM B/s
     ici_bw: float = 50e9                             # per ICI link B/s
     swap_compression: float = 1.0                    # <1.0 with offload_quant
+    # int8 quantize-on-offload (kernels/offload_quant): bytes-on-wire ratio
+    # for a float32 tensor incl. per-block scales, (1 + 4/BLOCK) / 4
+    offload_quant_ratio: float = (1.0 + 4.0 / 512.0) / 4.0
+    # effective quantize/dequantize kernel throughput (B/s of source tensor);
+    # calibrated via cost_model.offload_quant_latency on real devices
+    offload_quant_bw: float = 400e9
 
     def swap_time(self, size_bytes: int) -> float:
         eff = size_bytes * self.swap_compression
         return self.host_link_latency + eff / self.host_link_bw
+
+    def compressed_swap_time(self, size_bytes: int) -> float:
+        """One direction of the quantize-on-offload path: the kernel reads
+        the tensor and writes int8 + scales, then the DMA carries the
+        compressed bytes (§optimization beyond the paper)."""
+        quant = size_bytes / self.offload_quant_bw
+        wire = size_bytes * self.offload_quant_ratio / self.host_link_bw
+        return self.host_link_latency + quant + wire
+
+    def transfer_time(self, size_bytes: int, compressed: bool = False) -> float:
+        return (self.compressed_swap_time(size_bytes) if compressed
+                else self.swap_time(size_bytes))
 
 
 def merge_plans(plans: Iterable[SchedulingPlan]) -> Dict[str, SchedulingPlan]:

@@ -1,7 +1,8 @@
 """Recomputation scheduling (paper §IV-D).
 
-Runs after swapping is exhausted and only if the predicted peak still exceeds
-the memory budget.  Candidates are restricted to tensors that have **never
+Driven by ``passes.RecomputePass`` under the Pipeline's convergence loop:
+runs after swapping is exhausted (pass order) and only if the predicted peak
+still exceeds the memory budget (the pass's gate).  Candidates are restricted to tensors that have **never
 been released or swapped** (so a recomputation never cascades into further
 swap-ins/recomputes), whose producer's inputs are still resident at the
 recompute instant.  Candidates are ranked by Capuchin's MSPS metric:

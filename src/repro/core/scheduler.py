@@ -1,10 +1,13 @@
-"""Complete scheduling loop (paper §IV-F, Algorithm 3) + plan updating (§IV-E).
+"""Memory Scheduler front-end (paper §IV-F, Algorithm 3) + plan updating
+(§IV-E).
 
-The Memory Scheduler iterates: activity analysis → merged peak analysis →
-greedy swap scheduling until no tensor can be swapped → MSPS-ranked
-recomputation while the predicted peak still exceeds the budget.  Stops when
-the average peak reduction over the past 3 iterations is below 0.05 % after
-100 iterations (paper Alg 3 line 4).
+The convergence loop itself — greedy swap scheduling until no tensor can be
+swapped, then MSPS-ranked recomputation while the predicted peak still
+exceeds the budget, with the paper's patience/min-improvement stopping rule
+— lives in ``passes.Pipeline``; the TENSILE policy is the pass configuration
+``Pipeline([SwapPass, RecomputePass], cross_iteration=True)``.  This module
+keeps the *runtime* responsibilities: the job registry, EWMA latency
+correction, and the drift-triggered replan decision.
 
 Plan updating: the Executor keeps reporting measured operator latencies; when
 the summed latency drifts by more than `update_threshold` relative to the
@@ -13,54 +16,29 @@ sum used for the last plan, the scheduler rebuilds the Tensor Access Sequence
 """
 from __future__ import annotations
 
-import dataclasses
-import time as _time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 from .access import AccessSequence
-from .peak_analysis import PeakReport, analyze
-from .plan import MachineProfile, SchedulingPlan
-from .recompute_planner import RecomputePlanner, plan_one_recompute
-from .swap_planner import SwapPlanner, plan_one_swap
+from .passes import (Pipeline, ScheduleResult, SchedulerConfig,
+                     build_pipeline)
+from .plan import MachineProfile
 
-
-@dataclasses.dataclass
-class SchedulerConfig:
-    memory_budget_bytes: Optional[int] = None   # None: device size from profile
-    max_swap_ratio: float = 1.0                 # per-job MSR limit (can be dict)
-    per_job_swap_ratio: Optional[Dict[str, float]] = None
-    min_improvement: float = 5e-4               # 0.05 % (paper Alg 3)
-    patience_iters: int = 100
-    patience_window: int = 3
-    update_threshold: float = 0.2               # latency-drift replan trigger
-    ewma_alpha: float = 0.3
-    max_iterations: int = 10000
-
-
-@dataclasses.dataclass
-class ScheduleResult:
-    plans: Dict[str, SchedulingPlan]
-    initial_report: PeakReport
-    final_report: PeakReport
-    iterations: int
-    swaps_scheduled: int
-    recomputes_scheduled: int
-    plan_wallclock_s: float
-
-    @property
-    def memory_saving_ratio(self) -> float:
-        """MSR against the merged vanilla peak (paper §V-A)."""
-        v = self.initial_report.peak_bytes
-        return (v - self.final_report.peak_bytes) / v if v else 0.0
+__all__ = ["MemoryScheduler", "ScheduleResult", "SchedulerConfig",
+           "schedule_single"]
 
 
 class MemoryScheduler:
     """Global scheduler over all registered jobs (paper Fig. 3)."""
 
     def __init__(self, profile: Optional[MachineProfile] = None,
-                 config: Optional[SchedulerConfig] = None):
+                 config: Optional[SchedulerConfig] = None,
+                 pipeline: Optional[Pipeline] = None):
         self.profile = profile or MachineProfile()
         self.config = config or SchedulerConfig()
+        # the planning policy; defaults to the paper's TENSILE pipeline but
+        # any registered pipeline (or a custom pass list) drops in
+        self.pipeline = pipeline or build_pipeline(
+            "tensile", profile=self.profile, config=self.config)
         self.jobs: Dict[str, AccessSequence] = {}
         self.offsets: Dict[str, float] = {}
         # latency sums used for the last plan, per job (drift detection)
@@ -95,82 +73,31 @@ class MemoryScheduler:
 
     # ------------------------------------------------------------------
     def schedule(self, job_ids: Optional[Sequence[str]] = None) -> ScheduleResult:
-        """Algorithm 3 over the merged timeline of the given (default: all)
-        registered jobs."""
-        t0 = _time.perf_counter()
-        cfg = self.config
+        """One pipeline run over the merged timeline of the given (default:
+        all) registered jobs."""
         ids = list(job_ids) if job_ids is not None else list(self.jobs)
         seqs = [self.jobs[j] for j in ids]
-        budget = cfg.memory_budget_bytes or self.profile.device_memory_bytes
-
-        plans = {j: SchedulingPlan(job_id=j) for j in ids}
-        # activity analysis (paper Alg 3 line 2): release at last use is the
-        # baseline behaviour encoded directly in peak analysis; explicit map
-        # kept on the plan for the executor.
+        result = self.pipeline.plan(
+            seqs, offsets={j: self.offsets[j] for j in ids})
         for j in ids:
-            plans[j].release_after_op = {}
-
-        swap_planners = {
-            j: SwapPlanner(self.jobs[j], plans[j], self.profile,
-                           (cfg.per_job_swap_ratio or {}).get(
-                               j, cfg.max_swap_ratio))
-            for j in ids}
-        rec_planners = {j: RecomputePlanner(self.jobs[j], plans[j])
-                        for j in ids}
-
-        # vanilla normalizer (paper platform: no free-at-last-use)
-        initial = analyze(seqs, plans=None, offsets=self.offsets,
-                          free_at_last_use=False)
-        report = analyze(seqs, plans=plans, offsets=self.offsets)
-        history: List[int] = [report.peak_bytes]
-        swap_ok, rec_ok = True, True
-        n_swaps = n_recs = iters = 0
-
-        while swap_ok or rec_ok:
-            if iters >= cfg.max_iterations:
-                break
-            # paper Alg 3 line 4: early stop on stagnation
-            if iters > cfg.patience_iters and len(history) > cfg.patience_window:
-                prev = history[-cfg.patience_window - 1]
-                cur = history[-1]
-                if prev > 0 and (prev - cur) / prev < cfg.min_improvement:
-                    break
-            if swap_ok:
-                swap_ok = plan_one_swap(swap_planners, report)
-                if swap_ok:
-                    n_swaps += 1
-            elif report.peak_bytes >= budget and rec_ok:
-                rec_ok = plan_one_recompute(rec_planners, report)
-                if rec_ok:
-                    n_recs += 1
-            else:
-                break
-            report = analyze(seqs, plans=plans, offsets=self.offsets)
-            history.append(report.peak_bytes)
-            iters += 1
-
-        wall = _time.perf_counter() - t0
-        for j in ids:
-            plans[j].vanilla_peak_bytes = initial.per_job_peak.get(j, 0)
-            plans[j].planned_peak_bytes = report.per_job_peak.get(j, 0)
-            plans[j].plan_wallclock_s = wall
             self._plan_latency_sum[j] = sum(
                 op.latency for op in self.jobs[j].operators)
-        return ScheduleResult(
-            plans=plans, initial_report=initial, final_report=report,
-            iterations=iters, swaps_scheduled=n_swaps,
-            recomputes_scheduled=n_recs, plan_wallclock_s=wall)
+        return result
 
 
 def schedule_single(seq: AccessSequence,
                     profile: Optional[MachineProfile] = None,
                     budget_bytes: Optional[int] = None,
-                    max_swap_ratio: float = 1.0) -> ScheduleResult:
+                    max_swap_ratio: float = 1.0,
+                    pipeline_name: str = "tensile") -> ScheduleResult:
     """Convenience one-job entry point (paper §V-B single-workload setup:
     MSR limit 100 %)."""
+    profile = profile or MachineProfile()
+    config = SchedulerConfig(memory_budget_bytes=budget_bytes,
+                             max_swap_ratio=max_swap_ratio)
     sched = MemoryScheduler(
-        profile=profile,
-        config=SchedulerConfig(memory_budget_bytes=budget_bytes,
-                               max_swap_ratio=max_swap_ratio))
+        profile=profile, config=config,
+        pipeline=build_pipeline(pipeline_name, profile=profile,
+                                config=config))
     sched.register_job(seq)
     return sched.schedule()

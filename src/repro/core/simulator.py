@@ -1,10 +1,24 @@
-"""Discrete-event execution simulator.
+"""Discrete-event execution simulator, driven by the shared MemoryEngine.
 
 Executes one or more jobs against their scheduling plans on a modeled
-machine: sequential operators per job, a single shared host-DMA channel for
-swaps (global exclusivity — cross-job conflicts queue), passive swap-ins when
-a prefetch misses its TUA (stall, counted as extra overhead), recompute time
-added inline, and exact byte accounting of device residency.
+machine: sequential operators per job, the engine's single host-DMA channel
+for swaps (global exclusivity — cross-job conflicts queue), passive swap-ins
+when a prefetch misses its TUA (stall, counted as extra overhead), recompute
+time added inline, and the engine's byte-exact residency ledger.
+
+All residency *decisions* (when a planned event applies, when an operand
+needs a passive swap-in, when a tensor auto-releases) come from
+``engine.JobContext`` — the same rules the interpreting executor runs — so
+simulated and real runs of a plan agree by construction.  The simulator owns
+only what is genuinely virtual: the clock, transfer completion times, and
+stall accounting.
+
+Two transfer modes:
+  * ``async`` (default) — transfers overlap compute; completions land at
+    their channel-scheduled instant (the paper's Swap Executor).
+  * ``sync``  — transfers execute inline at their trigger, serializing with
+    compute; mirrors the executor's deterministic sync mode and is what the
+    sim-vs-real parity test runs.
 
 Outputs the paper's metrics:
     MSR = (VMP - EMP) / VMP      memory saving ratio
@@ -18,9 +32,11 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .access import AccessSequence, TensorKind
-from .peak_analysis import PERSISTENT_KINDS, storage_of
-from .plan import EventType, MachineProfile, ScheduleEvent, SchedulingPlan
+from .access import AccessSequence
+from .engine import (INPUT_AWAIT_PREFETCH, INPUT_PASSIVE_SWAP_IN,
+                     INPUT_RECOMPUTE, INPUT_RESIDENT, JobContext, MemoryEngine)
+from .peak_analysis import PERSISTENT_KINDS
+from .plan import EventType, MachineProfile, SchedulingPlan
 
 
 @dataclasses.dataclass
@@ -33,6 +49,7 @@ class SimResult:
     passive_swap_ins: int
     swap_conflicts: int
     timeline: List[Tuple[float, int]]
+    trace: Optional[List[Tuple[str, str, str]]] = None
 
     def msr(self, vanilla: "SimResult") -> float:
         v = vanilla.peak_bytes
@@ -50,46 +67,18 @@ class SimResult:
         return m / e
 
 
-class _Channel:
-    """Physically exclusive transfer channel; requests queue FIFO."""
+class _JobClock:
+    """Virtual-time state the engine does not own: op cursor, iteration
+    count, pending prefetch landing times."""
 
-    def __init__(self):
-        self.busy_until = 0.0
-        self.conflicts = 0
-
-    def acquire(self, t: float, dur: float) -> Tuple[float, float]:
-        if t < self.busy_until:
-            self.conflicts += 1
-            t = self.busy_until
-        self.busy_until = t + dur
-        return t, t + dur
-
-
-class _JobState:
-    def __init__(self, seq: AccessSequence, plan: Optional[SchedulingPlan],
-                 iterations: int, offset: float):
-        self.seq = seq
-        self.plan = plan
+    def __init__(self, ctx: JobContext, iterations: int):
+        self.ctx = ctx
         self.iterations = iterations
-        self.offset = offset
-        self.op_ptr = 0
         self.iter = 0
-        self.resident: Dict[str, int] = {}
-        self.host: set = set()
         self.done = False
         self.finish_time = 0.0
-        self.peak = 0
-        # events indexed by trigger op for quick lookup
-        self.by_trigger: Dict[int, List[ScheduleEvent]] = {}
-        if plan:
-            for ev in plan.events:
-                self.by_trigger.setdefault(ev.trigger_op, []).append(ev)
-        self.last_use = seq.activity_analysis()
-        # pending swap-ins landing later (time, tensor)
-        self.swap_in_done: Dict[str, float] = {}
-
-    def mem(self) -> int:
-        return sum(self.resident.values())
+        # storage -> completion time of an in-flight planned swap-in
+        self.swap_in_at: Dict[str, float] = {}
 
 
 def simulate(seqs: Sequence[AccessSequence],
@@ -97,52 +86,33 @@ def simulate(seqs: Sequence[AccessSequence],
              profile: Optional[MachineProfile] = None,
              iterations: int = 2,
              offsets: Optional[Dict[str, float]] = None,
-             free_at_last_use: bool = True) -> SimResult:
+             free_at_last_use: bool = True,
+             transfer_mode: str = "async",
+             engine: Optional[MemoryEngine] = None) -> SimResult:
     """Run `iterations` training iterations of every job concurrently.
 
     `free_at_last_use=False` reproduces the vanilla platform (nothing is
     released before iteration end — paper §V-A normalizer)."""
-    profile = profile or MachineProfile()
     plans = plans or {}
     offsets = offsets or {}
-    channel = _Channel()
+    eng = engine or MemoryEngine(profile)
+    profile = eng.profile
 
-    jobs = {s.job_id: _JobState(s, plans.get(s.job_id), iterations,
-                                offsets.get(s.job_id, 0.0))
-            for s in seqs}
+    jobs: Dict[str, _JobClock] = {}
+    for s in seqs:
+        ctx = eng.add_job(s, plans.get(s.job_id), offsets.get(s.job_id, 0.0))
+        jobs[s.job_id] = _JobClock(ctx, iterations)
 
-    global_mem = 0
-    peak = 0
     stall = 0.0
     passive = 0
-    timeline: List[Tuple[float, int]] = []
 
-    def bump(job: _JobState, storage: str, size: int, t: float):
-        """size > 0 allocates (idempotent); size < 0 frees (idempotent)."""
-        nonlocal global_mem, peak
-        if size > 0:
-            if storage in job.resident:
-                return
-            job.resident[storage] = size
-            global_mem += size
-        else:
-            if storage not in job.resident:
-                return
-            global_mem -= job.resident.pop(storage)
-        peak = max(peak, global_mem)
-        job.peak = max(job.peak, job.mem())
-        timeline.append((t, global_mem))
-
-    # initialize residency
+    # initial residency (paper Alg 2 line 1)
     for job in jobs.values():
-        for tid in job.seq.initial_resident:
-            spec = job.seq.tensors.get(tid)
-            if spec is None:
-                continue
-            st = storage_of(spec)
-            # cross-iteration plans start steady state: tensors with a
-            # crossing swap-in arrive via that swap-in, except iteration 0
-            bump(job, st, spec.size_bytes, job.offset)
+        ctx = job.ctx
+        for tid in ctx.seq.initial_resident:
+            if tid in ctx.seq.tensors:
+                eng.ledger.alloc(ctx.job_id, ctx.st(tid), ctx.size_of(tid),
+                                 ctx.offset)
 
     # event queue: (time, seqno, kind, job_id, payload)
     q: List[Tuple[float, int, str, str, object]] = []
@@ -154,30 +124,22 @@ def simulate(seqs: Sequence[AccessSequence],
         seqno += 1
 
     for job_id, job in jobs.items():
-        push(job.offset, "op", job_id, 0)
-
-    sizes: Dict[Tuple[str, str], int] = {}
-    for job in jobs.values():
-        for spec in job.seq.tensors.values():
-            st = storage_of(spec)
-            key = (job.seq.job_id, st)
-            sizes[key] = max(sizes.get(key, 0), spec.size_bytes)
+        push(job.ctx.offset, "op", job_id, 0)
 
     while q:
         t, _, kind, job_id, payload = heapq.heappop(q)
         job = jobs[job_id]
-        seq = job.seq
+        ctx = job.ctx
+        seq = ctx.seq
 
         if kind == "swap_in_done":
             st = payload  # type: ignore[assignment]
-            bump(job, st, sizes[(job_id, st)], t)
-            job.host.discard(st)  # host copy retained logically; resident now
-            job.swap_in_done.pop(st, None)
+            eng.complete_swap_in(ctx, st, t)
+            job.swap_in_at.pop(st, None)
             continue
         if kind == "swap_out_done":
-            st = payload  # type: ignore[assignment]
-            job.host.add(st)
-            bump(job, st, -1, t)
+            st, compressed = payload  # type: ignore[misc]
+            eng.complete_swap_out(ctx, st, t, compressed=compressed)
             continue
         if kind != "op":
             continue
@@ -185,103 +147,89 @@ def simulate(seqs: Sequence[AccessSequence],
         op_idx = payload  # type: ignore[assignment]
         op = seq.operators[op_idx]
 
-        # ---- ensure inputs resident (passive swap-in on miss) ----------
+        # ---- ensure inputs resident (engine decision; paper Executor) --
         start = t
         for tid in op.inputs:
-            spec = seq.tensors.get(tid)
-            if spec is None:
+            if tid not in seq.tensors:
                 continue
-            st = storage_of(spec)
-            if st in job.resident:
+            st = ctx.st(tid)
+            action = ctx.input_action(eng.ledger, tid,
+                                      prefetch_inflight=st in job.swap_in_at)
+            if action is INPUT_RESIDENT:
                 continue
-            if st in job.swap_in_done:
+            if action is INPUT_AWAIT_PREFETCH:
                 # prefetch in flight but late: wait for it
-                wait_until = job.swap_in_done[st]
-                stall_d = max(0.0, wait_until - start)
-                stall += stall_d
+                wait_until = job.swap_in_at.pop(st)
+                stall += max(0.0, wait_until - start)
                 start = max(start, wait_until)
-                bump(job, st, sizes[(job_id, st)], start)
-                job.swap_in_done.pop(st, None)
+                eng.complete_swap_in(ctx, st, start, passive=True)
                 passive += 1
-            elif st in job.host:
-                # passive swap-in: block on the channel (paper: Capuchin-style
-                # passive mode overhead — what TENSILE avoids)
-                dur = profile.swap_time(sizes[(job_id, st)])
-                s0, s1 = channel.acquire(start, dur)
-                stall += (s1 - start)
+            elif action is INPUT_PASSIVE_SWAP_IN:
+                # passive swap-in: block on the channel (Capuchin-style
+                # overhead — what TENSILE's planned prefetch avoids)
+                dur = profile.transfer_time(
+                    ctx.size_of(tid), compressed=st in ctx.host_compressed)
+                s0, s1 = eng.channel.acquire(start, dur)
+                stall += s1 - start
                 start = s1
-                bump(job, st, sizes[(job_id, st)], start)
+                eng.complete_swap_in(ctx, st, start, passive=True)
                 passive += 1
-            # else: never materialized (recompute plans re-run producer);
-            # treat as recompute-on-demand below via plan events
+            # INPUT_RECOMPUTE: never materialized — a planned recompute
+            # event regenerates it at its trigger; nothing to charge here
+            # (the TGA allocation below models on-demand regeneration).
 
         # ---- run the op -------------------------------------------------
         end = start + op.latency
-        # recompute events targeting this op run inline before it
-        if job.plan:
-            for ev in job.plan.events:
-                if (ev.event_type is EventType.RECOMPUTE
-                        and ev.target_op == op_idx):
-                    st = storage_of(seq.tensors[ev.tensor_id])
-                    if st not in job.resident:
-                        rc = sum(seq.operators[i].latency
-                                 for i in (ev.recompute_ops or []))
-                        end += rc
-                        bump(job, st, sizes[(job_id, st)], start)
 
-        # ---- allocate outputs -------------------------------------------
+        # ---- allocate outputs (TGA; updated params alias old storage, so
+        # the storage-keyed alloc is a no-op while the old copy is resident)
         for tid in op.outputs:
-            spec = seq.tensors.get(tid)
-            if spec is None:
+            if tid not in seq.tensors:
                 continue
-            if spec.updates is not None:
-                continue  # aliases old storage
-            bump(job, storage_of(spec), spec.size_bytes, end)
+            eng.ledger.alloc(ctx.job_id, ctx.st(tid), ctx.size_of(tid), end)
 
-        # ---- releases (activity analysis + plan) -------------------------
+        # ---- releases (plan override + activity analysis) ---------------
         for tid in op.inputs + op.outputs:
-            spec = seq.tensors.get(tid)
-            if spec is None:
+            if tid not in seq.tensors:
                 continue
-            st = storage_of(spec)
-            rel_op = (job.plan.release_after_op.get(tid)
-                      if job.plan else None)
-            if rel_op is not None and rel_op == op_idx:
-                bump(job, st, -1, end)
-                continue
-            if (free_at_last_use
-                    and job.last_use.get(tid) == op_idx
-                    and spec.kind not in PERSISTENT_KINDS
-                    and spec.updates is None
-                    and st not in job.host):
-                bump(job, st, -1, end)
+            if ctx.should_auto_release(tid, op_idx, free_at_last_use):
+                eng.record("release", ctx, ctx.st(tid))
+                eng.ledger.free(ctx.job_id, ctx.st(tid), end)
 
-        # ---- plan events triggered by this op -----------------------------
-        if job.plan:
-            for ev in job.by_trigger.get(op_idx, []):
-                if ev.event_type is EventType.SWAP_OUT:
-                    st = storage_of(seq.tensors[ev.tensor_id])
-                    if st not in job.resident:
-                        continue
-                    dur = profile.swap_time(ev.size_bytes)
-                    s0, s1 = channel.acquire(end + max(ev.delta, 0.0), dur)
-                    push(s1, "swap_out_done", job_id, st)
-                elif ev.event_type is EventType.SWAP_IN:
-                    st = storage_of(seq.tensors[ev.tensor_id])
-                    if st in job.resident or st not in job.host:
-                        # still resident (swap-out in flight) or nothing on
-                        # host yet (iteration-0 cold start): skip prefetch
-                        continue
-                    dur = profile.swap_time(ev.size_bytes)
-                    s0, s1 = channel.acquire(end + max(ev.delta, 0.0), dur)
-                    job.swap_in_done[st] = s1
+        # ---- plan events triggered by this op ---------------------------
+        for ev in ctx.events_triggered_by(op_idx):
+            st = ctx.st(ev.tensor_id)
+            if not ctx.event_applies(eng.ledger, ev):
+                continue
+            if ev.event_type is EventType.SWAP_OUT:
+                dur = eng.event_duration(ev)
+                s0, s1 = eng.channel.acquire(end + max(ev.delta, 0.0), dur)
+                if transfer_mode == "sync":
+                    end = max(end, s1)
+                    eng.complete_swap_out(ctx, st, end,
+                                          compressed=ev.compressed)
+                else:
+                    push(s1, "swap_out_done", job_id, (st, ev.compressed))
+            elif ev.event_type is EventType.SWAP_IN:
+                dur = eng.event_duration(ev)
+                s0, s1 = eng.channel.acquire(end + max(ev.delta, 0.0), dur)
+                if transfer_mode == "sync":
+                    end = max(end, s1)
+                    eng.complete_swap_in(ctx, st, end)
+                else:
+                    job.swap_in_at[st] = s1
                     push(s1, "swap_in_done", job_id, st)
-                elif ev.event_type is EventType.RELEASE:
-                    st = storage_of(seq.tensors[ev.tensor_id])
-                    # only release if a host copy (or recompute plan) covers it
-                    if st in job.host or ev.tensor_id in {
-                            e.tensor_id for e in job.plan.recomputes()}:
-                        bump(job, st, -1, end)
+            elif ev.event_type is EventType.RELEASE:
+                eng.record("release", ctx, st)
+                eng.ledger.free(ctx.job_id, st, end)
+            elif ev.event_type is EventType.RECOMPUTE:
+                # re-execute the producer chain inline (serial job)
+                rc = sum(seq.operators[i].latency
+                         for i in (ev.recompute_ops or []))
+                end += rc
+                eng.record("recompute", ctx, st)
+                eng.ledger.alloc(ctx.job_id, st, ctx.size_of(ev.tensor_id),
+                                 end)
 
         # ---- advance ------------------------------------------------------
         nxt = op_idx + 1
@@ -290,9 +238,9 @@ def simulate(seqs: Sequence[AccessSequence],
         else:
             if not free_at_last_use:
                 # vanilla platform: iteration-end free of non-persistent
-                for st in list(job.resident):
+                for st in eng.ledger.resident_storages(ctx.job_id):
                     if not _persistent_storage(seq, st):
-                        bump(job, st, -1, end)
+                        eng.ledger.free(ctx.job_id, st, end)
             job.iter += 1
             if job.iter < job.iterations:
                 push(end, "op", job_id, 0)
@@ -300,14 +248,17 @@ def simulate(seqs: Sequence[AccessSequence],
                 job.done = True
                 job.finish_time = end
 
-    per_job_time = {j: (job.finish_time - job.offset) / max(job.iterations, 1)
+    per_job_time = {j: (job.finish_time - job.ctx.offset)
+                    / max(job.iterations, 1)
                     for j, job in jobs.items()}
-    per_job_peak = {j: job.peak for j, job in jobs.items()}
+    per_job_peak = {j: eng.ledger.job_peak(j) for j in jobs}
     total = max((job.finish_time for job in jobs.values()), default=0.0)
     return SimResult(
-        peak_bytes=peak, per_job_time=per_job_time, per_job_peak=per_job_peak,
-        total_time=total, stall_time=stall, passive_swap_ins=passive,
-        swap_conflicts=channel.conflicts, timeline=timeline)
+        peak_bytes=eng.ledger.peak, per_job_time=per_job_time,
+        per_job_peak=per_job_peak, total_time=total, stall_time=stall,
+        passive_swap_ins=passive, swap_conflicts=eng.channel.conflicts,
+        timeline=list(eng.ledger.timeline),
+        trace=eng.trace.keys() if eng.trace else None)
 
 
 def _persistent_storage(seq: AccessSequence, st: str) -> bool:

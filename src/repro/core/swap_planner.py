@@ -123,11 +123,22 @@ class SwapPlanner:
 
     def __init__(self, seq: AccessSequence, plan: SchedulingPlan,
                  profile: MachineProfile,
-                 max_swap_ratio: float = 1.0):
+                 max_swap_ratio: float = 1.0,
+                 cross_iteration: bool = True,
+                 compressed: bool = False,
+                 max_tensor_bytes: Optional[int] = None):
         self.seq = seq
         self.plan = plan
         self.profile = profile
         self.max_swap_ratio = max_swap_ratio
+        # False restricts scheduling to within one iteration (no Opt-phase
+        # updated-param events — the Capuchin limitation TENSILE lifts)
+        self.cross_iteration = cross_iteration
+        # compressed=True routes transfers through the quantize-on-offload
+        # path: shorter channel bookings (CompressedOffloadPass); an optional
+        # size cap keeps quantization error confined to small tensors
+        self.compressed = compressed
+        self.max_tensor_bytes = max_tensor_bytes
         self.channel = PeriodicChannel(max(seq.iteration_time, EPS))
         self.swapped: set = set(plan.swapped_tensors())
         self._swappable_total = max(
@@ -148,6 +159,11 @@ class SwapPlanner:
                     self.channel.book(ev.start, ev.duration)
                 except ValueError:
                     pass
+
+    # ------------------------------------------------------------------
+    def _swap_time(self, size_bytes: int) -> float:
+        return self.profile.transfer_time(size_bytes,
+                                          compressed=self.compressed)
 
     # ------------------------------------------------------------------
     def swap_ratio(self) -> float:
@@ -183,14 +199,15 @@ class SwapPlanner:
         return ScheduleEvent(
             event_type=et, tensor_id=tid, job_id=self.seq.job_id,
             trigger_op=trig, delta=delta, start=start, end=start + dur,
-            size_bytes=spec.size_bytes, target_op=target_op, crosses_iteration=crosses)
+            size_bytes=spec.size_bytes, target_op=target_op,
+            crosses_iteration=crosses, compressed=self.compressed)
 
     # ------------------------------------------------------------------
     def scheduling_swap(self, tid: str, latest_time: float) -> SwapAttempt:
         """Paper Algorithm 1 `scheduling_swap` for one tensor."""
         seq, prof = self.seq, self.profile
         spec = seq.tensors[tid]
-        dur = prof.swap_time(spec.size_bytes)
+        dur = self._swap_time(spec.size_bytes)
         tga = seq.tga(tid)
         is_updated_param = spec.updates is not None
         # persistent tensors resident from iteration start can leave any time
@@ -278,9 +295,14 @@ class SwapPlanner:
         spec = seq.tensors.get(tid)
         if spec is None or tid in self.swapped:
             return False
+        if (self.max_tensor_bytes is not None
+                and spec.size_bytes > self.max_tensor_bytes):
+            return False
         accs = seq.tensor_accesses(tid)
         is_updated_param = spec.updates is not None
         if is_updated_param or spec.kind in PERSISTENT_KINDS:
+            if not self.cross_iteration:
+                return False
             # Opt-phase tensors (paper Alg 1 line 26-27): always eligible —
             # across-iteration scheduling is the point of TENSILE.  The
             # swap-out window extends into the next iteration's prefix,

@@ -3,3 +3,42 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def hypothesis_or_stub():
+    """Real hypothesis when installed (the `dev` extra provides it);
+    otherwise stand-ins that skip ONLY the property tests, so the rest of
+    the module still collects and runs — test modules do
+
+        from conftest import hypothesis_or_stub
+        given, settings, st = hypothesis_or_stub()
+
+    instead of a bare `pytest.importorskip("hypothesis")`, which would
+    silence every non-property test in the file too."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        import pytest
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*a, **k):
+            def deco(fn):
+                # deliberately NOT functools.wraps: pytest must see a
+                # zero-argument signature, not the property parameters
+                # (it would try to resolve them as fixtures)
+                def skipped():
+                    pytest.skip("hypothesis not installed "
+                                "(pip install -e .[dev])")
+                skipped.__name__ = fn.__name__
+                skipped.__doc__ = fn.__doc__
+                return skipped
+            return deco
+
+        def settings(*a, **k):
+            return lambda fn: fn
+
+        return given, settings, _Strategies()

@@ -1,0 +1,254 @@
+"""Pass-pipeline tests: the four policy configurations reproduce the plans
+the seed's dedicated code paths produced (goldens captured from the
+pre-refactor tree), the registry resolves every policy by name, and the
+CompressedOffloadPass schedules quantized transfers where plain swapping
+cannot fit."""
+import json
+import os
+
+import pytest
+
+from repro.core import (MachineProfile, MemoryScheduler, SchedulerConfig,
+                        build_pipeline, evaluate, schedule_single)
+from repro.core.access import AccessSequence, Operator, TensorKind, TensorSpec
+from repro.core.baselines import capuchin_plan, vdnn_conv_plan
+from repro.core.passes import PIPELINES, PlanningPass, SwapPass
+from repro.core.peak_analysis import analyze
+
+from helpers import capture_mlp, synthetic_chain
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "seed_plans.json")
+
+PROFILE = MachineProfile(host_link_bw=1e6, host_link_latency=1e-3,
+                         compute_flops=1e9, mem_bw=1e9)
+MLP_PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10,
+                             mem_bw=1e10)
+
+
+@pytest.fixture(scope="module")
+def gold():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def fp_plan(plan):
+    evs = sorted(
+        (e.event_type.value, e.tensor_id, e.trigger_op,
+         round(e.delta, 9), round(e.start, 9), round(e.end, 9),
+         e.size_bytes, e.target_op,
+         list(e.recompute_ops or []), bool(e.crosses_iteration))
+        for e in plan.events)
+    return {"events": [list(_listify(ev)) for ev in evs],
+            "release_after_op": dict(sorted(plan.release_after_op.items()))}
+
+
+def _listify(t):
+    return [list(x) if isinstance(x, tuple) else x for x in t]
+
+
+def assert_matches(got, want):
+    assert json.loads(json.dumps(got)) == want
+
+
+# ---------------------------------------------------------------- goldens
+def test_tensile_pipeline_reproduces_seed_plan(gold):
+    seq = synthetic_chain(n_ops=12, latency=2.0, seed=0)
+    res = schedule_single(seq, profile=PROFILE)
+    g = gold["tensile_chain"]
+    assert_matches(fp_plan(res.plans[seq.job_id]), g["plan"])
+    assert res.initial_report.peak_bytes == g["initial_peak"]
+    assert res.final_report.peak_bytes == g["final_peak"]
+    assert res.iterations == g["iterations"]
+    assert (res.swaps_scheduled, res.recomputes_scheduled) == \
+        (g["swaps"], g["recomputes"])
+
+
+def test_tensile_recompute_path_reproduces_seed_plan(gold):
+    tight = MachineProfile(host_link_bw=1.0, host_link_latency=100.0,
+                           compute_flops=1e9, mem_bw=1e9)
+    seq = synthetic_chain(n_ops=10, latency=1.0, seed=9)
+    sched = MemoryScheduler(tight, SchedulerConfig(memory_budget_bytes=1))
+    sched.register_job(seq)
+    res = sched.schedule()
+    g = gold["tensile_recompute_chain"]
+    assert_matches(fp_plan(res.plans[seq.job_id]), g["plan"])
+    assert res.final_report.peak_bytes == g["final_peak"]
+    assert (res.swaps_scheduled, res.recomputes_scheduled) == \
+        (g["swaps"], g["recomputes"])
+
+
+def test_tensile_multi_job_reproduces_seed_plans(gold):
+    a = synthetic_chain(n_ops=8, latency=2.0, job_id="a", seed=1)
+    b = synthetic_chain(n_ops=8, latency=2.0, job_id="b", seed=2)
+    ms = MemoryScheduler(PROFILE, SchedulerConfig(max_swap_ratio=0.5))
+    ms.register_job(a)
+    ms.register_job(b, offset=3.0)
+    res = ms.schedule()
+    g = gold["tensile_multi"]
+    for j in ("a", "b"):
+        assert_matches(fp_plan(res.plans[j]), g["plans"][j])
+    assert res.final_report.peak_bytes == g["final_peak"]
+
+
+def test_vdnn_capuchin_chain_reproduce_seed_plans(gold):
+    seq = synthetic_chain(n_ops=12, latency=2.0, seed=0)
+    assert_matches(fp_plan(vdnn_conv_plan(seq, PROFILE)),
+                   gold["vdnn_chain"]["plan"])
+    cc = capuchin_plan(seq, budget_bytes=50_000, profile=PROFILE)
+    assert_matches(fp_plan(cc.plan), gold["capuchin_chain"]["plan"])
+
+
+def test_all_policies_reproduce_seed_plans_on_captured_mlp(gold):
+    seq, _, _ = capture_mlp(sizes=(64, 128, 128, 8), batch=16)
+    res = schedule_single(seq, profile=MLP_PROFILE)
+    assert_matches(fp_plan(res.plans[seq.job_id]), gold["tensile_mlp"]["plan"])
+    assert res.final_report.peak_bytes == gold["tensile_mlp"]["final_peak"]
+    assert_matches(fp_plan(vdnn_conv_plan(seq, MLP_PROFILE)),
+                   gold["vdnn_mlp"]["plan"])
+    cap = capuchin_plan(seq, budget_bytes=10_000, profile=MLP_PROFILE)
+    assert_matches(fp_plan(cap.plan), gold["capuchin_mlp"]["plan"])
+    assert cap.passive_iterations == gold["capuchin_mlp"]["passive_iterations"]
+    cap2 = capuchin_plan(seq, budget_bytes=res.final_report.peak_bytes,
+                         profile=MLP_PROFILE)
+    assert_matches(fp_plan(cap2.plan),
+                   gold["capuchin_mlp_tensile_budget"]["plan"])
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_has_all_policies():
+    assert {"vanilla", "vdnn", "capuchin", "tensile",
+            "tensile+compressed-offload"} <= set(PIPELINES)
+    with pytest.raises(KeyError):
+        build_pipeline("no-such-policy")
+
+
+def test_vanilla_pipeline_is_empty():
+    seq = synthetic_chain(n_ops=6, seed=3)
+    res = build_pipeline("vanilla", profile=PROFILE).plan([seq])
+    plan = res.plans[seq.job_id]
+    assert not plan.events and not plan.release_after_op
+    assert res.swaps_scheduled == res.recomputes_scheduled == 0
+
+
+def test_planning_pass_protocol_single_job():
+    """A pass is usable standalone through the protocol signature
+    run(seq, plan, report, profile) -> plan."""
+    from repro.core.plan import SchedulingPlan
+    seq = synthetic_chain(n_ops=12, latency=2.0, seed=0)
+    plan = SchedulingPlan(job_id=seq.job_id)
+    sp = SwapPass()
+    out = sp.run(seq, plan, analyze([seq]), PROFILE)
+    assert out is plan
+    assert out.swap_outs(), "protocol run should schedule swaps"
+    assert analyze([seq], {seq.job_id: out}).peak_bytes \
+        <= analyze([seq]).peak_bytes
+
+
+def test_custom_pass_composes():
+    """New policies are pass configurations: a pipeline made of an ad-hoc
+    pass runs under the same convergence loop."""
+    from repro.core.passes import Pipeline
+
+    class ReleaseEverythingPass(PlanningPass):
+        name = "release-all"
+
+        def setup(self, state):
+            super().setup(state)
+            self._done = False
+
+        def step(self, report):
+            if self._done:
+                return False
+            self._done = True
+            for j, seq in self.state.jobs.items():
+                self.state.plans[j].release_after_op.update(
+                    seq.activity_analysis())
+            return True
+
+    seq = synthetic_chain(n_ops=8, seed=4)
+    res = Pipeline([ReleaseEverythingPass()], name="custom",
+                   profile=PROFILE).plan([seq])
+    assert res.plans[seq.job_id].release_after_op
+    assert res.pass_steps == {"release-all": 1}
+
+
+# ------------------------------------------------------- compressed offload
+def _tight_window_job():
+    """A, 400 kB, is peak-causing but its swap-out window (0.2 s free before
+    the peak instant) only fits the compressed transfer (~0.1 s), not the
+    full-precision one (~0.4 s)."""
+    tensors = {
+        "A": TensorSpec("A", 400_000, kind=TensorKind.ACTIVATION, job_id="j"),
+        "B": TensorSpec("B", 600_000, kind=TensorKind.ACTIVATION, job_id="j"),
+        "c": TensorSpec("c", 1_000, kind=TensorKind.ACTIVATION, job_id="j"),
+        "d": TensorSpec("d", 1_000, kind=TensorKind.ACTIVATION, job_id="j"),
+    }
+    ops = [
+        Operator(0, "mk_a", (), ("A",), latency=0.1, job_id="j"),
+        Operator(1, "use_a", ("A",), ("c",), latency=0.1, job_id="j"),
+        Operator(2, "filler", ("c",), ("d",), latency=0.3, job_id="j"),
+        Operator(3, "mk_b", ("d",), ("B",), latency=0.1, job_id="j"),
+        Operator(4, "use_b", ("B",), (), latency=0.7, job_id="j"),
+        Operator(5, "use_a2", ("A",), (), latency=0.1, job_id="j"),
+    ]
+    return AccessSequence("j", ops, tensors, initial_resident=[])
+
+
+COMP_PROFILE = MachineProfile(host_link_bw=1e6, host_link_latency=1e-3,
+                              compute_flops=1e9, mem_bw=1e9,
+                              offload_quant_bw=1e8)
+
+
+def test_compressed_offload_fits_where_plain_swap_cannot():
+    seq = _tight_window_job()
+    plain = build_pipeline("tensile", profile=COMP_PROFILE).plan([seq])
+    comp = build_pipeline("tensile+compressed-offload",
+                          profile=COMP_PROFILE).plan([seq])
+    assert plain.swaps_scheduled == 0
+    assert comp.pass_steps["compressed-offload"] == 1
+    events = [e for e in comp.plans["j"].events if e.compressed]
+    assert {e.event_type.value for e in events} == {"swap_out", "swap_in"}
+    assert all(e.tensor_id == "A" for e in events)
+    assert comp.final_report.peak_bytes < plain.final_report.peak_bytes
+    # the booked channel time is the compressed transfer time
+    for e in events:
+        assert abs(e.duration
+                   - COMP_PROFILE.compressed_swap_time(400_000)) < 1e-9
+
+
+def test_compressed_offload_never_worsens_peak():
+    for seed in (0, 1, 2):
+        seq = synthetic_chain(n_ops=20, latency=0.2, seed=seed)
+        prof = MachineProfile(host_link_bw=1e5, host_link_latency=1e-3,
+                              compute_flops=1e9, mem_bw=1e9,
+                              offload_quant_bw=1e9)
+        plain = build_pipeline("tensile", profile=prof).plan([seq])
+        comp = build_pipeline("tensile+compressed-offload",
+                              profile=prof).plan([seq])
+        assert comp.final_report.peak_bytes <= plain.final_report.peak_bytes
+
+
+def test_compressed_swap_time_entry():
+    """cost_model's offload-quant latency entry and the profile's
+    compressed transfer time are consistent and strictly cheaper on the
+    wire than the plain path for large-enough tensors."""
+    from repro.core import CostModel
+    cm = CostModel()
+    n = 8 << 20
+    lat = cm.offload_quant_latency(n)
+    assert lat > 0
+    assert cm.offload_quant_bandwidth(n) > 0
+    prof = MachineProfile(host_link_bw=1e9,
+                          offload_quant_bw=cm.offload_quant_bandwidth(n))
+    assert prof.compressed_swap_time(n) < prof.swap_time(n)
+    assert prof.transfer_time(n, compressed=True) == \
+        prof.compressed_swap_time(n)
+
+
+def test_compressed_plan_simulates_and_reduces_peak():
+    seq = _tight_window_job()
+    res = build_pipeline("tensile+compressed-offload",
+                         profile=COMP_PROFILE).plan([seq])
+    m = evaluate([seq], res.plans, COMP_PROFILE)
+    assert m["MSR"] > 0
+    assert m["peak"] < m["vanilla_peak"]

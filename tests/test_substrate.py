@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, Prefetcher, TokenStream

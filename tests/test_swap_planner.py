@@ -10,7 +10,10 @@ Invariants (paper §IV-A):
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
 
 from repro.core import MachineProfile, schedule_single
 from repro.core.access import (AccessSequence, Operator, TensorKind,
