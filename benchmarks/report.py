@@ -152,6 +152,41 @@ def paper_tables() -> str:
                     f"| {cbr} | {r.get('swaps', 0)} "
                     f"| {r.get('recomputes', 0)} |")
         out.append("")
+    sc = _load("scenarios.json")
+    if sc:
+        out.append("### Dynamic multi-workload scenarios — cross-job "
+                   "arbitration\n")
+        out.append(
+            "Each scenario scripts job arrivals/departures (offset, "
+            "iterations, priority) over one shared device; the "
+            "BudgetArbiter re-splits the device budget at every "
+            "launch/finish boundary and the cross-job pipelines plan "
+            "against the per-job slices.  `≤ budget` is the global peak "
+            "of the *simulated execution* in one capacity-limited shared "
+            "DeviceLedger vs the scenario's device budget; fairness is "
+            "Jain's index over per-job entitlement utilisation "
+            "(1.0 = every job uses the same fraction of its slice).  "
+            "Reproduce: `python -m benchmarks.run --only scenarios` "
+            "(`--smoke` for the CPU-sized CI variant).\n")
+        from . import scenarios as SC
+        out.append(SC.format_markdown(sc))
+        out.append("")
+        # a partial-policy scenarios.json (scenarios.run(policies=...))
+        # must not take the whole report down
+        busts = sum(
+            1 for rec in sc.values()
+            if not rec["policies"].get("vanilla", {}).get(
+                "within_budget", True))
+        auto = [rec["policies"]["tensile+autoscale"]
+                for rec in sc.values()
+                if "tensile+autoscale" in rec["policies"]]
+        auto_ok = sum(1 for m in auto if m["within_budget"])
+        out.append(
+            f"`tensile+autoscale` keeps the global peak inside the device "
+            f"budget on {auto_ok}/{len(auto)} scenarios; vanilla busts it "
+            f"on {busts}/{len(sc)}.  The CI `scenarios-smoke` job replays "
+            "the CPU-sized variant on every push and uploads "
+            "`experiments/results/*.json` as artifacts.\n")
     lm = _load("latency_model.json")
     if lm:
         out.append("### §IV-C — cold-start latency MLP\n")

@@ -119,6 +119,21 @@ def bench_pipelines(policies=None, workloads=("vgg16", "tinyllama-r")) -> None:
         json.dump(table, f, indent=1)
 
 
+def bench_scenarios(smoke: bool = False) -> None:
+    """Multi-workload dynamic scenario suite: staggered launches, job
+    churn, priority inversion, bursty interference — every cross-job
+    policy vs the arbiter-assigned device budget (see
+    benchmarks/scenarios.py)."""
+    from . import scenarios
+    t = scenarios.run(os.path.join(RESULTS, "scenarios.json"), smoke=smoke)
+    for scn, rec in t.items():
+        for pol, m in rec["policies"].items():
+            _emit(f"scenarios/{scn}/{pol}", m["time"] * 1e6,
+                  f"peak={m['peak']};within_budget={m['within_budget']};"
+                  f"MSR={m['MSR']:.4f};EOR={m['EOR']:.4f};"
+                  f"fairness={m['fairness']:.3f}")
+
+
 def bench_executor_validation() -> None:
     """Real-execution check: interpreter peak/MSR vs simulator prediction
     and bit-exactness of outputs under the plan (CPU-sized workload)."""
@@ -173,6 +188,7 @@ ALL = {
     "batch_size": bench_batch_size,
     "latency_model": bench_latency_model,
     "pipelines": bench_pipelines,
+    "scenarios": bench_scenarios,
     "executor_validation": bench_executor_validation,
 }
 
@@ -185,6 +201,9 @@ def main() -> None:
                     help="comma-separated planning-pipeline names for the "
                          "`pipelines` benchmark (default: all registered; "
                          "see repro.core.passes.PIPELINES)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CPU-sized variants of the heavy suites (currently "
+                         "`scenarios`): small workloads, <5 min, for CI")
     args = ap.parse_args()
     os.makedirs(RESULTS, exist_ok=True)
     names = args.only.split(",") if args.only else list(ALL)
@@ -193,6 +212,8 @@ def main() -> None:
         if n == "pipelines":
             bench_pipelines(policies=args.policy.split(",")
                             if args.policy else None)
+        elif n == "scenarios":
+            bench_scenarios(smoke=args.smoke)
         else:
             ALL[n]()
 

@@ -1,0 +1,308 @@
+"""Multi-workload dynamic scenario suite (paper §III-D / §V-C territory).
+
+TENSILE's headline claim is scheduling under *multiple dynamic workloads*:
+jobs launch at different times, finish at different times, differ in size
+and priority, and the Global Controller's BudgetArbiter re-splits the
+device-wide byte budget at every launch/finish/drift replan.  Each scenario
+here is a small script of job arrivals (offset, iterations, priority) over
+a shared device; every registered cross-job policy plans the merged
+timeline and is then run through the discrete-event simulator against a
+capacity-limited shared DeviceLedger, reporting:
+
+    peak            global peak bytes in the shared ledger
+    within_budget   peak <= the scenario's device budget
+    oom_events      ledger allocations that crossed capacity
+    MSR/EOR/CBR     the paper's metrics vs the vanilla run
+    fairness        Jain's index over per-job entitlement utilisation
+                    (peak_j / budget_j): 1.0 = every job uses the same
+                    fraction of its arbiter-assigned slice
+
+Scenarios (all ≥ 2 concurrent jobs, all dynamic):
+    staggered          three equal jobs arriving half-an-iteration apart
+    churn              short jobs joining and leaving around a long job;
+                       a finishing job's bytes must be reclaimed
+    priority-inversion memory-hog low-priority jobs start first, a
+                       high-priority job arrives late and must still get
+                       its weighted share
+    bursty             a burst of small jobs interferes with one big job
+
+Run:  python -m benchmarks.run --only scenarios [--smoke]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from repro.core import (BudgetArbiter, MachineProfile, MemoryEngine,
+                        SchedulerConfig, analyze, build_pipeline, simulate)
+
+# the CPU-sized MLP device class used by the system tests: fast to capture,
+# slow enough per-op that swaps have real windows
+PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
+
+POLICIES = ("vanilla", "tensile", "tensile+priority", "tensile+autoscale")
+
+
+# ----------------------------------------------------------------------
+# Workloads: captured MLP training steps, cached per shape
+# ----------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _mlp_seq(sizes: Tuple[int, ...], batch: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import capture_train_step
+    from repro.optim.adam import adamw_init, adamw_update
+
+    def forward(params, x):
+        h = x
+        for i, p in enumerate(params):
+            h = h @ p["w"] + p["b"]
+            if i < len(params) - 1:
+                h = jnp.tanh(h)
+        return h
+
+    def step(params, opt_state, b):
+        x, y = b
+
+        def loss_fn(p):
+            return jnp.mean((forward(p, x) - y) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=1e-3)
+        return params, opt_state, loss
+
+    key = jax.random.PRNGKey(0)
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        params.append(
+            {"w": jax.random.normal(k, (sizes[i], sizes[i + 1])) * 0.02,
+             "b": jnp.zeros(sizes[i + 1])})
+    opt = adamw_init(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, sizes[0]))
+    y = jax.random.normal(jax.random.PRNGKey(2), (batch, sizes[-1]))
+    seq, _closed = capture_train_step(step, params, opt, (x, y),
+                                     job_id="mlp")
+    return seq
+
+
+# job size classes; smoke keeps shapes small so the whole suite stays
+# CPU-sized (<5 min) for the CI scenarios-smoke job
+SHAPES = {
+    "small": {True: ((32, 64, 64, 8), 8), False: ((64, 128, 128, 8), 16)},
+    "medium": {True: ((64, 128, 128, 8), 16),
+               False: ((64, 256, 256, 8), 32)},
+    "large": {True: ((64, 256, 256, 8), 16),
+              False: ((128, 512, 512, 8), 32)},
+}
+
+
+@dataclasses.dataclass
+class JobSpec:
+    job_id: str
+    size: str                 # key into SHAPES
+    offset_frac: float        # launch time, in mean-iteration units
+    iterations: int
+    priority: float = 1.0
+
+
+@dataclasses.dataclass
+class Scenario:
+    name: str
+    description: str
+    jobs: List[JobSpec]
+    arbiter_policy: str = "equal"
+    budget_frac: float = 0.4    # device budget as a fraction of vanilla peak
+
+
+SCENARIOS: List[Scenario] = [
+    Scenario(
+        name="staggered",
+        description="three equal jobs launched half-an-iteration apart",
+        jobs=[JobSpec("s0", "medium", 0.0, 3),
+              JobSpec("s1", "medium", 0.5, 3),
+              JobSpec("s2", "medium", 1.0, 3)],
+        arbiter_policy="equal"),
+    Scenario(
+        name="churn",
+        description="short jobs join and leave around a long-running job; "
+                    "finished jobs' budgets are reclaimed and redistributed",
+        jobs=[JobSpec("long", "medium", 0.0, 4),
+              JobSpec("short0", "small", 0.2, 1),
+              JobSpec("short1", "small", 0.8, 1),
+              JobSpec("late", "medium", 1.6, 2)],
+        arbiter_policy="peak"),
+    Scenario(
+        name="priority-inversion",
+        description="low-priority memory hogs start first; a high-priority "
+                    "job arrives late and must still get its weighted share",
+        jobs=[JobSpec("hog0", "large", 0.0, 3, priority=1.0),
+              JobSpec("hog1", "large", 0.15, 3, priority=1.0),
+              JobSpec("vip", "medium", 0.6, 2, priority=4.0)],
+        arbiter_policy="priority"),
+    Scenario(
+        name="bursty",
+        description="a burst of small jobs interferes with one big job",
+        jobs=[JobSpec("big", "large", 0.0, 4)] + [
+            JobSpec(f"burst{i}", "small", 0.5 + 0.08 * i, 1)
+            for i in range(4)],
+        arbiter_policy="equal"),
+]
+
+
+# ----------------------------------------------------------------------
+# Arbiter replay: min assignment over the scenario's launch/finish phases
+# ----------------------------------------------------------------------
+def replay_arbiter(arbiter: BudgetArbiter,
+                   windows: Dict[str, Tuple[float, float]]
+                   ) -> Dict[str, int]:
+    """Walk the scenario's launch/finish events; at each boundary the
+    arbiter re-splits the device budget over the live set (exactly what the
+    Global Controller does at every launch/finish replan).  A job plans
+    once against its *minimum* assignment over its lifetime, so the split
+    stays sound in the most-crowded phase it lives through."""
+    boundaries = sorted({t for w in windows.values() for t in w})
+    assigned: Dict[str, int] = {}
+    for lo, hi in zip(boundaries, boundaries[1:]):
+        mid = 0.5 * (lo + hi)
+        live = [j for j, (s, e) in windows.items() if s <= mid < e]
+        if not live:
+            continue
+        split = arbiter.split(live)
+        for j, b in split.items():
+            assigned[j] = min(assigned.get(j, b), b)
+    return assigned
+
+
+def jain_fairness(utilisation: Dict[str, float]) -> float:
+    xs = [max(x, 0.0) for x in utilisation.values()]
+    if not xs or not any(xs):
+        return 1.0
+    return min(1.0, (sum(xs) ** 2) / (len(xs) * sum(x * x for x in xs)))
+
+
+# ----------------------------------------------------------------------
+# One scenario under one policy
+# ----------------------------------------------------------------------
+def _build_jobs(scn: Scenario, smoke: bool):
+    seqs, offsets, iters, prios = [], {}, {}, {}
+    mean_T = 0.0
+    for js in scn.jobs:
+        shape, batch = SHAPES[js.size][smoke]
+        seq = _mlp_seq(tuple(shape), batch).clone(js.job_id)
+        seqs.append(seq)
+        mean_T += seq.iteration_time
+    mean_T /= len(seqs)
+    for js, seq in zip(scn.jobs, seqs):
+        offsets[js.job_id] = js.offset_frac * mean_T
+        iters[js.job_id] = js.iterations
+        prios[js.job_id] = js.priority
+    return seqs, offsets, iters, prios
+
+
+def run_scenario(scn: Scenario, smoke: bool = False,
+                 policies=POLICIES) -> Dict:
+    seqs, offsets, iters, prios = _build_jobs(scn, smoke)
+    jobs = {s.job_id: s for s in seqs}
+
+    # vanilla reference: nothing freed before iteration end (paper §V-A)
+    vanilla = simulate(seqs, None, PROFILE, iterations=iters,
+                       offsets=offsets, free_at_last_use=False)
+    budget = int(vanilla.peak_bytes * scn.budget_frac)
+
+    # the arbiter split each job plans against (launch/finish replay)
+    arbiter = BudgetArbiter(budget, policy=scn.arbiter_policy)
+    windows = {}
+    for s in seqs:
+        arbiter.register(
+            s.job_id, priority=prios[s.job_id],
+            demand_bytes=analyze([s], free_at_last_use=False).peak_bytes)
+        start = offsets[s.job_id]
+        windows[s.job_id] = (start,
+                            start + iters[s.job_id] * s.iteration_time)
+    budgets = replay_arbiter(arbiter, windows)
+
+    rec = {
+        "description": scn.description,
+        "device_budget": budget,
+        "vanilla_peak": vanilla.peak_bytes,
+        "arbiter_policy": scn.arbiter_policy,
+        "jobs": {j: {"offset": offsets[j], "iterations": iters[j],
+                     "priority": prios[j], "budget": budgets.get(j, 0)}
+                 for j in jobs},
+        "policies": {},
+    }
+
+    equal_split = {j: budget // len(jobs) for j in jobs}
+    for policy in policies:
+        cfg = SchedulerConfig(memory_budget_bytes=budget,
+                              job_priorities=dict(prios))
+        entitlement = equal_split
+        if policy in ("tensile+priority", "tensile+autoscale"):
+            cfg.per_job_budget_bytes = dict(budgets)
+            entitlement = budgets
+        plans = None
+        plan_wall = 0.0
+        if policy != "vanilla":
+            res = build_pipeline(policy, profile=PROFILE, config=cfg) \
+                .plan(seqs, offsets=offsets)
+            plans = res.plans
+            plan_wall = res.plan_wallclock_s
+        eng = MemoryEngine(PROFILE, capacity_bytes=budget)
+        sim = simulate(seqs, plans, PROFILE, iterations=iters,
+                       offsets=offsets,
+                       free_at_last_use=(policy != "vanilla"),
+                       engine=eng)
+        msr = sim.msr(vanilla)
+        eor = sim.eor(vanilla)
+        util = {j: sim.per_job_peak.get(j, 0) / max(entitlement.get(j, 1), 1)
+                for j in jobs}
+        rec["policies"][policy] = {
+            "peak": sim.peak_bytes,
+            "within_budget": bool(sim.peak_bytes <= budget),
+            "oom_events": eng.ledger.oom_events,
+            "MSR": msr, "EOR": eor,
+            "CBR": sim.cbr(vanilla),
+            "time": sim.total_time,
+            "fairness": jain_fairness(util),
+            "per_job_peak": dict(sim.per_job_peak),
+            "swap_conflicts": sim.swap_conflicts,
+            "passive_swap_ins": sim.passive_swap_ins,
+            "plan_wallclock_s": plan_wall,
+        }
+    return rec
+
+
+def run(out_json: Optional[str] = None, smoke: bool = False,
+        policies=POLICIES) -> Dict[str, Dict]:
+    table = {scn.name: run_scenario(scn, smoke=smoke, policies=policies)
+             for scn in SCENARIOS}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(table, f, indent=1)
+    return table
+
+
+def format_markdown(table: Dict[str, Dict]) -> str:
+    lines = ["| scenario | policy | peak (MiB) | ≤ budget | MSR | EOR | "
+             "CBR | fairness |",
+             "|---|---|---|---|---|---|---|---|"]
+    for scn, rec in table.items():
+        for pol, m in rec["policies"].items():
+            cbr = (f"{m['CBR']:.3f}" if m["CBR"] < 1e3 else "≫100")
+            lines.append(
+                f"| {scn} | {pol} | {m['peak'] / 2**20:.2f} "
+                f"| {'✓' if m['within_budget'] else '✗'} "
+                f"| {m['MSR']:.4f} | {m['EOR']:.4f} | {cbr} "
+                f"| {m['fairness']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_markdown(run(smoke="--smoke" in sys.argv)))

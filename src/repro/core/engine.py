@@ -119,6 +119,67 @@ class DeviceLedger:
                 self.trace.record("free", job_id, storage)
             return nbytes
 
+    def view(self, job_id: str,
+             budget_bytes: Optional[int] = None) -> "JobLedgerView":
+        """A per-job window onto this shared ledger (multi-workload
+        controller: one DeviceLedger, one view per live job)."""
+        return JobLedgerView(self, job_id, budget_bytes)
+
+
+class JobLedgerView:
+    """One job's window onto the shared ``DeviceLedger``.
+
+    The Global Controller's BudgetArbiter assigns every live job a slice of
+    the device-wide budget; this view pairs that slice with the job's live
+    accounting so passes, tests and reports can ask "is job j inside its
+    arbiter share?" without reaching around the ledger.  It is a *view*:
+    all mutation still goes through the one shared ledger, so cross-job
+    invariants (global peak, OOM counting) cannot be bypassed.
+    """
+
+    def __init__(self, ledger: DeviceLedger, job_id: str,
+                 budget_bytes: Optional[int] = None):
+        self.ledger = ledger
+        self.job_id = job_id
+        self.budget_bytes = budget_bytes
+
+    # -- queries (job-scoped) ------------------------------------------
+    @property
+    def used(self) -> int:
+        return self.ledger.job_bytes(self.job_id)
+
+    @property
+    def peak(self) -> int:
+        return self.ledger.job_peak(self.job_id)
+
+    def is_resident(self, job_id: str, storage: str) -> bool:
+        """Residency-oracle signature (JobContext.input_action compatible);
+        answers only for the owning job."""
+        return job_id == self.job_id \
+            and self.ledger.is_resident(job_id, storage)
+
+    def resident_storages(self) -> List[str]:
+        return self.ledger.resident_storages(self.job_id)
+
+    # -- budget arithmetic ---------------------------------------------
+    @property
+    def headroom(self) -> Optional[int]:
+        if self.budget_bytes is None:
+            return None
+        return self.budget_bytes - self.used
+
+    @property
+    def over_budget(self) -> bool:
+        return self.budget_bytes is not None and self.used > self.budget_bytes
+
+    # -- mutations (delegate; job pinned) ------------------------------
+    def alloc(self, storage: str, nbytes: int,
+              t: Optional[float] = None) -> bool:
+        return self.ledger.alloc(self.job_id, storage, nbytes, t)
+
+    def free(self, storage: str, t: Optional[float] = None) -> int:
+        return self.ledger.free(self.job_id, storage, t)
+
 
 # ----------------------------------------------------------------------
 # The single host-DMA channel

@@ -1,4 +1,4 @@
-"""Global Controller (paper §III-D, Fig. 3).
+"""Global Controller (paper §III-D, Fig. 3) + cross-job budget arbitration.
 
 Owns the job registry for a device: launches each job's Executor on its own
 thread, funnels measured operator latencies back to the Memory Scheduler,
@@ -13,21 +13,48 @@ The four-step scheduling procedure of §III-D maps to:
   2. `_replan()`     — Memory Scheduler generates/updates the plans
   3. Executor threads + the shared AsyncSwapExecutor run the plans
   4. latency reports — EWMA-folded; drift beyond threshold triggers 2.
+
+Beyond the paper: the **BudgetArbiter** owns the device-wide byte budget
+and splits it across live jobs by a pluggable policy (equal-share,
+priority-weighted, peak-proportional from measured per-job peaks).  The
+split is recomputed at every launch, every finish (the departing job's
+bytes are reclaimed and redistributed), and every latency-drift replan;
+per-job pipelines then plan against the arbiter-assigned slice instead of
+the full device (passes.PriorityPass / passes.BudgetAutoscalePass).  Plan
+versions still swap only at iteration boundaries, so a budget move never
+tears an in-flight iteration.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time as _time
-from typing import Any, Callable, Dict, List, Optional
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .access import AccessSequence
 from .cost_model import CostModel, EWMATracker
-from .engine import DeviceLedger, DmaChannel, MemoryEngine
+from .engine import DeviceLedger, DmaChannel, JobLedgerView, MemoryEngine
 from .executor import JaxprExecutor
 from .graph_capture import capture_train_step
+from .peak_analysis import analyze
 from .plan import MachineProfile, SchedulingPlan
 from .scheduler import MemoryScheduler, SchedulerConfig
+
+
+class JobFailedError(RuntimeError):
+    """One or more job threads died.  Carries every failed handle so a
+    multi-job failure is reported whole instead of masking all but the
+    first; the first underlying exception is chained as ``__cause__``."""
+
+    def __init__(self, failures: Dict[str, BaseException],
+                 tracebacks: Optional[Dict[str, str]] = None):
+        self.failures = dict(failures)
+        self.tracebacks = dict(tracebacks or {})
+        detail = "; ".join(
+            f"{j}: {type(e).__name__}: {e}" for j, e in self.failures.items())
+        super().__init__(
+            f"{len(self.failures)} job(s) failed — {detail}")
 
 
 @dataclasses.dataclass
@@ -37,14 +64,127 @@ class JobHandle:
     closed_jaxpr: Any
     args: tuple
     iterations: int
+    priority: float = 1.0
     thread: Optional[threading.Thread] = None
     plan: Optional[SchedulingPlan] = None
     plan_version: int = 0
     done: bool = False
     error: Optional[BaseException] = None
+    error_tb: Optional[str] = None
     stats: List[Any] = dataclasses.field(default_factory=list)
     step_times: List[float] = dataclasses.field(default_factory=list)
     peak_bytes: int = 0
+    # the arbiter-assigned slice of the device budget, as a live view over
+    # the shared DeviceLedger (None until the first split)
+    ledger_view: Optional[JobLedgerView] = None
+
+    @property
+    def budget_bytes(self) -> Optional[int]:
+        return self.ledger_view.budget_bytes if self.ledger_view else None
+
+
+# ----------------------------------------------------------------------
+# Budget arbitration (device-wide budget -> per-job slices)
+# ----------------------------------------------------------------------
+def _equal_weights(arb: "BudgetArbiter", live: Sequence[str]
+                   ) -> Dict[str, float]:
+    return {j: 1.0 for j in live}
+
+
+def _priority_weights(arb: "BudgetArbiter", live: Sequence[str]
+                      ) -> Dict[str, float]:
+    return {j: max(arb.priorities.get(j, 1.0), 1e-9) for j in live}
+
+
+def _peak_weights(arb: "BudgetArbiter", live: Sequence[str]
+                  ) -> Dict[str, float]:
+    """Proportional to each job's peak demand: the measured per-job peak
+    (folded in from the shared DeviceLedger / EngineTrace as the job runs)
+    once available, else the predicted vanilla peak from capture."""
+    return {j: float(max(arb.demands.get(j, 0), 1)) for j in live}
+
+
+ARBITER_POLICIES: Dict[str, Callable[["BudgetArbiter", Sequence[str]],
+                                     Dict[str, float]]] = {
+    "equal": _equal_weights,
+    "priority": _priority_weights,
+    "peak": _peak_weights,
+}
+
+
+class BudgetArbiter:
+    """Owns the device-wide byte budget and splits it across live jobs.
+
+    ``split(live)`` runs weighted water-filling: each job's raw share is
+    ``capacity * w_j / Σw``; a job whose known demand (its vanilla peak —
+    it can never profitably hold more) is below its share is capped at the
+    demand and the surplus re-flows to the uncapped jobs.  Policies are
+    pluggable via ``ARBITER_POLICIES`` (equal / priority / peak).  Every
+    split is appended to ``history`` so tests and reports can audit how
+    budgets moved across launch/finish/drift replans.
+    """
+
+    def __init__(self, capacity_bytes: int, policy: str = "equal"):
+        if policy not in ARBITER_POLICIES:
+            raise KeyError(f"unknown arbiter policy {policy!r}; "
+                           f"known: {sorted(ARBITER_POLICIES)}")
+        self.capacity = int(capacity_bytes)
+        self.policy = policy
+        self.priorities: Dict[str, float] = {}
+        self.demands: Dict[str, int] = {}       # peak demand, bytes
+        self.history: List[Dict[str, int]] = []
+        self.last_assignment: Dict[str, int] = {}
+
+    # -- registry ------------------------------------------------------
+    def register(self, job_id: str, priority: float = 1.0,
+                 demand_bytes: int = 0) -> None:
+        self.priorities[job_id] = priority
+        self.demands[job_id] = int(demand_bytes)
+
+    def update_demand(self, job_id: str, demand_bytes: int) -> None:
+        """Fold in a measured peak (monotone max — demand never shrinks
+        within a job's lifetime)."""
+        if job_id in self.demands:
+            self.demands[job_id] = max(self.demands[job_id],
+                                       int(demand_bytes))
+
+    def unregister(self, job_id: str) -> None:
+        self.priorities.pop(job_id, None)
+        self.demands.pop(job_id, None)
+
+    # -- the split -----------------------------------------------------
+    def split(self, live: Sequence[str]) -> Dict[str, int]:
+        live = [j for j in live if j in self.priorities]
+        if not live:
+            self.last_assignment = {}
+            return {}
+        weights = ARBITER_POLICIES[self.policy](self, live)
+        assignment: Dict[str, int] = {}
+        remaining = self.capacity
+        pool = sorted(live)
+        # water-fill: repeatedly give each job its weighted share of what
+        # is left; jobs capped by demand leave the pool and their surplus
+        # re-flows (bounded by len(live) rounds)
+        while pool and remaining > 0:
+            total_w = sum(weights[j] for j in pool)
+            capped = []
+            for j in pool:
+                share = int(remaining * weights[j] / total_w)
+                demand = self.demands.get(j, 0)
+                if demand and demand < share:
+                    assignment[j] = demand
+                    capped.append(j)
+            if not capped:
+                for j in pool:
+                    assignment[j] = int(remaining * weights[j] / total_w)
+                break
+            remaining -= sum(assignment[j] for j in capped)
+            pool = [j for j in pool if j not in capped]
+        for j in live:
+            assignment.setdefault(j, 0)
+        self.last_assignment = dict(assignment)
+        self.history.append(dict(assignment))
+        return assignment
 
 
 class GlobalController:
@@ -52,41 +192,74 @@ class GlobalController:
                  scheduler_config: Optional[SchedulerConfig] = None,
                  cost_model: Optional[CostModel] = None,
                  device_capacity: Optional[int] = None,
-                 async_swap: bool = True):
+                 async_swap: bool = True,
+                 pipeline_name: Optional[str] = None,
+                 arbiter: Optional[BudgetArbiter] = None,
+                 arbiter_policy: Optional[str] = None):
         self.profile = profile or MachineProfile()
-        self.scheduler = MemoryScheduler(self.profile, scheduler_config)
+        pipeline = None
+        if pipeline_name is not None:
+            from .passes import build_pipeline
+            cfg = scheduler_config or SchedulerConfig()
+            scheduler_config = cfg
+            pipeline = build_pipeline(pipeline_name, profile=self.profile,
+                                      config=cfg)
+        self.scheduler = MemoryScheduler(self.profile, scheduler_config,
+                                         pipeline=pipeline)
         self.cost_model = cost_model or CostModel()
         # one engine ledger + DMA channel shared by every job on the device
         self.engine = MemoryEngine(self.profile,
                                    capacity_bytes=device_capacity)
         self.accountant: DeviceLedger = self.engine.ledger
         self.channel: DmaChannel = self.engine.channel
+        # the device-wide budget the arbiter splits: explicit capacity,
+        # else the scheduler's budget, else the device size
+        cap = device_capacity
+        if cap is None:
+            cap = (self.scheduler.config.memory_budget_bytes
+                   or self.profile.device_memory_bytes)
+        self.arbiter = arbiter or (
+            BudgetArbiter(cap, policy=arbiter_policy)
+            if arbiter_policy is not None else None)
         self.async_swap = async_swap
         self.jobs: Dict[str, JobHandle] = {}
         self.ewma: Dict[str, EWMATracker] = {}
         self._lock = threading.Lock()
         self._replan_count = 0
+        # replans that failed while redistributing a departed job's budget
+        # (survivors keep their current plans): (departed_job_id, error)
+        self.replan_failures: List[tuple] = []
 
     # ------------------------------------------------------------------
     def launch(self, step_fn: Callable, params, opt_state, batch,
                job_id: str, iterations: int = 3,
-               schedule: bool = True) -> JobHandle:
+               schedule: bool = True,
+               priority: Optional[float] = None) -> JobHandle:
         """Register + start a training job (async, like the paper's
-        sub-process per Executor)."""
+        sub-process per Executor).  `priority` feeds the BudgetArbiter's
+        priority-weighted policy and PriorityPass victim ordering; when
+        omitted, a priority configured in SchedulerConfig.job_priorities
+        (else 1.0) applies."""
         # reflect current device contention into cold-start predictions
         self.cost_model.utilization = min(
             0.9, 0.3 * sum(1 for j in self.jobs.values() if not j.done))
         seq, closed = capture_train_step(
             step_fn, params, opt_state, batch, job_id=job_id,
             cost_model=self.cost_model)
-        handle = JobHandle(job_id=job_id, seq=seq, closed_jaxpr=closed,
-                           args=(params, opt_state, batch),
-                           iterations=iterations)
         with self._lock:
+            self.scheduler.register_job(seq, priority=priority)
+            eff_priority = self.scheduler.priority_of(job_id)
+            handle = JobHandle(job_id=job_id, seq=seq, closed_jaxpr=closed,
+                               args=(params, opt_state, batch),
+                               iterations=iterations, priority=eff_priority)
             self.jobs[job_id] = handle
             self.ewma[job_id] = EWMATracker(
                 alpha=self.scheduler.config.ewma_alpha)
-            self.scheduler.register_job(seq)
+            if self.arbiter is not None:
+                # peak demand: predicted vanilla peak until measurements land
+                demand = analyze([seq], free_at_last_use=False).peak_bytes
+                self.arbiter.register(job_id, priority=eff_priority,
+                                      demand_bytes=demand)
             if schedule:
                 self._replan()
         t = threading.Thread(target=self._run_job, args=(handle,), daemon=True)
@@ -96,15 +269,32 @@ class GlobalController:
 
     # ------------------------------------------------------------------
     def _replan(self) -> None:
-        """Memory Scheduler pass over all live jobs; distribute plans."""
+        """Memory Scheduler pass over all live jobs; distribute plans.
+
+        With an arbiter, the device budget is re-split first (launch,
+        finish, and latency drift all funnel through here, so "re-splits on
+        every replan" is structural) and the per-job slices are planned
+        against.  Executors pick the new plan up at their next iteration
+        boundary — `_run_job` reads (plan, version) under the lock only
+        between iterations, so a budget move never tears a running one."""
         live = [j for j, h in self.jobs.items() if not h.done]
         if not live:
             return
-        result = self.scheduler.schedule(live)
+        budgets: Optional[Dict[str, int]] = None
+        if self.arbiter is not None:
+            for j in live:
+                # fold measured peaks (shared-ledger accounting) into demand
+                measured = self.accountant.job_peak(j)
+                if measured:
+                    self.arbiter.update_demand(j, measured)
+            budgets = self.arbiter.split(live)
+        result = self.scheduler.schedule(live, budgets=budgets)
         for j in live:
             h = self.jobs[j]
             h.plan = result.plans[j]
             h.plan_version += 1
+            if budgets is not None:
+                h.ledger_view = self.accountant.view(j, budgets.get(j))
         self._replan_count += 1
 
     # ------------------------------------------------------------------
@@ -165,12 +355,25 @@ class GlobalController:
                         with self._lock:
                             self._replan()
                 ex.close()
+        except BaseException as e:  # noqa: BLE001 - surfaced via wait()
+            handle.error = e
+            handle.error_tb = traceback.format_exc()
+        finally:
+            # departure bookkeeping runs for clean finishes AND crashes,
+            # outside the job's own try: a failure while replanning the
+            # SURVIVORS must not blame this (possibly successful) job
             handle.done = True
             with self._lock:
                 self.scheduler.remove_job(handle.job_id)
-        except BaseException as e:  # noqa: BLE001 - surfaced to caller
-            handle.error = e
-            handle.done = True
+                if self.arbiter is not None:
+                    # the departing job's slice is reclaimed and
+                    # redistributed across the survivors right away
+                    self.arbiter.unregister(handle.job_id)
+                    try:
+                        self._replan()
+                    except Exception as e:  # noqa: BLE001
+                        # survivors keep their current (still valid) plans
+                        self.replan_failures.append((handle.job_id, e))
 
     # ------------------------------------------------------------------
     def report_latencies(self, job_id: str, measured: List[float]) -> bool:
@@ -179,16 +382,30 @@ class GlobalController:
                 return False
             return self.scheduler.update_latencies(job_id, measured)
 
-    def wait(self, timeout: Optional[float] = None) -> None:
+    def failures(self) -> Dict[str, BaseException]:
+        """Failed jobs so far (job_id -> exception)."""
+        return {j: h.error for j, h in self.jobs.items()
+                if h.error is not None}
+
+    def wait(self, timeout: Optional[float] = None,
+             raise_errors: bool = True) -> None:
+        """Join every job thread, then surface job-thread failures loudly:
+        all of them at once (``JobFailedError.failures``/``tracebacks``),
+        with the first original exception chained as the cause.  Failures
+        are raised even when the timeout expires before every thread
+        joins — a dead job must not be masked by a slow one."""
         deadline = None if timeout is None else _time.time() + timeout
         for h in list(self.jobs.values()):
             if h.thread is None:
                 continue
             remaining = None if deadline is None else max(0.0, deadline - _time.time())
             h.thread.join(remaining)
-        for h in self.jobs.values():
-            if h.error is not None:
-                raise h.error
+        failures = self.failures()
+        if failures and raise_errors:
+            tbs = {j: self.jobs[j].error_tb for j in failures
+                   if self.jobs[j].error_tb}
+            err = JobFailedError(failures, tbs)
+            raise err from next(iter(failures.values()))
 
     @property
     def global_peak_bytes(self) -> int:

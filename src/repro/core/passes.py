@@ -25,6 +25,19 @@ reproduced baselines — is now a pass configuration over this one engine:
     tensile+compressed-offload
              = Pipeline([SwapPass(), CompressedOffloadPass(),
                          RecomputePass()], cross_iteration=True)
+    tensile+priority
+             = Pipeline([PriorityPass(), RecomputePass()],
+                        cross_iteration=True)
+    tensile+autoscale
+             = Pipeline([SwapPass(), BudgetAutoscalePass(),
+                         RecomputePass()], cross_iteration=True)
+
+The two cross-job pipelines plan against *arbiter-assigned per-job budgets*
+(``SchedulerConfig.per_job_budget_bytes``, filled in by the Global
+Controller's ``BudgetArbiter`` on every launch/finish/drift replan) instead
+of the full device: ``PriorityPass`` picks swap victims from the
+lowest-priority over-share jobs first, and ``BudgetAutoscalePass`` keeps
+swapping the most over-budget job until every job fits its assigned slice.
 
 New policies are one-file additions: implement the protocol, register a
 configuration in ``PIPELINES``.
@@ -61,6 +74,13 @@ class SchedulerConfig:
     # quantize-on-offload: only tensors at or below this size take the
     # compressed path (confines int8 error to small peak contributors)
     compressed_max_bytes: int = 64 * 2 ** 20
+    # cross-job arbitration (filled in by the Global Controller's
+    # BudgetArbiter on every launch/finish/drift replan): per-job byte
+    # budgets the pipelines plan against instead of the full device, and
+    # per-job priority weights (default 1.0) PriorityPass uses to pick
+    # swap victims from low-priority jobs first
+    per_job_budget_bytes: Optional[Dict[str, int]] = None
+    job_priorities: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -92,6 +112,12 @@ class PipelineState:
     budget: int
     cross_iteration: bool = True
     shared: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # arbiter-assigned per-job byte budgets; empty = every job plans
+    # against the shared device-wide `budget` (single-job / legacy mode)
+    job_budgets: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def priority_of(self, job_id: str) -> float:
+        return (self.config.job_priorities or {}).get(job_id, 1.0)
 
     @staticmethod
     def solo(seq: AccessSequence, plan: SchedulingPlan,
@@ -105,6 +131,35 @@ class PipelineState:
             budget=(cfg.memory_budget_bytes
                     if cfg.memory_budget_bytes is not None
                     else profile.device_memory_bytes))
+
+
+def _solo_report(state: "PipelineState", job_id: str,
+                 cache: Dict[str, Tuple[Tuple[int, int], PeakReport]]
+                 ) -> PeakReport:
+    """A job's own-timeline peak report, cached until its plan changes —
+    the arbiter passes consult it once per greedy step per offender, and
+    only the job whose plan was just modified ever goes stale."""
+    plan = state.plans[job_id]
+    key = (len(plan.events), len(plan.release_after_op))
+    hit = cache.get(job_id)
+    if hit is not None and hit[0] == key:
+        return hit[1]
+    rep = analyze([state.jobs[job_id]], plans={job_id: plan})
+    cache[job_id] = (key, rep)
+    return rep
+
+
+def over_budget_jobs(state: "PipelineState",
+                     report: PeakReport) -> Dict[str, int]:
+    """job -> excess bytes over its arbiter-assigned budget.  Per-job peaks
+    bound the global peak (at any instant each job holds at most its own
+    peak), so driving every excess to zero certifies the device budget."""
+    out: Dict[str, int] = {}
+    for j, b in state.job_budgets.items():
+        excess = report.per_job_peak.get(j, 0) - b
+        if excess > 0:
+            out[j] = excess
+    return out
 
 
 # ----------------------------------------------------------------------
@@ -188,6 +243,7 @@ class RecomputePass(PlanningPass):
 
     def setup(self, state: PipelineState) -> None:
         super().setup(state)
+        self._solo_cache: Dict[str, Tuple[Tuple[int, int], PeakReport]] = {}
         if self.style == "tensile":
             self.planners = {
                 j: RecomputePlanner(state.jobs[j], state.plans[j])
@@ -196,12 +252,26 @@ class RecomputePass(PlanningPass):
     def gate(self, report: PeakReport) -> bool:
         if self.style == "capuchin":
             return True
-        return report.peak_bytes >= self.state.budget
+        # over the device budget, or (under the arbiter) any job over its
+        # assigned slice — swap passes retire first, so recomputation is the
+        # remaining lever to certify the split
+        return report.peak_bytes >= self.state.budget \
+            or bool(over_budget_jobs(self.state, report))
 
     def step(self, report: PeakReport) -> bool:
         if self.style == "capuchin":
             return _capuchin_step(self.state, want="recompute")
-        return plan_one_recompute(self.planners, report)
+        if plan_one_recompute(self.planners, report):
+            return True
+        # arbiter mode: a job can violate its slice away from the global
+        # peak instant; retry against the offenders' solo reports
+        state = self.state
+        over = over_budget_jobs(state, report)
+        for job_id in sorted(over, key=lambda j: -over[j]):
+            rep_j = _solo_report(state, job_id, self._solo_cache)
+            if plan_one_recompute({job_id: self.planners[job_id]}, rep_j):
+                return True
+        return False
 
 
 class CompressedOffloadPass(PlanningPass):
@@ -263,6 +333,98 @@ class CompressedOffloadPass(PlanningPass):
                         except ValueError:
                             pass
                     plan.remove(ev)
+
+
+# ----------------------------------------------------------------------
+# Cross-job arbitration passes (ROADMAP: cross-job priority + budget
+# autoscaling) — plan against arbiter-assigned per-job budgets
+# ----------------------------------------------------------------------
+def _build_swap_planners(state: PipelineState) -> Dict[str, "SwapPlanner"]:
+    cfg = state.config
+    return {
+        j: SwapPlanner(state.jobs[j], state.plans[j], state.profile,
+                       (cfg.per_job_swap_ratio or {}).get(
+                           j, cfg.max_swap_ratio),
+                       cross_iteration=state.cross_iteration)
+        for j in state.jobs}
+
+
+class PriorityPass(PlanningPass):
+    """Priority-weighted swap scheduling: like SwapPass, but the victim
+    order is cross-job-aware.  Jobs exceeding their arbiter-assigned budget
+    are tried first, lowest priority first (largest tensor within a job);
+    jobs inside their share are only touched once no over-share job can
+    make progress — so a high-priority job keeps (at least) its weighted
+    slice of the device while low-priority jobs absorb the swapping."""
+
+    name = "priority-swap"
+    kind = "swap"
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        self.planners = _build_swap_planners(state)
+
+    def _victim_order(self, report: PeakReport):
+        state = self.state
+        over = over_budget_jobs(state, report)
+        # when no per-job budgets were assigned every job counts as "over"
+        # (pure priority ordering over the whole MPT)
+        def tier(job_id: str) -> int:
+            if not state.job_budgets:
+                return 0
+            return 0 if job_id in over else 1
+        return sorted(
+            report.peak_tensors,
+            key=lambda t: (tier(t[1]), state.priority_of(t[1]), -t[2]))
+
+    def step(self, report: PeakReport) -> bool:
+        for storage_id, job_id, _size in self._victim_order(report):
+            pl = self.planners.get(job_id)
+            if pl is None:
+                continue
+            for tid in pl.alias_candidates.get(storage_id, ()):
+                if pl.try_swap_tensor(tid, report.peak_time):
+                    return True
+        return False
+
+
+class BudgetAutoscalePass(PlanningPass):
+    """Budget autoscaling enforcement: while any job's per-job peak exceeds
+    its arbiter-assigned slice, swap one tensor from the most over-budget
+    job.  Runs after plain SwapPass retires (pipeline order), so it only
+    adds the job-targeted swaps global largest-first greed missed; planners
+    are built lazily to pick up the earlier passes' channel bookings."""
+
+    name = "budget-autoscale"
+    kind = "swap"
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        self.planners: Optional[Dict[str, SwapPlanner]] = None
+        self._solo_cache: Dict[str, Tuple[Tuple[int, int], PeakReport]] = {}
+
+    def gate(self, report: PeakReport) -> bool:
+        return bool(over_budget_jobs(self.state, report))
+
+    def step(self, report: PeakReport) -> bool:
+        if self.planners is None:
+            self.planners = _build_swap_planners(self.state)
+        state = self.state
+        over = over_budget_jobs(state, report)
+        for job_id in sorted(over, key=lambda j: -over[j]):
+            pl = self.planners.get(job_id)
+            if pl is None:
+                continue
+            # a job's budget violation peaks at ITS OWN peak instant, which
+            # need not coincide with the merged global peak — target the
+            # job's solo report (per-job residency is plan-local, so the
+            # solo peak equals the job's per_job_peak in the merged one)
+            rep_j = _solo_report(state, job_id, self._solo_cache)
+            for storage_id, _owner, _size in rep_j.peak_tensors:
+                for tid in pl.alias_candidates.get(storage_id, ()):
+                    if pl.try_swap_tensor(tid, rep_j.peak_time):
+                        return True
+        return False
 
 
 # ----------------------------------------------------------------------
@@ -538,7 +700,11 @@ class Pipeline:
         state = PipelineState(jobs=jobs, plans=plans, profile=self.profile,
                               config=cfg, offsets=dict(offsets),
                               budget=budget,
-                              cross_iteration=self.cross_iteration)
+                              cross_iteration=self.cross_iteration,
+                              job_budgets={
+                                  j: b for j, b in
+                                  (cfg.per_job_budget_bytes or {}).items()
+                                  if j in jobs})
         passes = self._instantiate()
         for p in passes:
             p.setup(state)
@@ -549,9 +715,18 @@ class Pipeline:
         # working reports use the policy's own platform semantics —
         # vanilla/vdnn frameworks have no activity-analysis releases
         falu = self.free_at_last_use
+
+        def _score(rep: PeakReport) -> int:
+            # convergence signal: the global peak PLUS any remaining
+            # per-job slice violations — autoscale steps reduce a job's
+            # solo peak without necessarily moving the merged peak, and
+            # must not read as stagnation (0 extra when no arbiter split)
+            return rep.peak_bytes + sum(
+                over_budget_jobs(state, rep).values())
+
         report = analyze(seqs, plans=plans, offsets=offsets,
                          free_at_last_use=falu)
-        history: List[int] = [report.peak_bytes]
+        history: List[int] = [_score(report)]
         active = [True] * len(passes)
         steps: Dict[str, int] = {p.name: 0 for p in passes}
         iters = 0
@@ -575,7 +750,7 @@ class Pipeline:
                 active[idx] = False
             report = analyze(seqs, plans=plans, offsets=offsets,
                              free_at_last_use=falu)
-            history.append(report.peak_bytes)
+            history.append(_score(report))
             iters += 1
 
         wall = _time.perf_counter() - t0
@@ -583,6 +758,7 @@ class Pipeline:
             plans[j].vanilla_peak_bytes = initial.per_job_peak.get(j, 0)
             plans[j].planned_peak_bytes = report.per_job_peak.get(j, 0)
             plans[j].plan_wallclock_s = wall
+            plans[j].budget_bytes = state.job_budgets.get(j, budget)
         # counts reflect the PLANS, not the pass bookkeeping: one per
         # distinct swapped tensor (seed semantics) / recompute event
         n_swaps = sum(len(p.swapped_tensors()) for p in plans.values())
@@ -625,12 +801,26 @@ def _tensile_compressed(profile=None, config=None) -> Pipeline:
                     profile=profile, config=config)
 
 
+def _tensile_priority(profile=None, config=None) -> Pipeline:
+    return Pipeline([PriorityPass(), RecomputePass()],
+                    name="tensile+priority", cross_iteration=True,
+                    profile=profile, config=config)
+
+
+def _tensile_autoscale(profile=None, config=None) -> Pipeline:
+    return Pipeline([SwapPass(), BudgetAutoscalePass(), RecomputePass()],
+                    name="tensile+autoscale", cross_iteration=True,
+                    profile=profile, config=config)
+
+
 PIPELINES: Dict[str, Callable[..., Pipeline]] = {
     "vanilla": _vanilla,
     "vdnn": _vdnn,
     "capuchin": _capuchin,
     "tensile": _tensile,
     "tensile+compressed-offload": _tensile_compressed,
+    "tensile+priority": _tensile_priority,
+    "tensile+autoscale": _tensile_autoscale,
 }
 
 

@@ -70,6 +70,10 @@ class SchedulingPlan:
     planned_peak_bytes: int = 0
     vanilla_peak_bytes: int = 0
     plan_wallclock_s: float = 0.0
+    # byte budget this plan was built against: the arbiter-assigned per-job
+    # slice under the Global Controller, else the device-wide budget (0 =
+    # unconstrained / not recorded)
+    budget_bytes: int = 0
     # observation iterations the policy charges before the plan is live
     # (Capuchin's passive-mode epoch; TENSILE/vDNN: 0)
     passive_iterations: int = 0
@@ -113,6 +117,7 @@ class SchedulingPlan:
             "release_after_op": dict(self.release_after_op),
             "planned_peak_bytes": self.planned_peak_bytes,
             "vanilla_peak_bytes": self.vanilla_peak_bytes,
+            "budget_bytes": self.budget_bytes,
         }
 
     @staticmethod
@@ -122,6 +127,7 @@ class SchedulingPlan:
         p.release_after_op = {str(k): int(v) for k, v in d["release_after_op"].items()}  # type: ignore[union-attr]
         p.planned_peak_bytes = int(d.get("planned_peak_bytes", 0))  # type: ignore[arg-type]
         p.vanilla_peak_bytes = int(d.get("vanilla_peak_bytes", 0))  # type: ignore[arg-type]
+        p.budget_bytes = int(d.get("budget_bytes", 0))  # type: ignore[arg-type]
         return p
 
 

@@ -41,19 +41,37 @@ class MemoryScheduler:
             "tensile", profile=self.profile, config=self.config)
         self.jobs: Dict[str, AccessSequence] = {}
         self.offsets: Dict[str, float] = {}
+        self.priorities: Dict[str, float] = {}
+        # construction-time config values are the caller's: they are
+        # restored (not clobbered) whenever a replan has no arbiter split
+        # or a job no registered priority
+        self._static_budgets = (dict(self.config.per_job_budget_bytes)
+                                if self.config.per_job_budget_bytes
+                                else None)
+        self._static_priorities = dict(self.config.job_priorities or {})
         # latency sums used for the last plan, per job (drift detection)
         self._plan_latency_sum: Dict[str, float] = {}
 
     # ------------------------------------------------------------------
-    def register_job(self, seq: AccessSequence, offset: float = 0.0) -> None:
+    def register_job(self, seq: AccessSequence, offset: float = 0.0,
+                     priority: Optional[float] = None) -> None:
         self.jobs[seq.job_id] = seq
         self.offsets[seq.job_id] = offset
+        if priority is not None:
+            self.priorities[seq.job_id] = priority
         self._plan_latency_sum[seq.job_id] = sum(
             op.latency for op in seq.operators)
+
+    def priority_of(self, job_id: str) -> float:
+        """Effective priority: registered value, else the caller's
+        construction-time config, else 1.0."""
+        return self.priorities.get(
+            job_id, self._static_priorities.get(job_id, 1.0))
 
     def remove_job(self, job_id: str) -> None:
         self.jobs.pop(job_id, None)
         self.offsets.pop(job_id, None)
+        self.priorities.pop(job_id, None)
         self._plan_latency_sum.pop(job_id, None)
 
     # ------------------------------------------------------------------
@@ -72,11 +90,31 @@ class MemoryScheduler:
         return abs(s_new - s_old) / s_old > self.config.update_threshold
 
     # ------------------------------------------------------------------
-    def schedule(self, job_ids: Optional[Sequence[str]] = None) -> ScheduleResult:
+    def schedule(self, job_ids: Optional[Sequence[str]] = None,
+                 budgets: Optional[Dict[str, int]] = None) -> ScheduleResult:
         """One pipeline run over the merged timeline of the given (default:
-        all) registered jobs."""
+        all) registered jobs.
+
+        `budgets` are the BudgetArbiter's per-job byte assignments for this
+        replan; they (and the registered priorities) are published into the
+        shared SchedulerConfig so budget-aware passes (PriorityPass,
+        BudgetAutoscalePass) plan against the arbiter split instead of the
+        full device.  Both change across replans — budget is an *input* of
+        a plan, not a constant of the scheduler."""
         ids = list(job_ids) if job_ids is not None else list(self.jobs)
         seqs = [self.jobs[j] for j in ids]
+        # registered priorities overlay construction-time config ones
+        self.config.job_priorities = {
+            j: self.priorities.get(j, self._static_priorities.get(j, 1.0))
+            for j in ids}
+        # rebuilt every replan — a replan without an arbiter split must not
+        # re-enforce a previous split's stale slices, but it does restore
+        # any static per-job budgets the caller configured up front
+        self.config.per_job_budget_bytes = (
+            {j: budgets[j] for j in ids if j in budgets}
+            if budgets is not None
+            else (dict(self._static_budgets)
+                  if self._static_budgets else None))
         result = self.pipeline.plan(
             seqs, offsets={j: self.offsets[j] for j in ids})
         for j in ids:

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .access import AccessSequence
 from .engine import (INPUT_AWAIT_PREFETCH, INPUT_PASSIVE_SWAP_IN,
@@ -84,12 +84,14 @@ class _JobClock:
 def simulate(seqs: Sequence[AccessSequence],
              plans: Optional[Dict[str, SchedulingPlan]] = None,
              profile: Optional[MachineProfile] = None,
-             iterations: int = 2,
+             iterations: Union[int, Dict[str, int]] = 2,
              offsets: Optional[Dict[str, float]] = None,
              free_at_last_use: bool = True,
              transfer_mode: str = "async",
              engine: Optional[MemoryEngine] = None) -> SimResult:
     """Run `iterations` training iterations of every job concurrently.
+    `iterations` may be a per-job dict (dynamic-workload scenarios: short
+    jobs finish and leave while long jobs keep running).
 
     `free_at_last_use=False` reproduces the vanilla platform (nothing is
     released before iteration end — paper §V-A normalizer)."""
@@ -101,7 +103,11 @@ def simulate(seqs: Sequence[AccessSequence],
     jobs: Dict[str, _JobClock] = {}
     for s in seqs:
         ctx = eng.add_job(s, plans.get(s.job_id), offsets.get(s.job_id, 0.0))
-        jobs[s.job_id] = _JobClock(ctx, iterations)
+        # dict form must name every job — a silent default would mask a
+        # typo'd job id with quietly-wrong peak/EOR numbers
+        iters = (iterations[s.job_id] if isinstance(iterations, dict)
+                 else iterations)
+        jobs[s.job_id] = _JobClock(ctx, iters)
 
     stall = 0.0
     passive = 0
@@ -270,7 +276,7 @@ def _persistent_storage(seq: AccessSequence, st: str) -> bool:
 def evaluate(seqs: Sequence[AccessSequence],
              plans: Optional[Dict[str, SchedulingPlan]],
              profile: Optional[MachineProfile] = None,
-             iterations: int = 3,
+             iterations: Union[int, Dict[str, int]] = 3,
              offsets: Optional[Dict[str, float]] = None,
              free_at_last_use: bool = True,
              ) -> Dict[str, float]:

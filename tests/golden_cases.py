@@ -1,0 +1,96 @@
+"""The golden plan-parity cases, defined ONCE.
+
+`tests/test_pipeline.py` asserts these cases (and uses `fp_plan` to
+fingerprint plans), `tools/check_golden_drift.py` regenerates and diffs
+them in CI, and `test_golden_cases_cover_golden_file` cross-checks that
+`regenerate()` reproduces `tests/golden/seed_plans.json` in full — so the
+tool and the tests can never quietly enforce different cases.
+"""
+from __future__ import annotations
+
+from repro.core import (MachineProfile, MemoryScheduler, SchedulerConfig,
+                        schedule_single)
+from repro.core.baselines import capuchin_plan, vdnn_conv_plan
+
+from helpers import capture_mlp, synthetic_chain
+
+PROFILE = MachineProfile(host_link_bw=1e6, host_link_latency=1e-3,
+                         compute_flops=1e9, mem_bw=1e9)
+MLP_PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10,
+                             mem_bw=1e10)
+
+
+def fp_plan(plan):
+    """Canonical plan fingerprint every golden comparison uses."""
+    evs = sorted(
+        (e.event_type.value, e.tensor_id, e.trigger_op,
+         round(e.delta, 9), round(e.start, 9), round(e.end, 9),
+         e.size_bytes, e.target_op,
+         list(e.recompute_ops or []), bool(e.crosses_iteration))
+        for e in plan.events)
+    return {"events": [[list(x) if isinstance(x, tuple) else x for x in ev]
+                       for ev in evs],
+            "release_after_op": dict(sorted(plan.release_after_op.items()))}
+
+
+def regenerate() -> dict:
+    """Re-derive every golden case through the current pass pipeline."""
+    out: dict = {}
+
+    seq = synthetic_chain(n_ops=12, latency=2.0, seed=0)
+    res = schedule_single(seq, profile=PROFILE)
+    out["tensile_chain"] = {
+        "plan": fp_plan(res.plans[seq.job_id]),
+        "initial_peak": res.initial_report.peak_bytes,
+        "final_peak": res.final_report.peak_bytes,
+        "iterations": res.iterations,
+        "swaps": res.swaps_scheduled,
+        "recomputes": res.recomputes_scheduled,
+    }
+    out["vdnn_chain"] = {"plan": fp_plan(vdnn_conv_plan(seq, PROFILE))}
+    out["capuchin_chain"] = {
+        "plan": fp_plan(capuchin_plan(seq, budget_bytes=50_000,
+                                      profile=PROFILE).plan)}
+
+    tight = MachineProfile(host_link_bw=1.0, host_link_latency=100.0,
+                           compute_flops=1e9, mem_bw=1e9)
+    seq9 = synthetic_chain(n_ops=10, latency=1.0, seed=9)
+    sched = MemoryScheduler(tight, SchedulerConfig(memory_budget_bytes=1))
+    sched.register_job(seq9)
+    res9 = sched.schedule()
+    out["tensile_recompute_chain"] = {
+        "plan": fp_plan(res9.plans[seq9.job_id]),
+        "final_peak": res9.final_report.peak_bytes,
+        "swaps": res9.swaps_scheduled,
+        "recomputes": res9.recomputes_scheduled,
+    }
+
+    a = synthetic_chain(n_ops=8, latency=2.0, job_id="a", seed=1)
+    b = synthetic_chain(n_ops=8, latency=2.0, job_id="b", seed=2)
+    ms = MemoryScheduler(PROFILE, SchedulerConfig(max_swap_ratio=0.5))
+    ms.register_job(a)
+    ms.register_job(b, offset=3.0)
+    resm = ms.schedule()
+    out["tensile_multi"] = {
+        "plans": {j: fp_plan(resm.plans[j]) for j in ("a", "b")},
+        "final_peak": resm.final_report.peak_bytes,
+        "swaps": resm.swaps_scheduled,
+        "recomputes": resm.recomputes_scheduled,
+    }
+
+    mseq, _, _ = capture_mlp(sizes=(64, 128, 128, 8), batch=16)
+    mres = schedule_single(mseq, profile=MLP_PROFILE)
+    out["tensile_mlp"] = {
+        "plan": fp_plan(mres.plans[mseq.job_id]),
+        "final_peak": mres.final_report.peak_bytes,
+        "swaps": mres.swaps_scheduled,
+        "recomputes": mres.recomputes_scheduled,
+    }
+    out["vdnn_mlp"] = {"plan": fp_plan(vdnn_conv_plan(mseq, MLP_PROFILE))}
+    cap = capuchin_plan(mseq, budget_bytes=10_000, profile=MLP_PROFILE)
+    out["capuchin_mlp"] = {"plan": fp_plan(cap.plan),
+                           "passive_iterations": cap.passive_iterations}
+    cap2 = capuchin_plan(mseq, budget_bytes=mres.final_report.peak_bytes,
+                         profile=MLP_PROFILE)
+    out["capuchin_mlp_tensile_budget"] = {"plan": fp_plan(cap2.plan)}
+    return out

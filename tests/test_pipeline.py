@@ -15,6 +15,7 @@ from repro.core.baselines import capuchin_plan, vdnn_conv_plan
 from repro.core.passes import PIPELINES, PlanningPass, SwapPass
 from repro.core.peak_analysis import analyze
 
+from golden_cases import fp_plan as _canonical_fp_plan
 from helpers import capture_mlp, synthetic_chain
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "seed_plans.json")
@@ -31,23 +32,20 @@ def gold():
         return json.load(f)
 
 
-def fp_plan(plan):
-    evs = sorted(
-        (e.event_type.value, e.tensor_id, e.trigger_op,
-         round(e.delta, 9), round(e.start, 9), round(e.end, 9),
-         e.size_bytes, e.target_op,
-         list(e.recompute_ops or []), bool(e.crosses_iteration))
-        for e in plan.events)
-    return {"events": [list(_listify(ev)) for ev in evs],
-            "release_after_op": dict(sorted(plan.release_after_op.items()))}
-
-
-def _listify(t):
-    return [list(x) if isinstance(x, tuple) else x for x in t]
+# the one canonical fingerprint (tests + tools/check_golden_drift.py)
+fp_plan = _canonical_fp_plan
 
 
 def assert_matches(got, want):
     assert json.loads(json.dumps(got)) == want
+
+
+def test_golden_cases_cover_golden_file(gold):
+    """tools/check_golden_drift.py regenerates the SAME cases these tests
+    assert: golden_cases.regenerate() must reproduce the pinned file in
+    full, so tool and tests can never enforce different definitions."""
+    from golden_cases import regenerate
+    assert_matches(regenerate(), gold)
 
 
 # ---------------------------------------------------------------- goldens

@@ -1,0 +1,60 @@
+"""Dynamic multi-workload scenario suite acceptance (smoke-sized).
+
+The contract the CI scenarios-smoke job also enforces: >= 4 multi-job
+dynamic scenarios; under `tensile+autoscale` every scenario's global peak
+stays within the scenario's device budget (zero OOM events in the shared
+capacity-limited ledger) while `vanilla` exceeds it on at least two."""
+import pytest
+
+
+@pytest.fixture(scope="module")
+def table():
+    from benchmarks import scenarios
+    return scenarios.run(smoke=True)
+
+
+def test_suite_has_dynamic_multi_job_scenarios(table):
+    assert len(table) >= 4
+    names = set(table)
+    assert {"staggered", "churn", "priority-inversion", "bursty"} <= names
+    for rec in table.values():
+        assert len(rec["jobs"]) >= 2
+        offsets = [j["offset"] for j in rec["jobs"].values()]
+        assert len(set(offsets)) > 1           # dynamic: staggered arrivals
+    churn_iters = {j["iterations"]
+                   for j in table["churn"]["jobs"].values()}
+    assert len(churn_iters) > 1                # jobs finish at different times
+    prios = {j["priority"]
+             for j in table["priority-inversion"]["jobs"].values()}
+    assert len(prios) > 1
+
+
+def test_autoscale_fits_budget_vanilla_does_not(table):
+    vanilla_over = 0
+    for name, rec in table.items():
+        auto = rec["policies"]["tensile+autoscale"]
+        assert auto["within_budget"], \
+            f"{name}: autoscale peak {auto['peak']} > {rec['device_budget']}"
+        assert auto["oom_events"] == 0
+        assert auto["MSR"] > 0
+        if not rec["policies"]["vanilla"]["within_budget"]:
+            vanilla_over += 1
+    assert vanilla_over >= 2
+
+
+def test_arbiter_budgets_are_sound_and_fairness_reported(table):
+    for rec in table.values():
+        budgets = {j: v["budget"] for j, v in rec["jobs"].items()}
+        assert sum(b for b in budgets.values()) <= rec["device_budget"] * \
+            len(budgets)     # per-job min-assignments, each <= capacity
+        assert all(0 <= b <= rec["device_budget"] for b in budgets.values())
+        for m in rec["policies"].values():
+            assert 0.0 < m["fairness"] <= 1.0
+
+
+def test_priority_policy_improves_fairness_under_churn(table):
+    """Arbitrated policies entitle jobs to their slices; utilisation of
+    those entitlements is more uniform than vanilla's equal-split view."""
+    rec = table["churn"]
+    assert rec["policies"]["tensile+priority"]["fairness"] >= \
+        rec["policies"]["vanilla"]["fairness"]

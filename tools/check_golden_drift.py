@@ -1,0 +1,84 @@
+"""Regenerate the golden seed plans and diff them against
+tests/golden/seed_plans.json, byte-for-byte.
+
+The golden file pins the plans the four original policies produced in the
+pre-refactor tree; tests/test_pipeline.py asserts equality per case, but a
+bare assert gives no hint WHERE a plan drifted.  This tool re-derives every
+golden case (defined once, in tests/golden_cases.py — shared with the
+tests, so tool and tests can never enforce different definitions) and
+prints a readable unified diff of the pretty-printed JSON (event level:
+type, tensor, trigger, times, sizes) for each drifted case, then exits
+non-zero.
+
+    PYTHONPATH=src python tools/check_golden_drift.py
+    PYTHONPATH=src python tools/check_golden_drift.py --update   # re-pin
+"""
+from __future__ import annotations
+
+import argparse
+import difflib
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.join(ROOT, "tests"))
+
+GOLDEN = os.path.join(ROOT, "tests", "golden", "seed_plans.json")
+
+
+def _pp(obj) -> list:
+    return json.dumps(obj, indent=1, sort_keys=True).splitlines(keepends=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin tests/golden/seed_plans.json from the "
+                         "current tree instead of diffing")
+    args = ap.parse_args()
+
+    from golden_cases import regenerate
+    # normalize through JSON the way the tests do
+    current = json.loads(json.dumps(regenerate()))
+
+    if args.update:
+        with open(GOLDEN, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+        print(f"re-pinned {GOLDEN}")
+        return 0
+
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+
+    drifted = []
+    for key in sorted(set(golden) | set(current)):
+        got = current.get(key)
+        want = golden.get(key)
+        if got == want:
+            continue
+        drifted.append(key)
+        print(f"\n=== DRIFT in {key} " + "=" * max(1, 50 - len(key)))
+        diff = difflib.unified_diff(
+            _pp(want), _pp(got),
+            fromfile=f"golden/{key}", tofile=f"current/{key}", n=2)
+        shown = 0
+        for line in diff:
+            sys.stdout.write(line)
+            shown += 1
+            if shown > 200:
+                print("... (diff truncated at 200 lines)")
+                break
+    if drifted:
+        print(f"\nGOLDEN DRIFT: {len(drifted)} case(s) changed: "
+              f"{', '.join(drifted)}")
+        print("If the change is intentional, re-pin with: "
+              "PYTHONPATH=src python tools/check_golden_drift.py --update")
+        return 1
+    print(f"golden OK: {len(golden)} cases byte-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
