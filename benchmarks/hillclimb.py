@@ -18,7 +18,6 @@ Levers exposed (see repro.launch.sharding / configs.base):
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import sys

@@ -8,8 +8,7 @@ path only *tracing* matters (shapes + analytic latencies), so the full
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Tuple
+from typing import Any, List
 
 import jax
 import jax.numpy as jnp

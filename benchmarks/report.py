@@ -4,7 +4,6 @@
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 import sys
@@ -173,10 +172,11 @@ def paper_tables() -> str:
         out.append("")
         # a partial-policy scenarios.json (scenarios.run(policies=...))
         # must not take the whole report down
+        pol_recs = {k: rec for k, rec in sc.items()
+                    if "vanilla" in rec["policies"]}
         busts = sum(
-            1 for rec in sc.values()
-            if not rec["policies"].get("vanilla", {}).get(
-                "within_budget", True))
+            1 for rec in pol_recs.values()
+            if not rec["policies"]["vanilla"].get("within_budget", True))
         auto = [rec["policies"]["tensile+autoscale"]
                 for rec in sc.values()
                 if "tensile+autoscale" in rec["policies"]]
@@ -184,9 +184,50 @@ def paper_tables() -> str:
         out.append(
             f"`tensile+autoscale` keeps the global peak inside the device "
             f"budget on {auto_ok}/{len(auto)} scenarios; vanilla busts it "
-            f"on {busts}/{len(sc)}.  The CI `scenarios-smoke` job replays "
-            "the CPU-sized variant on every push and uploads "
+            f"on {busts}/{len(pol_recs)}.  The CI `bench-trajectory` job "
+            "replays the CPU-sized variant on every push and uploads "
             "`experiments/results/*.json` as artifacts.\n")
+        pre_recs = {k: rec for k, rec in sc.items()
+                    if {"preempt", "boundary"} <= set(rec["policies"])}
+        if pre_recs:
+            out.append(
+                "#### Preemptive mid-iteration slice shrinking — boundary "
+                "vs safe-point arbitration\n")
+            out.append(
+                "The `flash-crowd` / `preempt-vs-boundary` rows above "
+                "compare the two arbitration modes when a burst lands "
+                "mid-iteration of a running victim.  **ttwb** is "
+                "time-to-within-budget — from the burst until the shared "
+                "ledger *stays* ≤ the device budget, in iterations of the "
+                "bursting jobs.  `boundary` is the paper's rule (the "
+                "victim's new plan applies at its next iteration "
+                "boundary); `preempt` additionally hot-swaps an "
+                "incremental remainder plan in at the victim's next *safe "
+                "point* (docs/architecture.md, \"Safe points and plan "
+                "hot-swap\").  Hot-swap never tears an iteration: "
+                "`tests/test_hotswap.py` asserts a spliced real execution "
+                "reproduces the unscheduled reference outputs exactly.  "
+                "Reproduce: `python -m benchmarks.run --only scenarios "
+                "--smoke`; the distilled gate metrics land in "
+                "`experiments/results/BENCH_scenarios.json` and CI's "
+                "`bench-trajectory` job diffs them against the committed "
+                "baseline `benchmarks/BENCH_scenarios.json` "
+                "(`tools/check_bench_regression.py`, `--update` to "
+                "re-pin).\n")
+            def _ttwb(m):
+                # null == the run ended over budget ("never recovered")
+                v = m.get("ttwb_burst_iters")
+                return f"{v:.2f}" if v is not None else "∞ (never)"
+
+            for name, rec in pre_recs.items():
+                b = rec["policies"]["boundary"]
+                p = rec["policies"]["preempt"]
+                out.append(
+                    f"On `{name}`: preempt is back within budget in "
+                    f"{_ttwb(p)} burst iteration(s) with "
+                    f"{p['oom_events']} ledger OOMs vs boundary's "
+                    f"{_ttwb(b)} with {b['oom_events']} "
+                    "over-capacity allocations.\n")
     lm = _load("latency_model.json")
     if lm:
         out.append("### §IV-C — cold-start latency MLP\n")

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 import time
@@ -121,17 +122,43 @@ def bench_pipelines(policies=None, workloads=("vgg16", "tinyllama-r")) -> None:
 
 def bench_scenarios(smoke: bool = False) -> None:
     """Multi-workload dynamic scenario suite: staggered launches, job
-    churn, priority inversion, bursty interference — every cross-job
-    policy vs the arbiter-assigned device budget (see
-    benchmarks/scenarios.py)."""
+    churn, priority inversion, bursty interference, and the two
+    preemption scenarios (flash-crowd, preempt-vs-boundary) — every
+    cross-job policy vs the arbiter-assigned device budget (see
+    benchmarks/scenarios.py).
+
+    Also distills the CI perf-trajectory gate metrics (global peak,
+    time-to-within-budget, EOR per scenario/policy) into
+    ``experiments/results/BENCH_scenarios.json``;
+    ``tools/check_bench_regression.py`` diffs that file against the
+    committed baseline ``benchmarks/BENCH_scenarios.json``."""
     from . import scenarios
     t = scenarios.run(os.path.join(RESULTS, "scenarios.json"), smoke=smoke)
+    # the gate file records which variant produced it: smoke and full-size
+    # metrics are NOT comparable, and check_bench_regression refuses to
+    # diff (or --update) across the two
+    gate = {"_meta": {"smoke": bool(smoke)}}
     for scn, rec in t.items():
         for pol, m in rec["policies"].items():
+            ttwb = m.get("ttwb_burst_iters")
+            finite = ttwb is not None and math.isfinite(ttwb)
             _emit(f"scenarios/{scn}/{pol}", m["time"] * 1e6,
                   f"peak={m['peak']};within_budget={m['within_budget']};"
                   f"MSR={m['MSR']:.4f};EOR={m['EOR']:.4f};"
-                  f"fairness={m['fairness']:.3f}")
+                  f"fairness={m['fairness']:.3f}"
+                  + (f";ttwb_burst_iters={ttwb:.3f}"
+                     if ttwb is not None else ""))
+            gate[f"{scn}/{pol}"] = {
+                "peak": m["peak"],
+                "EOR": round(m["EOR"], 6),
+                "oom_events": m.get("oom_events"),
+                # inf ("never recovered") is not valid JSON: recorded as
+                # null + an explicit recovered flag the gate checks
+                "ttwb_burst_iters": round(ttwb, 6) if finite else None,
+                "ttwb_recovered": (finite if ttwb is not None else None),
+            }
+    with open(os.path.join(RESULTS, "BENCH_scenarios.json"), "w") as f:
+        json.dump(gate, f, indent=1, sort_keys=True)
 
 
 def bench_executor_validation() -> None:

@@ -10,7 +10,6 @@ from __future__ import annotations
 import json
 from typing import Dict
 
-import numpy as np
 
 from repro.core import MemoryScheduler, SchedulerConfig, evaluate
 from repro.core.baselines import capuchin_plan, vdnn_conv_plan

@@ -26,6 +26,17 @@ Scenarios (all ≥ 2 concurrent jobs, all dynamic):
                        its weighted share
     bursty             a burst of small jobs interferes with one big job
 
+Preemption scenarios (arbiter mode "boundary" vs "preempt", measuring
+**time-to-within-budget** — how long after a burst the device budget is
+actually respected):
+    flash-crowd          a crowd of small fast jobs lands mid-iteration of
+                         a large unscheduled job; boundary arbitration
+                         leaves the victim over-share until its next
+                         iteration boundary, preemptive arbitration
+                         hot-swaps an incremental shrink plan in at the
+                         victim's next safe point
+    preempt-vs-boundary  one joiner, head-to-head splice-latency numbers
+
 Run:  python -m benchmarks.run --only scenarios [--smoke]
 """
 from __future__ import annotations
@@ -33,13 +44,15 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
+import math
 import sys
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 
 from repro.core import (BudgetArbiter, MachineProfile, MemoryEngine,
-                        SchedulerConfig, analyze, build_pipeline, simulate)
+                        PlanUpdate, SchedulerConfig, SchedulingPlan, analyze,
+                        build_pipeline, find_safe_points, simulate)
 
 # the CPU-sized MLP device class used by the system tests: fast to capture,
 # slow enough per-op that swaps have real windows
@@ -93,7 +106,7 @@ def _mlp_seq(sizes: Tuple[int, ...], batch: int):
 
 
 # job size classes; smoke keeps shapes small so the whole suite stays
-# CPU-sized (<5 min) for the CI scenarios-smoke job
+# CPU-sized (<5 min) for the CI bench-trajectory job
 SHAPES = {
     "small": {True: ((32, 64, 64, 8), 8), False: ((64, 128, 128, 8), 16)},
     "medium": {True: ((64, 128, 128, 8), 16),
@@ -154,6 +167,200 @@ SCENARIOS: List[Scenario] = [
             for i in range(4)],
         arbiter_policy="equal"),
 ]
+
+
+# ----------------------------------------------------------------------
+# Preemption scenarios: boundary vs safe-point arbitration
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class PreemptScenario:
+    """A burst landing mid-iteration of a running victim.  The victim runs
+    unscheduled pre-burst (a lone job under a big budget has no reason to
+    swap); at ``burst_frac`` of its iteration a crowd of jobs arrives, the
+    arbiter re-splits, and the two arbitration modes race to get the
+    device back within budget."""
+
+    name: str
+    description: str
+    victim_size: str                 # key into SHAPES
+    victim_iterations: int
+    burst_sizes: List[str]           # one job per entry
+    burst_frac: float                # arrival, in victim-iteration units
+    burst_stagger: float             # spacing between crowd members (same)
+    burst_iterations: int
+    victim_slice_frac: float         # victim's post-burst slice, as a
+    #                                  fraction of its solo scheduled peak
+
+
+PREEMPT_SCENARIOS: List[PreemptScenario] = [
+    PreemptScenario(
+        name="flash-crowd",
+        description="a flash crowd of small fast jobs lands mid-iteration "
+                    "of a large unscheduled job; preemptive arbitration "
+                    "shrinks the victim at its next safe point, boundary "
+                    "mode leaves it over-share until the next iteration",
+        victim_size="large", victim_iterations=3,
+        burst_sizes=["small", "small", "small"],
+        burst_frac=0.12, burst_stagger=0.03, burst_iterations=3,
+        victim_slice_frac=0.75),
+    PreemptScenario(
+        name="preempt-vs-boundary",
+        description="one joiner arrives mid-iteration; head-to-head "
+                    "time-to-within-budget for the two arbitration modes",
+        victim_size="medium", victim_iterations=3,
+        burst_sizes=["small"],
+        burst_frac=0.12, burst_stagger=0.0, burst_iterations=3,
+        victim_slice_frac=0.8),
+]
+
+
+def _time_to_within(timeline, level: int, t_from: float) -> float:
+    """Seconds from `t_from` until usage is back at or under `level` FOR
+    GOOD: the first at-or-under sample after the LAST over-`level` state
+    (0.0 if never over; ``inf`` if the run ENDS over the level — "never
+    recovered" must not read as a plausible finite recovery time in the
+    CI gate).  The state entering the window counts: usage left over
+    `level` just before `t_from` is over at `t_from`."""
+    last_over = None
+    recover = None
+    prev_used = 0
+    for t, used in timeline:
+        if t < t_from - EPS_T:
+            prev_used = used
+            continue
+        if last_over is None and prev_used > level:
+            last_over = t_from          # entered the window already over
+        if used > level:
+            last_over = t
+            recover = None
+        elif last_over is not None and recover is None:
+            recover = t
+        prev_used = used
+    if last_over is None:
+        return 0.0
+    if recover is None:
+        return float("inf")             # run ended over the level
+    return max(0.0, recover - t_from)
+
+
+EPS_T = 1e-12
+
+
+def run_preempt_scenario(scn: PreemptScenario, smoke: bool = False) -> Dict:
+    victim = "victim"
+    vshape, vbatch = SHAPES[scn.victim_size][smoke]
+    vseq = _mlp_seq(tuple(vshape), vbatch).clone(victim)
+    T_v = vseq.iteration_time
+    burst_ids = [f"crowd{i}" for i in range(len(scn.burst_sizes))]
+    bseqs = []
+    for jid, size in zip(burst_ids, scn.burst_sizes):
+        shape, batch = SHAPES[size][smoke]
+        bseqs.append(_mlp_seq(tuple(shape), batch).clone(jid))
+    t_burst = scn.burst_frac * T_v
+    offsets = {victim: 0.0}
+    for i, jid in enumerate(burst_ids):
+        offsets[jid] = t_burst + i * scn.burst_stagger * T_v
+    iters = {victim: scn.victim_iterations}
+    iters.update({j: scn.burst_iterations for j in burst_ids})
+    T_burst = sum(s.iteration_time for s in bseqs) / len(bseqs)
+
+    # pass 1 — plan the crowd against generous slices (their own solo
+    # peaks): what each crowd member will actually hold is its PLANNED
+    # peak, which is what the device must reserve for it
+    vsolo = analyze([vseq]).peak_bytes             # scheduled-run semantics
+    slice_target = int(vsolo * scn.victim_slice_frac)
+    solo_peaks = {s.job_id: analyze([s]).peak_bytes for s in bseqs}
+    cfg0 = SchedulerConfig(per_job_budget_bytes=dict(solo_peaks))
+    pipe0 = build_pipeline("tensile+autoscale", profile=PROFILE, config=cfg0)
+    crowd = pipe0.plan(bseqs, offsets={j: offsets[j] for j in burst_ids})
+    demands = {j: crowd.plans[j].planned_peak_bytes for j in burst_ids}
+
+    # pass 2 — the device budget is the victim's post-burst slice target
+    # plus exactly those reservations; the arbiter's demand-capped
+    # water-fill then reproduces the intended split (crowd capped at its
+    # demand, the hungry victim takes the remainder)
+    budget = slice_target + sum(demands.values())
+    arbiter = BudgetArbiter(budget, policy="equal", mode="preempt")
+    arbiter.register(victim, demand_bytes=0)       # hungry: uncapped
+    for j, d in demands.items():
+        arbiter.register(j, demand_bytes=d)
+    budgets = arbiter.split([victim] + burst_ids)
+    v_slice = budgets[victim]
+    cfg = SchedulerConfig(memory_budget_bytes=budget,
+                          per_job_budget_bytes=dict(budgets))
+    pipe = build_pipeline("tensile+autoscale", profile=PROFILE, config=cfg)
+
+    # victim plans: pre-burst none (unscheduled), boundary-mode full plan
+    # against the new slice, preempt-mode incremental remainder plan from
+    # the first safe point after the burst
+    pre_plan = SchedulingPlan(job_id=victim)
+    full = pipe.plan([vseq]).plans[victim]
+    sps = find_safe_points(vseq, pre_plan)
+    future = [sp for sp in sps if sp.time > t_burst]
+    step = future[0].op_idx if future else len(vseq.operators) - 2
+    inc = pipe.replan_from([vseq], {victim: pre_plan}, {victim: step},
+                           budgets={victim: v_slice}).plans[victim]
+    safe_ops = frozenset(sp.op_idx for sp in future)
+
+    # vanilla normalizer for EOR (paper §V-A)
+    vanilla = simulate([vseq] + bseqs, None, PROFILE, iterations=iters,
+                       offsets=offsets, free_at_last_use=False)
+
+    rec = {
+        "description": scn.description,
+        "device_budget": budget,
+        "vanilla_peak": vanilla.peak_bytes,
+        "arbiter_policy": "equal",
+        "t_burst": t_burst,
+        "victim_iteration_time": T_v,
+        "burst_iteration_time": T_burst,
+        "victim_slice": v_slice,
+        "jobs": {j: {"offset": offsets[j], "iterations": iters[j],
+                     "priority": 1.0, "budget": budgets.get(j, 0)}
+                 for j in [victim] + burst_ids},
+        "policies": {},
+    }
+
+    for mode in ("boundary", "preempt"):
+        updates = [PlanUpdate(at_time=t_burst, plan=full, mode="boundary")]
+        if mode == "preempt":
+            updates.insert(0, PlanUpdate(
+                at_time=t_burst, plan=inc, mode="safe-point",
+                safe_ops=safe_ops))
+        plans = {victim: pre_plan.copy(), **crowd.plans}
+        eng = MemoryEngine(PROFILE, capacity_bytes=budget)
+        sim = simulate([vseq] + bseqs, plans, PROFILE, iterations=iters,
+                       offsets=offsets, engine=eng,
+                       plan_updates={victim: updates})
+        ttwb = _time_to_within(eng.ledger.timeline, budget, t_burst)
+        ttws = _time_to_within(eng.ledger.job_timeline.get(victim, []),
+                               v_slice, t_burst)
+        util = {j: sim.per_job_peak.get(j, 0) / max(budgets.get(j, 1), 1)
+                for j in budgets}
+        rec["policies"][mode] = {
+            "peak": sim.peak_bytes,
+            "within_budget": bool(sim.peak_bytes <= budget),
+            "oom_events": eng.ledger.oom_events,
+            "MSR": sim.msr(vanilla), "EOR": sim.eor(vanilla),
+            "CBR": sim.cbr(vanilla),
+            "time": sim.total_time,
+            "fairness": jain_fairness(util),
+            "per_job_peak": dict(sim.per_job_peak),
+            "swap_conflicts": sim.swap_conflicts,
+            "passive_swap_ins": sim.passive_swap_ins,
+            # device-level: seconds/iterations after the burst until the
+            # ledger stays ≤ the device budget
+            "ttwb_s": ttwb,
+            "ttwb_victim_iters": ttwb / T_v,
+            "ttwb_burst_iters": ttwb / T_burst,
+            # victim-level: until the victim stays ≤ its shrunken slice
+            "victim_ttws_s": ttws,
+            "victim_ttws_victim_iters": ttws / T_v,
+            "victim_ttws_burst_iters": ttws / T_burst,
+            "plan_swaps": {j: list(map(list, v))
+                           for j, v in sim.plan_swaps.items()},
+        }
+    return rec
 
 
 # ----------------------------------------------------------------------
@@ -279,28 +486,46 @@ def run_scenario(scn: Scenario, smoke: bool = False,
     return rec
 
 
+def _json_safe(obj):
+    """Replace non-finite floats (ttwb=inf == "never recovered") with
+    None: `Infinity` is not valid RFC-8259 JSON and would break strict
+    consumers of the uploaded artifacts."""
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    return obj
+
+
 def run(out_json: Optional[str] = None, smoke: bool = False,
-        policies=POLICIES) -> Dict[str, Dict]:
+        policies=POLICIES, preemption: bool = True) -> Dict[str, Dict]:
     table = {scn.name: run_scenario(scn, smoke=smoke, policies=policies)
              for scn in SCENARIOS}
+    if preemption:
+        for scn in PREEMPT_SCENARIOS:
+            table[scn.name] = run_preempt_scenario(scn, smoke=smoke)
     if out_json:
         with open(out_json, "w") as f:
-            json.dump(table, f, indent=1)
+            json.dump(_json_safe(table), f, indent=1)
     return table
 
 
 def format_markdown(table: Dict[str, Dict]) -> str:
     lines = ["| scenario | policy | peak (MiB) | ≤ budget | MSR | EOR | "
-             "CBR | fairness |",
-             "|---|---|---|---|---|---|---|---|"]
+             "CBR | fairness | ttwb (burst iters) |",
+             "|---|---|---|---|---|---|---|---|---|"]
     for scn, rec in table.items():
         for pol, m in rec["policies"].items():
             cbr = (f"{m['CBR']:.3f}" if m["CBR"] < 1e3 else "≫100")
+            ttwb = m.get("ttwb_burst_iters")
             lines.append(
                 f"| {scn} | {pol} | {m['peak'] / 2**20:.2f} "
                 f"| {'✓' if m['within_budget'] else '✗'} "
                 f"| {m['MSR']:.4f} | {m['EOR']:.4f} | {cbr} "
-                f"| {m['fairness']:.3f} |")
+                f"| {m['fairness']:.3f} "
+                f"| {f'{ttwb:.3f}' if ttwb is not None else '—'} |")
     return "\n".join(lines)
 
 

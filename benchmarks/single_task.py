@@ -13,18 +13,15 @@ against the vanilla (no-scheduling) run of the same simulator:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 from typing import Dict, List
 
 import numpy as np
 
-from repro.core import (CostModel, MemoryScheduler, SchedulerConfig,
-                        capuchin_plan, evaluate, schedule_single,
-                        vdnn_conv_plan)
-from repro.core.peak_analysis import analyze
+from repro.core import (MemoryScheduler, SchedulerConfig, capuchin_plan,
+                        evaluate, schedule_single, vdnn_conv_plan)
 
-from .workloads import GPU_CALIB, GPU_PROFILE, POOL, get_workload
+from .workloads import GPU_PROFILE, get_workload
 
 WORKLOADS = ["vgg16", "resnet50", "densenet121", "tinyllama-r", "gemma-r"]
 

@@ -10,11 +10,10 @@ from __future__ import annotations
 
 import functools
 import sys
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 

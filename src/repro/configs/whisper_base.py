@@ -1,7 +1,7 @@
 """Whisper-base — encoder-decoder speech backbone [arXiv:2212.04356].
 Conv frontend is a STUB: input_specs() provides precomputed frame
 embeddings; decoder length = seq_len // enc_seq_ratio (DESIGN.md §5)."""
-from .base import LayerSpec, ModelConfig
+from .base import ModelConfig
 
 CONFIG = ModelConfig(
     name="whisper-base",

@@ -24,25 +24,26 @@ from .baselines import capuchin_plan, vanilla_plan, vdnn_conv_plan
 from .cost_model import (CostModel, DeviceCalibration, EWMATracker,
                          LatencyMLP, calibrate_cpu)
 from .engine import (DeviceLedger, DmaChannel, EngineTrace, JobContext,
-                     JobLedgerView, MemoryEngine)
+                     JobLedgerView, MemoryEngine, SafePoint, find_safe_points)
 from .executor import (DeviceAccountant, ExecutionStats, JaxprExecutor,
                        SwapChannel, reference_outputs)
 from .graph_capture import CaptureSpec, capture, capture_train_step
 from .jax_integration import (TensileDecisions, backend_supports_memory_kinds,
                               checkpoint_name, make_remat_policy,
                               plan_decisions, schedule_for_budget)
-from .multiplexer import (ARBITER_POLICIES, BudgetArbiter, GlobalController,
-                          JobFailedError, JobHandle)
+from .multiplexer import (ARBITER_MODES, ARBITER_POLICIES, BudgetArbiter,
+                          GlobalController, JobFailedError, JobHandle)
 from .passes import (PIPELINES, BudgetAutoscalePass, CompressedOffloadPass,
-                     PassiveProfilePass, Pipeline, PlanningPass, PriorityPass,
-                     RecomputePass, SwapPass, VdnnSwapPass, build_pipeline)
+                     PassiveProfilePass, Pipeline, PlanningPass,
+                     PreemptiveReplanPass, PriorityPass, RecomputePass,
+                     SwapPass, VdnnSwapPass, build_pipeline)
 from .peak_analysis import PeakReport, analyze, unroll, vanilla_peak
 from .plan import (ChannelReservation, EventType, MachineProfile,
                    ScheduleEvent, SchedulingPlan)
 from .recompute_planner import RecomputePlanner
 from .scheduler import (MemoryScheduler, ScheduleResult, SchedulerConfig,
                         schedule_single)
-from .simulator import SimResult, evaluate, simulate
+from .simulator import PlanUpdate, SimResult, evaluate, simulate
 from .swap_planner import PeriodicChannel, SwapPlanner
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time as _time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 

@@ -25,6 +25,12 @@ main source of sim-vs-real drift.  This module owns it once:
                           run and a real run of the same plan can be checked
                           for *identical* residency behaviour (the parity
                           test in tests/test_engine_parity.py).
+  * ``find_safe_points``— the *safe points* of a (job, plan) pair: op
+                          boundaries where no planned swap/recompute is in
+                          flight on the DmaChannel and modeled residency is
+                          at a local minimum.  A new plan may be hot-swapped
+                          in at a safe point without tearing the iteration
+                          (preemptive mid-iteration slice shrinking).
 
 Runtimes stay thin: the simulator advances a virtual clock, the executor
 moves real arrays; everything they *decide* comes from here.
@@ -34,11 +40,12 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time as _time
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from .access import AccessSequence, TensorKind
 from .peak_analysis import PERSISTENT_KINDS, storage_of
-from .plan import EventType, MachineProfile, ScheduleEvent, SchedulingPlan
+from .plan import (EventType, MachineProfile, ScheduleEvent,
+                   SchedulingPlan, wrap_intervals)
 
 
 # ----------------------------------------------------------------------
@@ -60,6 +67,13 @@ class DeviceLedger:
         self.oom_events = 0
         self.lock = threading.Lock()
         self.timeline: List[Tuple[float, int]] = []
+        # per-job usage over time — what "is job j inside its slice at
+        # instant t" questions (time-to-within-budget) are answered from.
+        # Recorded only for VIRTUAL-time mutations (an explicit `t`, i.e.
+        # bounded simulator runs); the real executor's wall-clock path
+        # skips it, so long-running jobs don't grow an unread time series
+        # under the ledger lock.
+        self.job_timeline: Dict[str, List[Tuple[float, int]]] = {}
         self.trace = trace
         self._resident: Dict[Tuple[str, str], int] = {}
         self._job_bytes: Dict[str, int] = {}
@@ -97,8 +111,10 @@ class DeviceLedger:
             jb = self._job_bytes.get(job_id, 0) + nbytes
             self._job_bytes[job_id] = jb
             self._job_peak[job_id] = max(self._job_peak.get(job_id, 0), jb)
-            self.timeline.append(
-                (t if t is not None else _time.perf_counter(), self.used))
+            now = t if t is not None else _time.perf_counter()
+            self.timeline.append((now, self.used))
+            if t is not None:
+                self.job_timeline.setdefault(job_id, []).append((t, jb))
             if self.trace is not None:
                 self.trace.record("alloc", job_id, storage)
             return True
@@ -112,9 +128,12 @@ class DeviceLedger:
                 return 0
             nbytes = self._resident.pop(key)
             self.used -= nbytes
-            self._job_bytes[job_id] = self._job_bytes.get(job_id, 0) - nbytes
-            self.timeline.append(
-                (t if t is not None else _time.perf_counter(), self.used))
+            jb = self._job_bytes.get(job_id, 0) - nbytes
+            self._job_bytes[job_id] = jb
+            now = t if t is not None else _time.perf_counter()
+            self.timeline.append((now, self.used))
+            if t is not None:
+                self.job_timeline.setdefault(job_id, []).append((t, jb))
             if self.trace is not None:
                 self.trace.record("free", job_id, storage)
             return nbytes
@@ -309,11 +328,7 @@ class JobContext:
         # plan indices
         self.by_trigger: Dict[int, List[ScheduleEvent]] = {}
         self.recompute_for: Dict[str, ScheduleEvent] = {}
-        if plan:
-            for ev in plan.events:
-                self.by_trigger.setdefault(ev.trigger_op, []).append(ev)
-                if ev.event_type is EventType.RECOMPUTE:
-                    self.recompute_for[self.st(ev.tensor_id)] = ev
+        self.set_plan(plan)
 
         # host-store membership (the data lives there; values are runtime-
         # specific — the simulator keeps none, the executor keeps arrays)
@@ -321,6 +336,23 @@ class JobContext:
         # storages whose host copy went through the quantize-on-offload
         # path — fetching them back pays the compressed transfer time
         self.host_compressed: Set[str] = set()
+
+    def set_plan(self, plan: Optional[SchedulingPlan]) -> None:
+        """(Re)bind the plan and rebuild its trigger indices.  Called at
+        construction and at a safe-point hot-swap: the runtime splices a
+        new plan mid-iteration, and because the new plan's events at or
+        before the splice op are identical to the old one's, every decision
+        already taken stays valid — only future triggers change.  The host
+        store and sizes are state of the *job*, not the plan, and carry
+        over untouched."""
+        self.plan = plan
+        self.by_trigger = {}
+        self.recompute_for = {}
+        if plan:
+            for ev in plan.events:
+                self.by_trigger.setdefault(ev.trigger_op, []).append(ev)
+                if ev.event_type is EventType.RECOMPUTE:
+                    self.recompute_for[self.st(ev.tensor_id)] = ev
 
     # -- helpers -------------------------------------------------------
     def st(self, tid: str) -> str:
@@ -382,6 +414,90 @@ class JobContext:
         if ev.event_type is EventType.RECOMPUTE:
             return not resident
         return False
+
+
+# ----------------------------------------------------------------------
+# Safe points: where a plan may be hot-swapped mid-iteration
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class SafePoint:
+    """An op boundary where a job's plan can be spliced without tearing
+    the iteration: no planned transfer or recompute spans the instant, and
+    modeled residency is at a local minimum (so eager swap-outs scheduled
+    from here act on a quiescent footprint)."""
+
+    op_idx: int          # boundary right after this operator completes
+    time: float          # job-local instant (seq.op_end[op_idx])
+    resident_bytes: int  # modeled device residency at the boundary
+
+
+def find_safe_points(seq: AccessSequence,
+                     plan: Optional[SchedulingPlan] = None,
+                     free_at_last_use: bool = True) -> List[SafePoint]:
+    """Safe points of one (job, plan) pair, in op order.
+
+    A boundary after op k qualifies when (1) no swap/recompute event of the
+    plan is in flight across ``op_end[k]`` — a splice must not orphan a
+    transfer already booked on the DmaChannel — and (2) the residency the
+    plan models at that instant is a local minimum (non-strict, so flat
+    plateaus qualify).  The final op is excluded: that boundary is the
+    iteration boundary, which is the non-preemptive case.  Cross-iteration
+    events are wrapped modulo the iteration period, mirroring the planner's
+    PeriodicChannel bookings.
+    """
+    from .peak_analysis import build_events
+
+    eps = 1e-12
+    n = len(seq.operators)
+    if n <= 1:
+        return []
+    T = max(seq.iteration_time, eps)
+
+    # (1) in-flight intervals of the plan, projected into [0, T) with the
+    # same wrapping the planner's PeriodicChannel books with
+    busy: List[Tuple[float, float]] = []
+    if plan is not None:
+        for ev in plan.events:
+            if ev.event_type not in (EventType.SWAP_OUT, EventType.SWAP_IN,
+                                     EventType.RECOMPUTE):
+                continue
+            dur = ev.end - ev.start
+            if dur <= eps:
+                continue
+            busy.extend((s, e) for s, e in wrap_intervals(ev.start, dur, T))
+
+    # (2) modeled residency at every op boundary (idempotent alloc/free,
+    # exactly the ledger semantics)
+    events = sorted(build_events(seq, plan, free_at_last_use=free_at_last_use),
+                    key=lambda e: (e.time, e.order))
+    resident = [0] * n
+    live: Dict[str, int] = {}
+    mem = 0
+    ei = 0
+    for k in range(n):
+        t_k = seq.op_end[k]
+        while ei < len(events) and events[ei].time <= t_k + eps:
+            e = events[ei]
+            ei += 1
+            if e.delta > 0:
+                if e.storage not in live:
+                    live[e.storage] = e.delta
+                    mem += e.delta
+            elif e.storage in live:
+                mem -= live.pop(e.storage)
+        resident[k] = mem
+
+    out: List[SafePoint] = []
+    for k in range(n - 1):
+        t_k = seq.op_end[k]
+        if any(s < t_k - eps and t_k < e - eps for s, e in busy):
+            continue
+        left = resident[k - 1] if k > 0 else resident[k]
+        right = resident[k + 1]
+        if resident[k] <= left and resident[k] <= right:
+            out.append(SafePoint(op_idx=k, time=t_k,
+                                 resident_bytes=resident[k]))
+    return out
 
 
 # ----------------------------------------------------------------------

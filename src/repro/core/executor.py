@@ -40,9 +40,9 @@ from jax.extend import core as jcore
 
 from .access import AccessSequence
 from .engine import (INPUT_AWAIT_PREFETCH, INPUT_PASSIVE_SWAP_IN,
-                     INPUT_RECOMPUTE, INPUT_RESIDENT, DeviceLedger,
-                     DmaChannel, MemoryEngine, ResidencyView)
-from .plan import EventType, ScheduleEvent, SchedulingPlan
+                     INPUT_RESIDENT, DeviceLedger, DmaChannel, MemoryEngine,
+                     ResidencyView)
+from .plan import EventType, SchedulingPlan
 
 # Back-compat names: the seed defined these locally; they now live in (and
 # are shared through) the engine.
@@ -61,6 +61,8 @@ class ExecutionStats:
     compressed_swaps: int = 0
     op_latencies: Optional[List[float]] = None
     stall_time_s: float = 0.0
+    # mid-iteration plan hot-swaps applied at a safe point
+    hot_swaps: int = 0
 
 
 class AsyncSwapExecutor:
@@ -153,6 +155,48 @@ class JaxprExecutor:
                 self.producer[self._name_of(v)] = i
         self.stats = ExecutionStats(op_latencies=[] if measure_latency else None)
         self._cur_idx = -1
+        # pending mid-iteration plan hot-swap: (plan, eligible safe ops),
+        # set by the controller thread, consumed at a safe point in run()
+        self._plan_lock = threading.Lock()
+        self._pending_plan: Optional[Tuple[SchedulingPlan, frozenset]] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def current_op_index(self) -> int:
+        """Index of the equation being executed (-1 before the first) —
+        the controller reads this to pick a safe point still ahead of the
+        run when requesting a preemptive plan hot-swap."""
+        return self._cur_idx
+
+    def request_plan(self, plan: SchedulingPlan,
+                     safe_ops) -> None:
+        """Thread-safe mid-iteration plan hot-swap request (preemptive
+        arbitration).  The new plan is spliced in at the next safe point
+        the run reaches: an op boundary in ``safe_ops`` with no transfer
+        of this job in flight.  A later request supersedes an unapplied
+        earlier one.  If no listed safe point remains this iteration, the
+        request simply never fires — the boundary plan pickup covers it."""
+        with self._plan_lock:
+            self._pending_plan = (plan, frozenset(safe_ops))
+
+    def _maybe_hot_swap(self, idx: int) -> None:
+        """Splice the pending plan in if op boundary `idx` is an eligible
+        safe point.  Runs on the executor thread right after the op's plan
+        events, mirroring the simulator's splice instant exactly."""
+        if self._pending_plan is None:
+            return
+        with self._plan_lock:
+            if self._pending_plan is None:
+                return
+            plan, safe_ops = self._pending_plan
+            if idx not in safe_ops:
+                return
+            if self.async_exec and self.async_exec.inflight:
+                return
+            self.plan = plan
+            self.ctx.set_plan(plan)
+            self.stats.hot_swaps += 1
+            self._pending_plan = None
 
     # ------------------------------------------------------------------
     def _name_of(self, v) -> str:
@@ -356,6 +400,10 @@ class JaxprExecutor:
                 elif ev.event_type is EventType.RECOMPUTE:
                     self.engine.record("recompute", self.ctx, st)
                     self._recompute(ev.tensor_id)
+
+            # preemptive arbitration: splice a pending plan in at a safe
+            # point (after this op's events, before the next op)
+            self._maybe_hot_swap(idx)
 
         if self.async_exec:
             self.async_exec.drain()

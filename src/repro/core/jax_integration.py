@@ -22,10 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, FrozenSet, List, Optional, Sequence
+from typing import Dict, FrozenSet, Optional
 
 import jax
-import jax.numpy as jnp
 from jax import ad_checkpoint
 
 from .access import AccessSequence, TensorKind

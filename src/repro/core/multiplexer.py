@@ -18,11 +18,20 @@ Beyond the paper: the **BudgetArbiter** owns the device-wide byte budget
 and splits it across live jobs by a pluggable policy (equal-share,
 priority-weighted, peak-proportional from measured per-job peaks).  The
 split is recomputed at every launch, every finish (the departing job's
-bytes are reclaimed and redistributed), and every latency-drift replan;
-per-job pipelines then plan against the arbiter-assigned slice instead of
-the full device (passes.PriorityPass / passes.BudgetAutoscalePass).  Plan
-versions still swap only at iteration boundaries, so a budget move never
-tears an in-flight iteration.
+bytes are reclaimed and redistributed — skipped when the departing job
+held zero bytes of the split), and every latency-drift replan; per-job
+pipelines then plan against the arbiter-assigned slice instead of the
+full device (passes.PriorityPass / passes.BudgetAutoscalePass).
+
+Plan versions swap at iteration boundaries by default, so a budget move
+never tears an in-flight iteration.  In arbiter mode ``"preempt"`` a
+SHRUNKEN slice additionally takes effect mid-iteration: the controller
+builds an incremental remainder plan (``MemoryScheduler.replan_from``)
+and hot-swaps it into the victim's running executor at its next *safe
+point* (``engine.find_safe_points`` — no transfer in flight, residency
+at a local minimum), closing the across-iteration lag a bursty arrival
+otherwise suffers.  See docs/architecture.md, "Safe points and plan
+hot-swap".
 """
 from __future__ import annotations
 
@@ -34,7 +43,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .access import AccessSequence
 from .cost_model import CostModel, EWMATracker
-from .engine import DeviceLedger, DmaChannel, JobLedgerView, MemoryEngine
+from .engine import (DeviceLedger, DmaChannel, JobLedgerView, MemoryEngine,
+                     find_safe_points)
 from .executor import JaxprExecutor
 from .graph_capture import capture_train_step
 from .peak_analysis import analyze
@@ -77,6 +87,12 @@ class JobHandle:
     # the arbiter-assigned slice of the device budget, as a live view over
     # the shared DeviceLedger (None until the first split)
     ledger_view: Optional[JobLedgerView] = None
+    # the executor currently running this job's iteration (None between
+    # iterations / after finish) — the preemptive arbiter hot-swaps plans
+    # into it at a safe point
+    executor: Optional[Any] = None
+    # (plan_version, safe_op) of every preemptive hot-swap requested
+    preemptions: List[Any] = dataclasses.field(default_factory=list)
 
     @property
     def budget_bytes(self) -> Optional[int]:
@@ -112,6 +128,9 @@ ARBITER_POLICIES: Dict[str, Callable[["BudgetArbiter", Sequence[str]],
 }
 
 
+ARBITER_MODES = ("boundary", "preempt")
+
+
 class BudgetArbiter:
     """Owns the device-wide byte budget and splits it across live jobs.
 
@@ -122,18 +141,46 @@ class BudgetArbiter:
     pluggable via ``ARBITER_POLICIES`` (equal / priority / peak).  Every
     split is appended to ``history`` so tests and reports can audit how
     budgets moved across launch/finish/drift replans.
+
+    ``mode`` decides how a *shrunken* slice takes effect on a running job:
+    ``"boundary"`` (default, the paper's rule) waits for the victim's next
+    iteration boundary; ``"preempt"`` additionally hot-swaps an incremental
+    remainder plan in at the victim's next safe point, shrinking it
+    mid-iteration (``GlobalController._preempt_victims``).
     """
 
-    def __init__(self, capacity_bytes: int, policy: str = "equal"):
+    def __init__(self, capacity_bytes: int, policy: str = "equal",
+                 mode: str = "boundary"):
         if policy not in ARBITER_POLICIES:
             raise KeyError(f"unknown arbiter policy {policy!r}; "
                            f"known: {sorted(ARBITER_POLICIES)}")
+        if mode not in ARBITER_MODES:
+            raise KeyError(f"unknown arbiter mode {mode!r}; "
+                           f"known: {list(ARBITER_MODES)}")
         self.capacity = int(capacity_bytes)
         self.policy = policy
+        self.mode = mode
         self.priorities: Dict[str, float] = {}
         self.demands: Dict[str, int] = {}       # peak demand, bytes
         self.history: List[Dict[str, int]] = []
         self.last_assignment: Dict[str, int] = {}
+
+    # -- victim selection ----------------------------------------------
+    def victims(self, new_assignment: Dict[str, int],
+                prev_assignment: Dict[str, int],
+                usage: Dict[str, int]) -> List[str]:
+        """Jobs whose slice shrank under the new split and whose usage
+        exceeds the new slice — the jobs preemption must act on, largest
+        over-share first.  ``usage`` should be the job's *expected*
+        footprint under its running plan (the controller passes
+        max(live bytes, measured peak)): a victim below its new slice at
+        the split instant but heading over it later in the iteration
+        still needs the mid-iteration shrink."""
+        out = [j for j, b in new_assignment.items()
+               if j in prev_assignment and b < prev_assignment[j]
+               and usage.get(j, 0) > b]
+        out.sort(key=lambda j: new_assignment[j] - usage.get(j, 0))
+        return out
 
     # -- registry ------------------------------------------------------
     def register(self, job_id: str, priority: float = 1.0,
@@ -195,7 +242,8 @@ class GlobalController:
                  async_swap: bool = True,
                  pipeline_name: Optional[str] = None,
                  arbiter: Optional[BudgetArbiter] = None,
-                 arbiter_policy: Optional[str] = None):
+                 arbiter_policy: Optional[str] = None,
+                 arbiter_mode: Optional[str] = None):
         self.profile = profile or MachineProfile()
         pipeline = None
         if pipeline_name is not None:
@@ -218,17 +266,22 @@ class GlobalController:
         if cap is None:
             cap = (self.scheduler.config.memory_budget_bytes
                    or self.profile.device_memory_bytes)
+        mode = arbiter_mode or self.scheduler.config.arbiter_mode
         self.arbiter = arbiter or (
-            BudgetArbiter(cap, policy=arbiter_policy)
+            BudgetArbiter(cap, policy=arbiter_policy, mode=mode)
             if arbiter_policy is not None else None)
         self.async_swap = async_swap
         self.jobs: Dict[str, JobHandle] = {}
         self.ewma: Dict[str, EWMATracker] = {}
         self._lock = threading.Lock()
         self._replan_count = 0
+        self._preempt_count = 0
         # replans that failed while redistributing a departed job's budget
         # (survivors keep their current plans): (departed_job_id, error)
         self.replan_failures: List[tuple] = []
+        # incremental replans that failed while preempting a victim (the
+        # victim keeps its plan until the boundary): (job_id, error)
+        self.preempt_failures: List[tuple] = []
 
     # ------------------------------------------------------------------
     def launch(self, step_fn: Callable, params, opt_state, batch,
@@ -281,12 +334,14 @@ class GlobalController:
         if not live:
             return
         budgets: Optional[Dict[str, int]] = None
+        prev_assignment: Dict[str, int] = {}
         if self.arbiter is not None:
             for j in live:
                 # fold measured peaks (shared-ledger accounting) into demand
                 measured = self.accountant.job_peak(j)
                 if measured:
                     self.arbiter.update_demand(j, measured)
+            prev_assignment = dict(self.arbiter.last_assignment)
             budgets = self.arbiter.split(live)
         result = self.scheduler.schedule(live, budgets=budgets)
         for j in live:
@@ -296,6 +351,56 @@ class GlobalController:
             if budgets is not None:
                 h.ledger_view = self.accountant.view(j, budgets.get(j))
         self._replan_count += 1
+        if (self.arbiter is not None and self.arbiter.mode == "preempt"
+                and budgets is not None):
+            self._preempt_victims(budgets, prev_assignment)
+
+    # ------------------------------------------------------------------
+    def _preempt_victims(self, budgets: Dict[str, int],
+                         prev_assignment: Dict[str, int]) -> None:
+        """Preemptive arbitration (arbiter mode "preempt"): a launch/burst
+        just shrank some live jobs' slices.  Instead of letting each victim
+        finish its iteration over-share, build an incremental remainder
+        plan (eager swap-outs from the victim's next safe point, via
+        ``MemoryScheduler.replan_from``) and hot-swap it into the running
+        executor at that safe point.  The boundary plan distributed by
+        ``_replan`` still lands at the next iteration — preemption only
+        closes the gap until then.  Every future safe point is eligible
+        for the splice: if the executor already passed the one the
+        remainder plan was built from, events triggered between it and
+        the actual splice simply never fire — a bounded, graceful
+        degradation (later eager swap-outs still apply, and the boundary
+        plan completes the shrink).  Called under the controller lock."""
+        # expected footprint under the running plan: live bytes now, or
+        # the measured peak so far — a victim below its shrunken slice at
+        # this instant can still be heading over it later in the iteration
+        usage = {j: max(self.accountant.job_bytes(j),
+                        self.accountant.job_peak(j)) for j in budgets}
+        for j in self.arbiter.victims(budgets, prev_assignment, usage):
+            h = self.jobs.get(j)
+            ex = h.executor if h is not None else None
+            if ex is None:
+                continue            # between iterations: boundary covers it
+            running = ex.plan
+            safe = find_safe_points(h.seq, running)
+            cur = ex.current_op_index
+            future = [sp.op_idx for sp in safe if sp.op_idx > cur]
+            if not future:
+                continue            # iteration nearly over: boundary covers it
+            try:
+                res = self.scheduler.replan_from(
+                    j, running if running is not None
+                    else SchedulingPlan(job_id=j),
+                    future[0], budgets[j])
+            except Exception as e:  # noqa: BLE001 - victim keeps its plan
+                self.preempt_failures.append((j, e))
+                continue
+            prior_n = len(running.events) if running is not None else 0
+            if len(res.plans[j].events) == prior_n:
+                continue            # remainder already fits: splice is a no-op
+            ex.request_plan(res.plans[j], future)
+            h.preemptions.append((h.plan_version, future[0]))
+            self._preempt_count += 1
 
     # ------------------------------------------------------------------
     def _run_job(self, handle: JobHandle) -> None:
@@ -321,6 +426,7 @@ class GlobalController:
                     ex.host.update(old_host)
                     ex.ctx.host_compressed |= old_compressed
                     version_used = version
+                    handle.executor = ex
                 else:
                     # fresh per-iteration stores, persistent host cache
                     # (incl. which parked copies are quantized — fetching
@@ -333,6 +439,7 @@ class GlobalController:
                         async_swap=self.async_swap, measure_latency=True)
                     ex.host.update(host)
                     ex.ctx.host_compressed |= compressed
+                    handle.executor = ex
                 t0 = _time.perf_counter()
                 outs = ex.run(*args)
                 handle.step_times.append(_time.perf_counter() - t0)
@@ -362,18 +469,31 @@ class GlobalController:
             # departure bookkeeping runs for clean finishes AND crashes,
             # outside the job's own try: a failure while replanning the
             # SURVIVORS must not blame this (possibly successful) job
-            handle.done = True
-            with self._lock:
-                self.scheduler.remove_job(handle.job_id)
-                if self.arbiter is not None:
-                    # the departing job's slice is reclaimed and
-                    # redistributed across the survivors right away
-                    self.arbiter.unregister(handle.job_id)
-                    try:
-                        self._replan()
-                    except Exception as e:  # noqa: BLE001
-                        # survivors keep their current (still valid) plans
-                        self.replan_failures.append((handle.job_id, e))
+            self._on_job_exit(handle)
+
+    # ------------------------------------------------------------------
+    def _on_job_exit(self, handle: JobHandle) -> None:
+        """Departure bookkeeping: deregister from scheduler + arbiter and
+        redistribute the departed job's slice across the survivors.  A job
+        that held ZERO bytes of the split (a finished under-demand job)
+        reclaims nothing — re-splitting and replanning every survivor
+        would rebuild the exact same plans, so the no-op replan is
+        skipped."""
+        handle.done = True
+        handle.executor = None
+        with self._lock:
+            self.scheduler.remove_job(handle.job_id)
+            if self.arbiter is not None:
+                reclaimed = self.arbiter.last_assignment.get(
+                    handle.job_id, 0)
+                self.arbiter.unregister(handle.job_id)
+                if reclaimed == 0:
+                    return
+                try:
+                    self._replan()
+                except Exception as e:  # noqa: BLE001
+                    # survivors keep their current (still valid) plans
+                    self.replan_failures.append((handle.job_id, e))
 
     # ------------------------------------------------------------------
     def report_latencies(self, job_id: str, measured: List[float]) -> bool:
@@ -414,3 +534,9 @@ class GlobalController:
     @property
     def replan_count(self) -> int:
         return self._replan_count
+
+    @property
+    def preempt_count(self) -> int:
+        """Mid-iteration plan hot-swaps requested so far (arbiter mode
+        "preempt")."""
+        return self._preempt_count

@@ -81,6 +81,12 @@ class SchedulerConfig:
     # swap victims from low-priority jobs first
     per_job_budget_bytes: Optional[Dict[str, int]] = None
     job_priorities: Optional[Dict[str, float]] = None
+    # when the arbiter shrinks a live job's slice: "boundary" applies the
+    # new plan at the next iteration boundary (the paper's rule), "preempt"
+    # additionally hot-swaps an incremental remainder plan in at the job's
+    # next safe point (engine.find_safe_points), so the slice is respected
+    # mid-iteration instead of an iteration later
+    arbiter_mode: str = "boundary"
 
 
 @dataclasses.dataclass
@@ -427,6 +433,119 @@ class BudgetAutoscalePass(PlanningPass):
         return False
 
 
+class PreemptiveReplanPass(PlanningPass):
+    """Incremental mid-iteration replan (safe-point plan hot-swap).
+
+    Used by ``Pipeline.replan_from``: each job's plan is a *copy of the
+    plan currently executing*, and this pass may only add events strictly
+    after the job's safe point (``state.shared["replan_from_op"]``) — the
+    prefix has already run, so the runtime can splice the result in at the
+    safe point without tearing the iteration.  Victims are driven to their
+    (shrunken) arbiter slice by eager swap-outs: the SwapPlanner's
+    ``not_before`` pins every new event into the remainder window and
+    earliest-fit placement lands the swap-out right at the safe point.
+
+    Peaks are judged on the *remainder window* ``[t_safe, T)`` of each
+    job's own timeline: bytes resident before the safe point are history
+    this pass cannot undo, but they persist into the window, so the
+    windowed per-job peak is exactly "will job j fit its new slice from
+    the splice on".
+    """
+
+    name = "preemptive-replan"
+    kind = "swap"
+
+    def setup(self, state: PipelineState) -> None:
+        super().setup(state)
+        cfg = state.config
+        self.from_op: Dict[str, int] = dict(
+            state.shared.get("replan_from_op", {}))
+        self.from_time: Dict[str, float] = {}
+        self.planners: Dict[str, SwapPlanner] = {}
+        self._window_cache: Dict[str, Tuple[Tuple[int, int], PeakReport]] = {}
+        for j, op in self.from_op.items():
+            seq = state.jobs.get(j)
+            if seq is None:
+                continue
+            # new events must TRIGGER strictly after the safe-point op —
+            # the splice happens after op `op`'s events fired, so anything
+            # keyed to trigger <= op would never run.  The planner's
+            # trigger mapping assigns trigger k to starts in
+            # [op_end[k], op_end[k+1]), so a start at or after
+            # op_end[op+1] gets trigger >= op+1 — hence the +1.
+            nxt = min(op + 1, len(seq.op_end) - 1)
+            t0 = seq.op_end[nxt] if seq.op_end else 0.0
+            self.from_time[j] = t0
+            pl = SwapPlanner(
+                seq, state.plans[j], state.profile,
+                (cfg.per_job_swap_ratio or {}).get(j, cfg.max_swap_ratio),
+                cross_iteration=state.cross_iteration,
+                not_before=t0)
+            # tensors the running plan already swaps are eligible AGAIN:
+            # under the shrunken slice an extra eviction + re-fetch pair in
+            # the remainder window is exactly the lever left (runtime skip
+            # rules make duplicate events at the same trigger harmless)
+            pl.swapped.clear()
+            self.planners[j] = pl
+
+    def _window_report(self, job_id: str) -> PeakReport:
+        seq = self.state.jobs[job_id]
+        plan = self.state.plans[job_id]
+        key = (len(plan.events), len(plan.release_after_op))
+        hit = self._window_cache.get(job_id)
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        rep = analyze([seq], plans={job_id: plan},
+                      window=(self.from_time[job_id],
+                              seq.iteration_time + 1e-12))
+        self._window_cache[job_id] = (key, rep)
+        return rep
+
+    def _excess(self, job_id: str) -> int:
+        budget = self.state.job_budgets.get(job_id)
+        if budget is None:
+            return 0
+        # single-job report: the window-restricted global peak IS the job's
+        # windowed peak (per_job_peak ignores the window by design)
+        rep = self._window_report(job_id)
+        return max(0, rep.peak_bytes - budget)
+
+    def gate(self, report: Optional[PeakReport]) -> bool:
+        return any(self._excess(j) > 0 for j in self.planners)
+
+    def step(self, report: Optional[PeakReport]) -> bool:
+        over = {j: e for j in self.planners
+                if (e := self._excess(j)) > 0}
+        for job_id in sorted(over, key=lambda j: -over[j]):
+            pl = self.planners[job_id]
+            plan = self.state.plans[job_id]
+            rep = self._window_report(job_id)
+            for storage_id, _owner, _size in rep.peak_tensors:
+                for tid in pl.alias_candidates.get(storage_id, ()):
+                    n0 = len(plan.events)
+                    if not pl.try_swap_tensor(tid, rep.peak_time):
+                        continue
+                    # a swap pair can also EXTEND residency (the re-fetch
+                    # supersedes releases), so — like CompressedOffloadPass
+                    # — every step is verified against the windowed peak
+                    # and rolled back when it does not strictly improve;
+                    # the tensor stays marked and is not retried
+                    self._window_cache.pop(job_id, None)
+                    if self._window_report(job_id).peak_bytes \
+                            < rep.peak_bytes:
+                        return True
+                    for ev in plan.events[n0:]:
+                        if ev.event_type in (EventType.SWAP_OUT,
+                                             EventType.SWAP_IN):
+                            try:
+                                pl.channel.release(ev.start, ev.duration)
+                            except ValueError:
+                                pass
+                    del plan.events[n0:]
+                    self._window_cache.pop(job_id, None)
+        return False
+
+
 # ----------------------------------------------------------------------
 # vDNN_conv (Rhu et al., MICRO'16) as a one-shot pass
 # ----------------------------------------------------------------------
@@ -768,6 +887,84 @@ class Pipeline:
             iterations=iters, swaps_scheduled=n_swaps,
             recomputes_scheduled=n_recs, plan_wallclock_s=wall,
             pass_steps=steps)
+
+    # ------------------------------------------------------------------
+    def replan_from(self, seqs: Sequence[AccessSequence],
+                    prior_plans: Dict[str, SchedulingPlan],
+                    steps: Union[int, Dict[str, int]],
+                    budgets: Optional[Dict[str, int]] = None
+                    ) -> ScheduleResult:
+        """Incremental replan for the REMAINDER of the current iteration
+        (preemptive mid-iteration slice shrinking).
+
+        ``steps[job]`` is the safe-point op the runtime will splice at
+        (engine.find_safe_points); ``budgets`` the new per-job slices
+        (default: the config's ``per_job_budget_bytes``).  Each returned
+        plan is a copy of the prior plan extended with eager swap-outs
+        placed strictly after the safe point — the prefix is byte-identical
+        to the running plan by construction, so
+        ``prior.splice(new, step) == new`` and the simulator/executor can
+        adopt it mid-iteration via ``JobContext.set_plan`` without tearing
+        the iteration.  Every plan carries a ``replan_from`` provenance
+        record (safe-point op, old/new budget, events added).
+        """
+        t0 = _time.perf_counter()
+        cfg = self.config
+        jobs = {s.job_id: s for s in seqs}
+        if isinstance(steps, int):
+            steps = {j: steps for j in jobs}
+        plans: Dict[str, SchedulingPlan] = {}
+        prior_n: Dict[str, int] = {}
+        for j in jobs:
+            prior = prior_plans.get(j)
+            plans[j] = prior.copy() if prior is not None \
+                else SchedulingPlan(job_id=j)
+            prior_n[j] = len(plans[j].events)
+        budget = (cfg.memory_budget_bytes
+                  if cfg.memory_budget_bytes is not None
+                  else self.profile.device_memory_bytes)
+        job_budgets = dict(budgets) if budgets else {
+            j: b for j, b in (cfg.per_job_budget_bytes or {}).items()
+            if j in jobs}
+        state = PipelineState(jobs=jobs, plans=plans, profile=self.profile,
+                              config=cfg, offsets={}, budget=budget,
+                              cross_iteration=self.cross_iteration,
+                              job_budgets=job_budgets)
+        state.shared["replan_from_op"] = {j: op for j, op in steps.items()
+                                          if j in jobs}
+        initial = analyze(seqs, plans={j: prior_plans.get(j) for j in jobs
+                                       if prior_plans.get(j) is not None},
+                          free_at_last_use=self.free_at_last_use)
+        p = PreemptiveReplanPass()
+        p.setup(state)
+        iters = 0
+        n_steps = 0
+        while iters < cfg.max_iterations and p.gate(None):
+            if not p.step(None):
+                break
+            n_steps += 1
+            iters += 1
+        wall = _time.perf_counter() - t0
+        final = analyze(seqs, plans=plans,
+                        free_at_last_use=self.free_at_last_use)
+        for j, plan in plans.items():
+            old_budget = plan.budget_bytes
+            plan.budget_bytes = job_budgets.get(j, old_budget)
+            plan.planned_peak_bytes = final.per_job_peak.get(j, 0)
+            plan.plan_wallclock_s = wall
+            plan.provenance.append({
+                "action": "replan_from", "op": steps.get(j),
+                "from_budget_bytes": old_budget,
+                "to_budget_bytes": plan.budget_bytes,
+                "prior_events": prior_n[j],
+                "added_events": len(plan.events) - prior_n[j]})
+        n_swaps = sum(len(pl.swapped_tensors()) for pl in plans.values())
+        n_recs = sum(len(pl.recomputes()) for pl in plans.values())
+        return ScheduleResult(
+            plans=plans, initial_report=initial, final_report=final,
+            iterations=iters, swaps_scheduled=n_swaps,
+            recomputes_scheduled=n_recs, plan_wallclock_s=wall,
+            pass_steps={p.name: n_steps})
 
 
 # ----------------------------------------------------------------------

@@ -27,7 +27,7 @@ import heapq
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from .access import AccessSequence, AccessType, TensorKind, TensorSpec
-from .plan import EventType, ScheduleEvent, SchedulingPlan
+from .plan import EventType, SchedulingPlan
 
 # Tensor kinds that persist across iterations unless explicitly swapped out.
 PERSISTENT_KINDS = (TensorKind.PARAM, TensorKind.OPT_STATE)

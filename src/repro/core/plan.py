@@ -77,6 +77,12 @@ class SchedulingPlan:
     # observation iterations the policy charges before the plan is live
     # (Capuchin's passive-mode epoch; TENSILE/vDNN: 0)
     passive_iterations: int = 0
+    # how this plan came to be, when not planned from scratch: one record
+    # per incremental replan / safe-point splice, so a hot-swapped plan's
+    # lineage (which op it split at, which budgets it moved between) is
+    # auditable by tests and reports
+    provenance: List[Dict[str, object]] = dataclasses.field(
+        default_factory=list)
 
     def add(self, ev: ScheduleEvent) -> None:
         self.events.append(ev)
@@ -110,8 +116,59 @@ class SchedulingPlan:
     def memory_saving_bytes(self) -> int:
         return max(0, self.vanilla_peak_bytes - self.planned_peak_bytes)
 
+    def copy(self) -> "SchedulingPlan":
+        """Independent copy (events and release map are duplicated) — the
+        starting point of an incremental replan, so the running plan is
+        never mutated behind an executor's back."""
+        p = SchedulingPlan(job_id=self.job_id)
+        p.events = [
+            dataclasses.replace(
+                e, recompute_ops=(list(e.recompute_ops)
+                                  if e.recompute_ops is not None else None))
+            for e in self.events]
+        p.release_after_op = dict(self.release_after_op)
+        p.planned_peak_bytes = self.planned_peak_bytes
+        p.vanilla_peak_bytes = self.vanilla_peak_bytes
+        p.plan_wallclock_s = self.plan_wallclock_s
+        p.budget_bytes = self.budget_bytes
+        p.passive_iterations = self.passive_iterations
+        p.provenance = [dict(r) for r in self.provenance]
+        return p
+
+    def splice(self, new_plan: "SchedulingPlan",
+               at_op: int) -> "SchedulingPlan":
+        """Safe-point splice: everything this plan already committed to up
+        to (and including) trigger op ``at_op`` is kept verbatim — those
+        events have fired or are about to under the running iteration —
+        and ``new_plan`` governs every later trigger.  Release points
+        follow the same rule: a release at or before the splice already
+        happened under the old plan; later ones are the new plan's call.
+        The result carries a provenance record naming the splice op and
+        the budget move, so a hot-swapped plan is auditable."""
+        out = SchedulingPlan(job_id=self.job_id)
+        kept = [e for e in self.events if e.trigger_op <= at_op]
+        adopted = [e for e in new_plan.events if e.trigger_op > at_op]
+        out.events = kept + adopted
+        out.release_after_op = {
+            tid: op for tid, op in self.release_after_op.items()
+            if op <= at_op}
+        out.release_after_op.update(
+            (tid, op) for tid, op in new_plan.release_after_op.items()
+            if op > at_op)
+        out.planned_peak_bytes = new_plan.planned_peak_bytes
+        out.vanilla_peak_bytes = self.vanilla_peak_bytes
+        out.budget_bytes = new_plan.budget_bytes
+        out.passive_iterations = self.passive_iterations
+        out.provenance = [dict(r) for r in self.provenance] \
+            + [dict(r) for r in new_plan.provenance] \
+            + [{"action": "splice", "at_op": at_op,
+                "kept_events": len(kept), "adopted_events": len(adopted),
+                "from_budget_bytes": self.budget_bytes,
+                "to_budget_bytes": new_plan.budget_bytes}]
+        return out
+
     def to_dict(self) -> Dict[str, object]:
-        return {
+        d = {
             "job_id": self.job_id,
             "events": [e.to_dict() for e in self.events],
             "release_after_op": dict(self.release_after_op),
@@ -119,6 +176,10 @@ class SchedulingPlan:
             "vanilla_peak_bytes": self.vanilla_peak_bytes,
             "budget_bytes": self.budget_bytes,
         }
+        # only when present — the golden seed plans pin the bare shape
+        if self.provenance:
+            d["provenance"] = [dict(r) for r in self.provenance]
+        return d
 
     @staticmethod
     def from_dict(d: Dict[str, object]) -> "SchedulingPlan":
@@ -128,7 +189,27 @@ class SchedulingPlan:
         p.planned_peak_bytes = int(d.get("planned_peak_bytes", 0))  # type: ignore[arg-type]
         p.vanilla_peak_bytes = int(d.get("vanilla_peak_bytes", 0))  # type: ignore[arg-type]
         p.budget_bytes = int(d.get("budget_bytes", 0))  # type: ignore[arg-type]
+        p.provenance = [dict(r) for r in d.get("provenance", [])]  # type: ignore[union-attr]
         return p
+
+
+def wrap_intervals(start: float, duration: float,
+                   period: float) -> List[List[float]]:
+    """Project an absolute interval into period-wrapped pieces: an
+    interval crossing the iteration boundary splits into
+    ``[s, T) + [0, e-T)`` (steady state repeats every iteration).  Shared
+    by the planner's PeriodicChannel bookings and the engine's safe-point
+    busy-span detection so the two can never disagree about wrapping."""
+    eps = 1e-9
+    s = start % period
+    out: List[List[float]] = []
+    remaining = duration
+    while remaining > eps:
+        chunk = min(remaining, period - s)
+        out.append([s, s + chunk])
+        remaining -= chunk
+        s = 0.0
+    return out
 
 
 class ChannelReservation:

@@ -12,7 +12,7 @@ recompute instant.  Candidates are ranked by Capuchin's MSPS metric:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from .access import AccessSequence, AccessType, TensorKind
 from .peak_analysis import PERSISTENT_KINDS, PeakReport, storage_of

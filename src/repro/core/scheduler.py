@@ -21,7 +21,7 @@ from typing import Dict, Optional, Sequence
 from .access import AccessSequence
 from .passes import (Pipeline, ScheduleResult, SchedulerConfig,
                      build_pipeline)
-from .plan import MachineProfile
+from .plan import MachineProfile, SchedulingPlan
 
 __all__ = ["MemoryScheduler", "ScheduleResult", "SchedulerConfig",
            "schedule_single"]
@@ -121,6 +121,20 @@ class MemoryScheduler:
             self._plan_latency_sum[j] = sum(
                 op.latency for op in self.jobs[j].operators)
         return result
+
+    # ------------------------------------------------------------------
+    def replan_from(self, job_id: str, prior_plan: "SchedulingPlan",
+                    step: int, budget_bytes: int) -> ScheduleResult:
+        """Incremental remainder replan for one job against a shrunken
+        slice (preemptive arbitration): delegates to
+        ``Pipeline.replan_from`` with the job's registered sequence.  The
+        returned plan extends ``prior_plan`` with eager swap-outs strictly
+        after safe-point op ``step``, so the controller can hot-swap it
+        into the running executor at that safe point."""
+        seq = self.jobs[job_id]
+        return self.pipeline.replan_from(
+            [seq], {job_id: prior_plan}, {job_id: step},
+            budgets={job_id: budget_bytes})
 
 
 def schedule_single(seq: AccessSequence,

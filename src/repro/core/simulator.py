@@ -40,6 +40,31 @@ from .plan import EventType, MachineProfile, SchedulingPlan
 
 
 @dataclasses.dataclass
+class PlanUpdate:
+    """A pending plan change for one running job (preemptive arbitration).
+
+    ``mode="boundary"`` is the paper's rule: the new plan applies right
+    before the next iteration starts.  ``mode="safe-point"`` hot-swaps it
+    mid-iteration at the first eligible safe point — an op boundary in
+    ``safe_ops`` (from ``engine.find_safe_points`` against the *running*
+    plan) reached at or after ``at_time`` with no transfer of this job in
+    flight.  A safe-point update that finds no eligible point before the
+    job's next iteration boundary is discarded there (``applied_time``
+    stays None): its remainder plan is stale once the boundary plan takes
+    over, and it must not block updates queued behind it.  The simulator
+    stamps ``applied_time``/``applied_op`` when a swap lands, so
+    scenarios can report the splice latency.
+    """
+
+    at_time: float
+    plan: SchedulingPlan
+    mode: str = "safe-point"            # "safe-point" | "boundary"
+    safe_ops: Optional[frozenset] = None
+    applied_time: Optional[float] = None
+    applied_op: Optional[int] = None    # -1 == applied at the boundary
+
+
+@dataclasses.dataclass
 class SimResult:
     peak_bytes: int
     per_job_time: Dict[str, float]
@@ -50,6 +75,9 @@ class SimResult:
     swap_conflicts: int
     timeline: List[Tuple[float, int]]
     trace: Optional[List[Tuple[str, str, str]]] = None
+    # (applied_time, applied_op) per job for every plan update that landed
+    plan_swaps: Dict[str, List[Tuple[float, int]]] = \
+        dataclasses.field(default_factory=dict)
 
     def msr(self, vanilla: "SimResult") -> float:
         v = vanilla.peak_bytes
@@ -69,9 +97,10 @@ class SimResult:
 
 class _JobClock:
     """Virtual-time state the engine does not own: op cursor, iteration
-    count, pending prefetch landing times."""
+    count, pending prefetch landing times, queued plan updates."""
 
-    def __init__(self, ctx: JobContext, iterations: int):
+    def __init__(self, ctx: JobContext, iterations: int,
+                 updates: Optional[List[PlanUpdate]] = None):
         self.ctx = ctx
         self.iterations = iterations
         self.iter = 0
@@ -79,6 +108,9 @@ class _JobClock:
         self.finish_time = 0.0
         # storage -> completion time of an in-flight planned swap-in
         self.swap_in_at: Dict[str, float] = {}
+        # async swap-outs still in flight (a safe-point splice must wait)
+        self.inflight_out = 0
+        self.updates = sorted(updates or [], key=lambda u: u.at_time)
 
 
 def simulate(seqs: Sequence[AccessSequence],
@@ -88,15 +120,22 @@ def simulate(seqs: Sequence[AccessSequence],
              offsets: Optional[Dict[str, float]] = None,
              free_at_last_use: bool = True,
              transfer_mode: str = "async",
-             engine: Optional[MemoryEngine] = None) -> SimResult:
+             engine: Optional[MemoryEngine] = None,
+             plan_updates: Optional[Dict[str, List[PlanUpdate]]] = None
+             ) -> SimResult:
     """Run `iterations` training iterations of every job concurrently.
     `iterations` may be a per-job dict (dynamic-workload scenarios: short
     jobs finish and leave while long jobs keep running).
+
+    `plan_updates[job_id]` queues mid-run plan changes (PlanUpdate):
+    boundary-mode updates land right before the next iteration, safe-point
+    updates hot-swap the job's plan at the first eligible safe point.
 
     `free_at_last_use=False` reproduces the vanilla platform (nothing is
     released before iteration end — paper §V-A normalizer)."""
     plans = plans or {}
     offsets = offsets or {}
+    plan_updates = plan_updates or {}
     eng = engine or MemoryEngine(profile)
     profile = eng.profile
 
@@ -107,7 +146,8 @@ def simulate(seqs: Sequence[AccessSequence],
         # typo'd job id with quietly-wrong peak/EOR numbers
         iters = (iterations[s.job_id] if isinstance(iterations, dict)
                  else iterations)
-        jobs[s.job_id] = _JobClock(ctx, iters)
+        jobs[s.job_id] = _JobClock(ctx, iters,
+                                   plan_updates.get(s.job_id))
 
     stall = 0.0
     passive = 0
@@ -146,6 +186,7 @@ def simulate(seqs: Sequence[AccessSequence],
         if kind == "swap_out_done":
             st, compressed = payload  # type: ignore[misc]
             eng.complete_swap_out(ctx, st, t, compressed=compressed)
+            job.inflight_out -= 1
             continue
         if kind != "op":
             continue
@@ -215,6 +256,7 @@ def simulate(seqs: Sequence[AccessSequence],
                     eng.complete_swap_out(ctx, st, end,
                                           compressed=ev.compressed)
                 else:
+                    job.inflight_out += 1
                     push(s1, "swap_out_done", job_id, (st, ev.compressed))
             elif ev.event_type is EventType.SWAP_IN:
                 dur = eng.event_duration(ev)
@@ -237,6 +279,32 @@ def simulate(seqs: Sequence[AccessSequence],
                 eng.ledger.alloc(ctx.job_id, st, ctx.size_of(ev.tensor_id),
                                  end)
 
+        # ---- plan hot-swap at a safe point ------------------------------
+        # after this op's events: the splice adopts the new plan's triggers
+        # for every LATER op, the prefix already ran identically.  Every
+        # due update is scanned — a safe-point update must not be blocked
+        # by a boundary update queued ahead of it — and the LAST eligible
+        # one wins (it was built to supersede its predecessors); the
+        # superseded ones are dropped.
+        if job.updates and not job.swap_in_at and job.inflight_out == 0:
+            hit = None
+            for i, upd in enumerate(job.updates):
+                if upd.at_time > end + 1e-12:
+                    break
+                if upd.mode == "safe-point" \
+                        and (upd.safe_ops is None or op_idx in upd.safe_ops):
+                    hit = i
+            if hit is not None:
+                upd = job.updates[hit]
+                ctx.set_plan(upd.plan)
+                upd.applied_time, upd.applied_op = end, op_idx
+                # superseded SAFE-POINT updates are dropped; pending
+                # boundary updates survive — a spliced remainder plan is
+                # only certified for this iteration's window, so the full
+                # boundary plan must still land at the boundary drain
+                job.updates = [u for i, u in enumerate(job.updates)
+                               if i > hit or u.mode == "boundary"]
+
         # ---- advance ------------------------------------------------------
         nxt = op_idx + 1
         if nxt < len(seq.operators):
@@ -248,6 +316,22 @@ def simulate(seqs: Sequence[AccessSequence],
                     if not _persistent_storage(seq, st):
                         eng.ledger.free(ctx.job_id, st, end)
             job.iter += 1
+            # boundary-mode plan pickup: "right before computing the next
+            # batch of data" (paper §III-D).  ALL due updates drain here:
+            # a safe-point update whose window has passed is obsolete (the
+            # boundary plan supersedes the mid-iteration shrink it never
+            # managed to apply), and of several due boundary updates only
+            # the NEWEST takes effect — each was built to replace its
+            # predecessors.
+            last_boundary = None
+            while job.updates and job.updates[0].at_time <= end + 1e-12:
+                upd = job.updates.pop(0)
+                if upd.mode == "boundary":
+                    last_boundary = upd
+            if last_boundary is not None:
+                ctx.set_plan(last_boundary.plan)
+                last_boundary.applied_time = end
+                last_boundary.applied_op = -1
             if job.iter < job.iterations:
                 push(end, "op", job_id, 0)
             else:
@@ -259,12 +343,17 @@ def simulate(seqs: Sequence[AccessSequence],
                     for j, job in jobs.items()}
     per_job_peak = {j: eng.ledger.job_peak(j) for j in jobs}
     total = max((job.finish_time for job in jobs.values()), default=0.0)
+    plan_swaps = {
+        j: [(u.applied_time, u.applied_op)
+            for u in plan_updates.get(j, []) if u.applied_time is not None]
+        for j in jobs if plan_updates.get(j)}
     return SimResult(
         peak_bytes=eng.ledger.peak, per_job_time=per_job_time,
         per_job_peak=per_job_peak, total_time=total, stall_time=stall,
         passive_swap_ins=passive, swap_conflicts=eng.channel.conflicts,
         timeline=list(eng.ledger.timeline),
-        trace=eng.trace.keys() if eng.trace else None)
+        trace=eng.trace.keys() if eng.trace else None,
+        plan_swaps=plan_swaps)
 
 
 def _persistent_storage(seq: AccessSequence, st: str) -> bool:

@@ -21,10 +21,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .access import AccessSequence, AccessType, TensorKind, TensorSpec
-from .peak_analysis import PERSISTENT_KINDS, PeakReport, analyze, storage_of
+from .access import AccessSequence, TensorKind
+from .peak_analysis import PERSISTENT_KINDS, PeakReport, storage_of
 from .plan import (ChannelReservation, EventType, MachineProfile,
-                   ScheduleEvent, SchedulingPlan)
+                   ScheduleEvent, SchedulingPlan, wrap_intervals)
 
 EPS = 1e-9
 
@@ -41,17 +41,8 @@ class PeriodicChannel:
         self.period = float(period)
         self._res = ChannelReservation()
 
-    def _pieces(self, start: float, duration: float) -> List[Tuple[float, float]]:
-        T = self.period
-        s = start % T
-        out = []
-        remaining = duration
-        while remaining > EPS:
-            chunk = min(remaining, T - s)
-            out.append((s, s + chunk))
-            remaining -= chunk
-            s = 0.0
-        return out
+    def _pieces(self, start: float, duration: float) -> List[List[float]]:
+        return wrap_intervals(start, duration, self.period)
 
     def is_free(self, start: float, duration: float) -> bool:
         return all(self._res.is_free(s, e) for s, e in self._pieces(start, duration))
@@ -126,11 +117,15 @@ class SwapPlanner:
                  max_swap_ratio: float = 1.0,
                  cross_iteration: bool = True,
                  compressed: bool = False,
-                 max_tensor_bytes: Optional[int] = None):
+                 max_tensor_bytes: Optional[int] = None,
+                 not_before: float = 0.0):
         self.seq = seq
         self.plan = plan
         self.profile = profile
         self.max_swap_ratio = max_swap_ratio
+        # incremental replans (safe-point hot-swap) must not schedule new
+        # events before the splice instant — the past already executed
+        self.not_before = not_before
         # False restricts scheduling to within one iteration (no Opt-phase
         # updated-param events — the Capuchin limitation TENSILE lifts)
         self.cross_iteration = cross_iteration
@@ -212,6 +207,7 @@ class SwapPlanner:
         is_updated_param = spec.updates is not None
         # persistent tensors resident from iteration start can leave any time
         earliest = tga.time if tga is not None else 0.0
+        earliest = max(earliest, self.not_before)
         blocked = self._own_access_blocks(tid)
         attempt = SwapAttempt(False, False, False)
         T = max(seq.iteration_time, EPS)

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

@@ -13,7 +13,6 @@ contribute nothing (the `pl.when` guard skips their FLOPs on TPU).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

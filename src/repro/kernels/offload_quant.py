@@ -11,7 +11,6 @@ blocks: per 1×BLOCK tile, scale = absmax/127, pack int8.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,13 +18,12 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --all
 """
 import argparse
-import dataclasses
 import json
 import re
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,12 +12,9 @@ host mesh; the same driver scales to the production mesh on TPU.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

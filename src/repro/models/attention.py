@@ -12,7 +12,7 @@ Decode: one-token query against a (possibly sequence-sharded) KV cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

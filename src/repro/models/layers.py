@@ -8,7 +8,6 @@ until `launch.sharding` installs rules.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax

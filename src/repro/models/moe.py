@@ -15,7 +15,7 @@ auxiliary loss (Switch/GShard).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

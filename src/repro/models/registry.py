@@ -15,11 +15,10 @@ stub frontends supply precomputed frame/patch embeddings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from . import transformer, whisper

@@ -15,11 +15,10 @@ single-device optimization, not a distribution win (EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .layers import ParamBuilder, constrain, rmsnorm
 

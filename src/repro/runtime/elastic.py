@@ -14,11 +14,10 @@ re-layout; DP degree changes only re-slice the batch).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 
-from repro.launch.mesh import make_mesh
 from repro.launch.sharding import MeshRules
 
 

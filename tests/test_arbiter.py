@@ -197,6 +197,41 @@ def test_controller_arbitrated_staggered_jobs():
     assert gc.replan_count >= 3     # 2 launches + >=1 finish re-split
 
 
+def test_departure_with_zero_reclaimed_bytes_skips_replan(two_mlps):
+    """Regression: a finished job that held ZERO bytes of the arbiter
+    split (an under-demand job) reclaims nothing — its departure must NOT
+    trigger a survivors' replan (it would rebuild identical plans), while
+    a departure that does reclaim bytes still re-splits."""
+    from repro.core import JobHandle
+
+    a, b = two_mlps
+    c = a.clone("c")
+    gc = GlobalController(profile=PROFILE, async_swap=False,
+                          pipeline_name="tensile+autoscale",
+                          arbiter_policy="equal")
+    for s in (a, b, c):
+        gc.scheduler.register_job(s)
+        gc.jobs[s.job_id] = JobHandle(job_id=s.job_id, seq=s,
+                                      closed_jaxpr=None, args=(),
+                                      iterations=1)
+        gc.arbiter.register(s.job_id)
+    gc.arbiter.split(["a", "b", "c"])
+    # job "a" finished holding none of the split (demand-capped to zero)
+    gc.arbiter.last_assignment["a"] = 0
+
+    before = gc.replan_count
+    gc._on_job_exit(gc.jobs["a"])
+    assert gc.replan_count == before          # no-op replan skipped
+    assert "a" not in gc.arbiter.priorities   # still deregistered
+    assert "a" not in gc.scheduler.jobs
+
+    # a departure that DOES reclaim bytes replans the survivors
+    assert gc.arbiter.last_assignment["b"] > 0
+    gc._on_job_exit(gc.jobs["b"])
+    assert gc.replan_count == before + 1
+    assert gc.jobs["c"].plan is not None      # survivor got a fresh plan
+
+
 def test_job_thread_failure_surfaces_loudly(monkeypatch):
     """A job thread dying must not be silent: wait() raises JobFailedError
     naming the job, chaining the original exception, and carrying the

@@ -3,15 +3,12 @@ compiled-path decisions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (CostModel, EWMATracker, LatencyMLP, MachineProfile,
                         evaluate, schedule_single, simulate)
-from repro.core.access import (AccessSequence, Operator, TensorKind,
-                               TensorSpec)
+from repro.core.access import (TensorKind)
 from repro.core.baselines import capuchin_plan, vdnn_conv_plan
 from repro.core.peak_analysis import analyze
-from repro.core.plan import EventType
 from repro.core.recompute_planner import RecomputePlanner
 from repro.core.scheduler import MemoryScheduler, SchedulerConfig
 

@@ -1,0 +1,330 @@
+"""Safe-point plan hot-swap: safe-point detection invariants, plan
+splicing (property-tested under hypothesis), the simulator's and the
+executor's mid-iteration splice, and the preemptive controller path.
+
+The acceptance contract of the preemption feature: a plan spliced at a
+safe point never exceeds the pre-splice plan's peak before the splice,
+respects the new (shrunken) slice after it whenever the incremental
+replan certified the slice, and hot-swap execution produces outputs
+identical to boundary-mode execution — the splice never tears an
+iteration."""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_or_stub
+from repro.core import (GlobalController, JaxprExecutor, MachineProfile,
+                        MemoryEngine, PlanUpdate, SchedulerConfig,
+                        SchedulingPlan, analyze, build_pipeline,
+                        find_safe_points, reference_outputs, simulate)
+
+from helpers import capture_mlp, mlp_train_step, synthetic_chain
+
+given, settings, st = hypothesis_or_stub()
+
+PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
+EPS = 1e-12
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    return capture_mlp(sizes=(64, 128, 128, 8), batch=16, job_id="vic")
+
+
+# ---------------------------------------------------------------- safe points
+def test_safe_points_are_quiescent_local_minima(mlp):
+    """Every reported safe point has no planned transfer in flight across
+    its boundary and carries a residency that is a local minimum of the
+    boundary-residency sequence."""
+    seq, _, _ = mlp
+    cfg = SchedulerConfig(per_job_budget_bytes={"vic": 1 << 60})
+    plan = build_pipeline("tensile", profile=PROFILE,
+                          config=cfg).plan([seq]).plans["vic"]
+    sps = find_safe_points(seq, plan)
+    assert sps, "a trained MLP step must expose safe points"
+    T = seq.iteration_time
+    spans = []
+    for ev in plan.events:
+        if ev.end - ev.start > EPS:
+            s = ev.start % T
+            d = ev.end - ev.start
+            while d > EPS:
+                c = min(d, T - s)
+                spans.append((s, s + c))
+                d -= c
+                s = 0.0
+    n = len(seq.operators)
+    for sp in sps:
+        assert 0 <= sp.op_idx < n - 1        # never the iteration boundary
+        assert sp.time == seq.op_end[sp.op_idx]
+        assert not any(s < sp.time - 1e-9 and sp.time < e - 1e-9
+                       for s, e in spans), \
+            f"transfer in flight across safe point op {sp.op_idx}"
+        assert sp.resident_bytes >= 0
+
+
+def test_empty_plan_safe_points_track_activity_minima(mlp):
+    seq, _, _ = mlp
+    sps = find_safe_points(seq, None)
+    assert sps
+    # residency at safe points is bounded by the job's own scheduled peak
+    peak = analyze([seq]).peak_bytes
+    assert all(sp.resident_bytes <= peak for sp in sps)
+
+
+# ---------------------------------------------------------------- splicing
+def _windowed_peak(seq, plan, lo, hi):
+    return analyze([seq], plans={seq.job_id: plan},
+                   window=(lo, hi)).peak_bytes
+
+
+def _splice_invariants(seq, prior, slice_frac, sp_choice):
+    """Shared body of the deterministic and property tests."""
+    sps = find_safe_points(seq, prior)
+    if not sps:
+        return
+    sp = sps[sp_choice % len(sps)]
+    solo = analyze([seq], plans={seq.job_id: prior}).peak_bytes
+    new_slice = max(1, int(solo * slice_frac))
+    pipe = build_pipeline("tensile+autoscale", profile=PROFILE,
+                          config=SchedulerConfig())
+    res = pipe.replan_from([seq], {seq.job_id: prior},
+                           {seq.job_id: sp.op_idx},
+                           budgets={seq.job_id: new_slice})
+    newp = res.plans[seq.job_id]
+    spliced = prior.splice(newp, sp.op_idx)
+    T = seq.iteration_time
+
+    # prefix invariance: before the splice the spliced plan IS the prior
+    # plan — its peak there can never exceed the pre-splice plan's
+    before_prior = _windowed_peak(seq, prior, 0.0, sp.time + EPS)
+    before_spliced = _windowed_peak(seq, spliced, 0.0, sp.time + EPS)
+    assert before_spliced <= before_prior
+
+    # remainder: never worse than the prior plan, and when the replan
+    # certified the slice (its whole-timeline peak fits), the spliced
+    # remainder respects the shrunken slice too
+    after_prior = _windowed_peak(seq, prior, sp.time + EPS, T + EPS)
+    after_spliced = _windowed_peak(seq, spliced, sp.time + EPS, T + EPS)
+    assert after_spliced <= max(after_prior, new_slice)
+    if newp.planned_peak_bytes <= new_slice:
+        assert after_spliced <= new_slice
+
+    # provenance: the splice is auditable
+    assert spliced.provenance
+    rec = spliced.provenance[-1]
+    assert rec["action"] == "splice" and rec["at_op"] == sp.op_idx
+    assert any(r.get("action") == "replan_from"
+               for r in spliced.provenance)
+
+
+def test_splice_invariants_deterministic(mlp):
+    seq, _, _ = mlp
+    for frac in (0.9, 0.7, 0.5):
+        for choice in (0, 1, 5):
+            _splice_invariants(seq, SchedulingPlan(job_id=seq.job_id),
+                               frac, choice)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_ops=st.integers(min_value=4, max_value=16),
+       seed=st.integers(min_value=0, max_value=1000),
+       frac=st.floats(min_value=0.3, max_value=0.95),
+       choice=st.integers(min_value=0, max_value=40))
+def test_splice_safe_point_property(n_ops, seed, frac, choice):
+    """Property (hypothesis): for ANY synthetic chain, ANY safe point and
+    ANY shrunken slice, the spliced plan never exceeds the pre-splice
+    plan's peak before the splice and respects the new slice after it
+    whenever the incremental replan certified the slice."""
+    seq = synthetic_chain(n_ops=n_ops, latency=2.0, seed=seed,
+                          job_id="chain")
+    _splice_invariants(seq, SchedulingPlan(job_id="chain"), frac, choice)
+
+
+# ------------------------------------------------------------- simulator
+def test_simulator_hot_swap_at_safe_point(mlp):
+    """A safe-point PlanUpdate lands at the first eligible safe point at
+    or after its at_time, is recorded in plan_swaps, and can only lower
+    the global peak vs never swapping."""
+    seq, _, _ = mlp
+    prior = SchedulingPlan(job_id="vic")
+    sps = find_safe_points(seq, prior)
+    T = seq.iteration_time
+    t_req = 0.2 * T
+    future = [sp for sp in sps if sp.time > t_req]
+    assert future
+    new_slice = int(analyze([seq]).peak_bytes * 0.7)
+    pipe = build_pipeline("tensile+autoscale", profile=PROFILE,
+                          config=SchedulerConfig())
+    newp = pipe.replan_from([seq], {"vic": prior}, {"vic": future[0].op_idx},
+                            budgets={"vic": new_slice}).plans["vic"]
+    upd = PlanUpdate(at_time=t_req, plan=newp, mode="safe-point",
+                     safe_ops=frozenset(sp.op_idx for sp in future))
+    base = simulate([seq], {"vic": prior.copy()}, PROFILE, iterations=3)
+    eng = MemoryEngine(PROFILE)
+    sim = simulate([seq], {"vic": prior.copy()}, PROFILE, iterations=3,
+                   engine=eng, plan_updates={"vic": [upd]})
+    assert upd.applied_time is not None
+    assert upd.applied_op in upd.safe_ops
+    assert upd.applied_time >= t_req
+    assert sim.plan_swaps["vic"] == [(upd.applied_time, upd.applied_op)]
+    assert sim.peak_bytes <= base.peak_bytes
+
+
+def test_simulator_safe_point_update_not_blocked_by_earlier_boundary(mlp):
+    """A due safe-point update queued BEHIND a boundary update still
+    splices mid-iteration (the queue is scanned, not just its head) —
+    and the boundary update SURVIVES the splice: the remainder plan is
+    only certified for the splice iteration, so the full boundary plan
+    must still land at the next boundary."""
+    seq, _, _ = mlp
+    T = seq.iteration_time
+    prior = SchedulingPlan(job_id="vic")
+    sps = find_safe_points(seq, prior)
+    future = [sp for sp in sps if sp.time > 0.1 * T]
+    new_slice = int(analyze([seq]).peak_bytes * 0.7)
+    pipe = build_pipeline("tensile+autoscale", profile=PROFILE,
+                          config=SchedulerConfig())
+    newp = pipe.replan_from([seq], {"vic": prior}, {"vic": future[0].op_idx},
+                            budgets={"vic": new_slice}).plans["vic"]
+    stale = PlanUpdate(at_time=0.05 * T, plan=prior.copy(), mode="boundary")
+    fresh = PlanUpdate(at_time=0.1 * T, plan=newp, mode="safe-point",
+                       safe_ops=frozenset(sp.op_idx for sp in future))
+    simulate([seq], {"vic": prior.copy()}, PROFILE, iterations=2,
+             plan_updates={"vic": [stale, fresh]})
+    assert fresh.applied_time is not None
+    assert fresh.applied_op in fresh.safe_ops
+    assert fresh.applied_time < T            # mid-iteration, not blocked
+    # the boundary update was NOT swallowed by the splice: it lands at
+    # the iteration boundary as the iteration-scope plan
+    assert stale.applied_op == -1
+    assert stale.applied_time >= T - 1e-9
+
+
+def test_simulator_boundary_update_waits_for_the_boundary(mlp):
+    seq, _, _ = mlp
+    T = seq.iteration_time
+    newp = SchedulingPlan(job_id="vic")
+    upd = PlanUpdate(at_time=0.1 * T, plan=newp, mode="boundary")
+    simulate([seq], {"vic": SchedulingPlan(job_id="vic")}, PROFILE,
+             iterations=2, plan_updates={"vic": [upd]})
+    assert upd.applied_op == -1
+    assert upd.applied_time >= T - 1e-9      # not before the boundary
+
+
+# -------------------------------------------------------------- executor
+def test_executor_hot_swap_preserves_outputs(mlp):
+    """The real interpreting executor splices a pending plan in at a safe
+    point mid-iteration and still produces outputs identical to the
+    unscheduled reference — the hot-swap never tears the iteration."""
+    seq, closed, (params, opt, batch) = mlp
+    prior = SchedulingPlan(job_id="vic")
+    sps = find_safe_points(seq, prior)
+    assert sps
+    new_slice = int(analyze([seq]).peak_bytes * 0.7)
+    pipe = build_pipeline("tensile+autoscale", profile=PROFILE,
+                          config=SchedulerConfig())
+    newp = pipe.replan_from([seq], {"vic": prior}, {"vic": sps[0].op_idx},
+                            budgets={"vic": new_slice}).plans["vic"]
+    ref = reference_outputs(closed, params, opt, batch)
+
+    ex = JaxprExecutor(closed, seq, prior)
+    ex.request_plan(newp, {sp.op_idx for sp in sps})
+    out = ex.run(params, opt, batch)
+    assert ex.stats.hot_swaps == 1
+    assert ex.plan is newp and ex.ctx.plan is newp
+    for a, b in zip(ref, out):
+        assert np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=1e-5, atol=1e-6)
+    # the spliced plan's swap-outs actually ran on the data path
+    assert ex.stats.swap_out_count > 0
+
+
+def test_executor_ignores_request_without_reachable_safe_point(mlp):
+    seq, closed, (params, opt, batch) = mlp
+    prior = SchedulingPlan(job_id="vic")
+    newp = SchedulingPlan(job_id="vic")
+    ex = JaxprExecutor(closed, seq, prior)
+    ex.request_plan(newp, set())             # no eligible op: never fires
+    ex.run(params, opt, batch)
+    assert ex.stats.hot_swaps == 0
+    assert ex.ctx.plan is prior
+
+
+# ---------------------------------------------------- controller preemption
+def test_controller_preempts_running_victim(mlp):
+    """The controller-side path: a shrunken slice routes through
+    MemoryScheduler.replan_from into the victim's live executor, and the
+    executor applies it at a safe point with outputs intact."""
+    seq, closed, (params, opt, batch) = mlp
+    gc = GlobalController(profile=PROFILE, async_swap=False,
+                          pipeline_name="tensile+autoscale",
+                          arbiter_policy="equal", arbiter_mode="preempt")
+    assert gc.arbiter is not None and gc.arbiter.mode == "preempt"
+    gc.scheduler.register_job(seq)
+    gc.arbiter.register("vic", demand_bytes=0)
+    prev = {"vic": analyze([seq]).peak_bytes}
+    gc.arbiter.last_assignment = dict(prev)
+
+    from repro.core import JobHandle
+    handle = JobHandle(job_id="vic", seq=seq, closed_jaxpr=closed,
+                       args=(params, opt, batch), iterations=1)
+    ex = JaxprExecutor(closed, seq, None, accountant=gc.accountant,
+                       channel=gc.channel)
+    handle.executor = ex
+    gc.jobs["vic"] = handle
+    # the victim currently holds more than its shrunken slice
+    gc.accountant.alloc("vic", "resident-blob", prev["vic"])
+    new_slice = int(prev["vic"] * 0.7)
+
+    gc._preempt_victims({"vic": new_slice}, prev)
+    assert gc.preempt_count == 1
+    assert handle.preemptions
+    assert not gc.preempt_failures
+    assert ex._pending_plan is not None
+    plan, safe_ops = ex._pending_plan
+    assert plan.budget_bytes == new_slice
+    assert plan.provenance and \
+        plan.provenance[-1]["action"] == "replan_from"
+
+    # the requested plan lands at a safe point and execution is exact
+    ref = reference_outputs(closed, params, opt, batch)
+    out = ex.run(params, opt, batch)
+    assert ex.stats.hot_swaps == 1
+    for a, b in zip(ref, out):
+        assert np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=1e-5, atol=1e-6)
+
+
+def test_boundary_and_preempt_controllers_agree_on_results():
+    """End-to-end: the same two-job launch script under boundary and
+    preempt arbitration completes cleanly in both modes with every
+    iteration accounted for — preemption changes WHEN memory moves, never
+    WHAT is computed (value-identity of a spliced run is asserted by
+    test_executor_hot_swap_preserves_outputs)."""
+    import jax
+
+    from repro.optim.adam import adamw_init
+
+    from helpers import mlp_params
+
+    def job_args(j):
+        p = mlp_params(jax.random.PRNGKey(j), [32, 64, 64, 4])
+        o = adamw_init(p)
+        b = (jax.random.normal(jax.random.PRNGKey(10 + j), (8, 32)),
+             jax.random.normal(jax.random.PRNGKey(20 + j), (8, 4)))
+        return p, o, b
+
+    for mode in ("boundary", "preempt"):
+        gc = GlobalController(profile=PROFILE, async_swap=False,
+                              pipeline_name="tensile+autoscale",
+                              arbiter_policy="equal", arbiter_mode=mode)
+        p, o, b = job_args(0)
+        h0 = gc.launch(mlp_train_step, p, o, b, job_id="j0", iterations=3)
+        p, o, b = job_args(1)
+        h1 = gc.launch(mlp_train_step, p, o, b, job_id="j1", iterations=2)
+        gc.wait(timeout=300)
+        assert all(h.done and h.error is None for h in gc.jobs.values()), mode
+        assert not gc.preempt_failures, mode
+        # every iteration ran to completion in both modes: nothing torn
+        assert len(h0.step_times) == 3, mode
+        assert len(h1.step_times) == 2, mode

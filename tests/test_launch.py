@@ -1,7 +1,6 @@
 """Launch-layer units: HLO collective parsing, roofline math, sharding
 rules, and the §Perf levers (fused CE, microbatching, a2a MoE wiring)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -69,9 +68,6 @@ def test_shape_assignment_and_skips():
 
 # --------------------------------------------------------- sharding rules
 def test_mesh_rules_head_divisibility_fallback():
-    import subprocess
-    import sys
-    import os
     from tests.test_distribution import run_with_devices
     out = run_with_devices("""
         from repro.configs import get_config

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests (deliverable (f)): every assigned arch,
 reduced config, one forward/train step on CPU, output shapes + no NaNs +
 decode step; plus MoE path equivalence and SSD-vs-recurrence checks."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,4 @@
 """Algorithm 2 (GPU memory peak analysis) unit tests."""
-import numpy as np
-import pytest
 
 from repro.core.access import (AccessSequence, Operator, TensorKind,
                                TensorSpec)

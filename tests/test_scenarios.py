@@ -1,9 +1,14 @@
 """Dynamic multi-workload scenario suite acceptance (smoke-sized).
 
-The contract the CI scenarios-smoke job also enforces: >= 4 multi-job
+The contract the CI bench-trajectory job also exercises: >= 4 multi-job
 dynamic scenarios; under `tensile+autoscale` every scenario's global peak
 stays within the scenario's device budget (zero OOM events in the shared
-capacity-limited ledger) while `vanilla` exceeds it on at least two."""
+capacity-limited ledger) while `vanilla` exceeds it on at least two.
+
+Preemption scenarios (flash-crowd, preempt-vs-boundary) add the
+time-to-within-budget contract: preemptive arbitration gets the device
+back inside the budget in < 1 burst-job iteration with zero ledger OOMs,
+while boundary arbitration takes >= 1."""
 import pytest
 
 
@@ -13,10 +18,25 @@ def table():
     return scenarios.run(smoke=True)
 
 
+@pytest.fixture(scope="module")
+def policy_table(table):
+    """The 4 cross-job-policy scenarios (staggered/churn/...)."""
+    return {k: v for k, v in table.items()
+            if "tensile+autoscale" in v["policies"]}
+
+
+@pytest.fixture(scope="module")
+def preempt_table(table):
+    """The boundary-vs-preempt arbitration scenarios."""
+    return {k: v for k, v in table.items()
+            if "preempt" in v["policies"]}
+
+
 def test_suite_has_dynamic_multi_job_scenarios(table):
-    assert len(table) >= 4
+    assert len(table) >= 6
     names = set(table)
-    assert {"staggered", "churn", "priority-inversion", "bursty"} <= names
+    assert {"staggered", "churn", "priority-inversion", "bursty",
+            "flash-crowd", "preempt-vs-boundary"} <= names
     for rec in table.values():
         assert len(rec["jobs"]) >= 2
         offsets = [j["offset"] for j in rec["jobs"].values()]
@@ -29,9 +49,9 @@ def test_suite_has_dynamic_multi_job_scenarios(table):
     assert len(prios) > 1
 
 
-def test_autoscale_fits_budget_vanilla_does_not(table):
+def test_autoscale_fits_budget_vanilla_does_not(policy_table):
     vanilla_over = 0
-    for name, rec in table.items():
+    for name, rec in policy_table.items():
         auto = rec["policies"]["tensile+autoscale"]
         assert auto["within_budget"], \
             f"{name}: autoscale peak {auto['peak']} > {rec['device_budget']}"
@@ -52,9 +72,50 @@ def test_arbiter_budgets_are_sound_and_fairness_reported(table):
             assert 0.0 < m["fairness"] <= 1.0
 
 
-def test_priority_policy_improves_fairness_under_churn(table):
+def test_priority_policy_improves_fairness_under_churn(policy_table):
     """Arbitrated policies entitle jobs to their slices; utilisation of
     those entitlements is more uniform than vanilla's equal-split view."""
-    rec = table["churn"]
+    rec = policy_table["churn"]
     assert rec["policies"]["tensile+priority"]["fairness"] >= \
         rec["policies"]["vanilla"]["fairness"]
+
+
+# ---------------------------------------------------------------- preemption
+def test_flash_crowd_preempt_beats_boundary(preempt_table):
+    """The acceptance contract: on flash-crowd, preemptive arbitration is
+    back within the device budget in < 1 burst-job iteration with ZERO
+    ledger OOMs, while boundary arbitration stays over for >= 1 (the
+    across-iteration lag the paper's Algorithm 3 is meant to avoid)."""
+    rec = preempt_table["flash-crowd"]
+    pre = rec["policies"]["preempt"]
+    bnd = rec["policies"]["boundary"]
+    assert pre["ttwb_burst_iters"] < 1.0
+    assert pre["oom_events"] == 0
+    assert pre["within_budget"]
+    assert bnd["ttwb_burst_iters"] >= 1.0
+    # preemption also strictly reduces the global peak excursion
+    assert pre["peak"] <= bnd["peak"]
+
+
+def test_preempt_never_worse_than_boundary(preempt_table):
+    """Head-to-head on every preemption scenario: the safe-point hot-swap
+    can only shrink the over-budget window and the OOM count."""
+    for name, rec in preempt_table.items():
+        pre = rec["policies"]["preempt"]
+        bnd = rec["policies"]["boundary"]
+        assert pre["ttwb_burst_iters"] <= bnd["ttwb_burst_iters"], name
+        assert pre["oom_events"] <= bnd["oom_events"], name
+
+
+def test_preempt_scenarios_record_the_splice(preempt_table):
+    """The hot-swap must actually land: the victim's plan_swaps records a
+    safe-point splice (op >= 0) in preempt mode, and only the boundary
+    pickup (op == -1) in boundary mode."""
+    for name, rec in preempt_table.items():
+        pre_swaps = rec["policies"]["preempt"]["plan_swaps"]["victim"]
+        assert any(op >= 0 for _t, op in pre_swaps), name
+        bnd_swaps = rec["policies"]["boundary"]["plan_swaps"]["victim"]
+        assert all(op == -1 for _t, op in bnd_swaps), name
+        # the splice lands after the burst instant
+        t_burst = rec["t_burst"]
+        assert all(t >= t_burst for t, _op in pre_swaps), name

@@ -9,7 +9,6 @@ Invariants (paper §IV-A):
   I6  Opt-phase (updated-param) swap-ins cross the iteration boundary.
 """
 import numpy as np
-import pytest
 
 from conftest import hypothesis_or_stub
 
@@ -18,7 +17,6 @@ given, settings, st = hypothesis_or_stub()
 from repro.core import MachineProfile, schedule_single
 from repro.core.access import (AccessSequence, Operator, TensorKind,
                                TensorSpec)
-from repro.core.peak_analysis import analyze
 from repro.core.plan import EventType
 from repro.core.swap_planner import PeriodicChannel
 

@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (GlobalController, JaxprExecutor, MachineProfile,
                         MemoryScheduler, SchedulerConfig, evaluate,

@@ -1,0 +1,161 @@
+"""CI perf-trajectory gate: diff the scenario bench metrics against the
+committed baseline and fail on regressions.
+
+``python -m benchmarks.run --only scenarios --smoke`` distills its gate
+metrics (global peak, time-to-within-budget, EOR, OOM count per
+scenario/policy) into ``experiments/results/BENCH_scenarios.json``; this
+tool compares that file against the committed baseline
+``benchmarks/BENCH_scenarios.json`` and exits non-zero when
+
+  * a global peak regresses by more than 10 %, or
+  * an overhead metric (EOR, time-to-within-budget in burst-job
+    iterations) regresses by more than 25 %, or
+  * a scenario that was OOM-free gains OOM events, or
+  * a scenario/policy row disappears from the current run.
+
+Improvements and new rows never fail — they are reported and can be
+pinned with ``--update``, which copies the current metrics over the
+committed baseline.  Metrics are deterministic (the simulator runs in
+virtual time from roofline-predicted latencies), so the thresholds guard
+against real planning/engine regressions, not machine noise.
+
+    PYTHONPATH=src python tools/check_bench_regression.py
+    PYTHONPATH=src python tools/check_bench_regression.py --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_scenarios.json")
+CURRENT = os.path.join(ROOT, "experiments", "results",
+                       "BENCH_scenarios.json")
+
+PEAK_TOLERANCE = 0.10        # >10 % peak growth fails
+OVERHEAD_TOLERANCE = 0.25    # >25 % EOR / time-to-within-budget growth fails
+# overhead ratios near zero would make the relative test hair-trigger; a
+# regression below this absolute floor is ignored
+OVERHEAD_FLOOR = 0.05
+
+
+def _rel_increase(base: float, cur: float, floor: float) -> float:
+    if cur <= base:
+        return 0.0
+    return (cur - base) / max(abs(base), floor)
+
+
+def compare(baseline: dict, current: dict) -> list:
+    failures = []
+    for key in sorted(baseline):
+        if key == "_meta":
+            continue
+        base = baseline[key]
+        cur = current.get(key)
+        if cur is None:
+            failures.append(f"{key}: missing from the current run "
+                            "(scenario or policy removed?)")
+            continue
+        # ---- peak ----------------------------------------------------
+        b_peak, c_peak = base.get("peak") or 0, cur.get("peak") or 0
+        if b_peak and c_peak > b_peak * (1 + PEAK_TOLERANCE):
+            failures.append(
+                f"{key}: peak regressed {b_peak} -> {c_peak} "
+                f"(+{(c_peak - b_peak) / b_peak:.1%}, limit "
+                f"{PEAK_TOLERANCE:.0%})")
+        # ---- overhead metrics ---------------------------------------
+        for metric in ("EOR", "ttwb_burst_iters"):
+            b, c = base.get(metric), cur.get(metric)
+            if b is None or c is None:
+                continue
+            inc = _rel_increase(b, c, OVERHEAD_FLOOR)
+            if inc > OVERHEAD_TOLERANCE and c - b > OVERHEAD_FLOOR:
+                failures.append(
+                    f"{key}: {metric} regressed {b:.4f} -> {c:.4f} "
+                    f"(+{inc:.1%}, limit {OVERHEAD_TOLERANCE:.0%})")
+        # ---- OOM-free scenarios must stay OOM-free -------------------
+        b_oom, c_oom = base.get("oom_events"), cur.get("oom_events")
+        if b_oom == 0 and (c_oom or 0) > 0:
+            failures.append(f"{key}: was OOM-free, now {c_oom} OOM events")
+        # ---- a recovering scenario must keep recovering --------------
+        # (ttwb_recovered False == the run ENDED over budget; its ttwb is
+        # null, so the relative test above cannot see the regression)
+        if base.get("ttwb_recovered") is True \
+                and cur.get("ttwb_recovered") is False:
+            failures.append(f"{key}: used to return within budget, now "
+                            "never recovers after the burst")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin benchmarks/BENCH_scenarios.json from the "
+                         "current run instead of diffing")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--current", default=CURRENT)
+    args = ap.parse_args()
+
+    if not os.path.exists(args.current):
+        print(f"current metrics not found at {args.current}; run\n"
+              "    python -m benchmarks.run --only scenarios --smoke\n"
+              "first.")
+        return 2
+
+    with open(args.current) as f:
+        current = json.load(f)
+    baseline = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+
+    # smoke and full-size metrics are different universes; refuse to diff
+    # or re-pin across the two (run the variant the baseline was pinned
+    # from — CI uses --smoke)
+    if baseline is not None:
+        b_smoke = baseline.get("_meta", {}).get("smoke")
+        c_smoke = current.get("_meta", {}).get("smoke")
+        if b_smoke is not None and c_smoke is not None \
+                and b_smoke != c_smoke:
+            want = "--smoke" if b_smoke else "no --smoke"
+            print(f"variant mismatch: baseline was pinned from a "
+                  f"{'smoke' if b_smoke else 'full-size'} run, current is "
+                  f"{'smoke' if c_smoke else 'full-size'}; rerun the "
+                  f"scenarios bench with {want} (or re-pin deliberately "
+                  "by deleting the baseline first).")
+            return 2
+
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"re-pinned {args.baseline}")
+        return 0
+
+    if baseline is None:
+        print(f"no committed baseline at {args.baseline}; pin one with "
+              "--update")
+        return 2
+
+    failures = compare(baseline, current)
+    new_rows = sorted(set(current) - set(baseline) - {"_meta"})
+    if new_rows:
+        print(f"note: {len(new_rows)} new row(s) not in the baseline "
+              f"(pin with --update): {', '.join(new_rows)}")
+    if failures:
+        print(f"\nBENCH REGRESSION: {len(failures)} failure(s)")
+        for fmsg in failures:
+            print("  " + fmsg)
+        print("\nIf the change is intentional, re-pin with: "
+              "PYTHONPATH=src python tools/check_bench_regression.py "
+              "--update")
+        return 1
+    n_rows = len([k for k in baseline if k != "_meta"])
+    print(f"bench OK: {n_rows} rows within tolerance "
+          f"(peak +{PEAK_TOLERANCE:.0%}, overhead +{OVERHEAD_TOLERANCE:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
