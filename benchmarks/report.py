@@ -167,6 +167,18 @@ def paper_tables() -> str:
             "(1.0 = every job uses the same fraction of its slice).  "
             "Reproduce: `python -m benchmarks.run --only scenarios` "
             "(`--smoke` for the CPU-sized CI variant).\n")
+        out.append(
+            "Two modeled-vs-measured columns come from the telemetry "
+            "plane: each policy row runs with a `TelemetryHub` "
+            "attached.  `calib (cold→fit)` is the analytic cost model's "
+            "mean relative latency error before (deliberately "
+            "miscalibrated 4× cold-start constants) and after hub-fed "
+            "`CostModel.recalibrate`; `EOR meas` is the hub-measured "
+            "stall/compute ratio of the worst job, next to `EOR`, the "
+            "vanilla-normalized simulated overhead.  The post-fit "
+            "`calib_err` is gated by CI "
+            "(`tools/check_bench_regression.py`, >25 % regression "
+            "fails).\n")
         from . import scenarios as SC
         out.append(SC.format_markdown(sc))
         out.append("")
@@ -228,6 +240,41 @@ def paper_tables() -> str:
                     f"{p['oom_events']} ledger OOMs vs boundary's "
                     f"{_ttwb(b)} with {b['oom_events']} "
                     "over-capacity allocations.\n")
+            meas = {k: rec for k, rec in pre_recs.items()
+                    if "preempt-measured" in rec["policies"]}
+            if meas:
+                out.append(
+                    "#### Measured safe points + eor-learned arbitration "
+                    "(the telemetry plane closed loop)\n")
+                out.append(
+                    "The `preempt-measured` rows replace BOTH modeled "
+                    "inputs of preemption with measured ones: safe "
+                    "points come from "
+                    "`find_safe_points(source=\"measured\")` over a "
+                    "probed `TelemetryHub` (measured residency/transfer "
+                    "records, falling back to the modeled ledger below "
+                    "2 instrumented iterations), and the budget split "
+                    "from `ARBITER_POLICIES[\"eor-learned\"]` (weights "
+                    "from each job's measured stall share).  Acceptance "
+                    "(tests/test_scenarios.py): time-to-within-budget "
+                    "≤ the modeled preempt baseline with zero ledger "
+                    "OOMs.  Reproduce the calibration / eor-learned "
+                    "rows: `PYTHONPATH=src python -m benchmarks.run "
+                    "--only scenarios --smoke` (the `calib_err` and "
+                    "`preempt-measured` gate rows land in "
+                    "`experiments/results/BENCH_scenarios.json`; "
+                    "`tools/check_bench_regression.py --update` "
+                    "re-pins).\n")
+                for name, rec in meas.items():
+                    m = rec["policies"]["preempt-measured"]
+                    p = rec["policies"]["preempt"]
+                    out.append(
+                        f"On `{name}`: preempt-measured returns within "
+                        f"budget in {_ttwb(m)} burst iteration(s) "
+                        f"({m['oom_events']} OOMs, calib err "
+                        f"{m['calib_err_cold']:.2f}→"
+                        f"{m['calib_err']:.3f}) vs modeled preempt's "
+                        f"{_ttwb(p)}.\n")
     lm = _load("latency_model.json")
     if lm:
         out.append("### §IV-C — cold-start latency MLP\n")

@@ -156,6 +156,11 @@ def bench_scenarios(smoke: bool = False) -> None:
                 # null + an explicit recovered flag the gate checks
                 "ttwb_burst_iters": round(ttwb, 6) if finite else None,
                 "ttwb_recovered": (finite if ttwb is not None else None),
+                # measured-telemetry plane: post-recalibration cost-model
+                # error (gated at >25 % regression like the other
+                # overhead metrics)
+                "calib_err": (round(m["calib_err"], 6)
+                              if "calib_err" in m else None),
             }
     with open(os.path.join(RESULTS, "BENCH_scenarios.json"), "w") as f:
         json.dump(gate, f, indent=1, sort_keys=True)

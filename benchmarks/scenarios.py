@@ -37,6 +37,15 @@ actually respected):
                          victim's next safe point
     preempt-vs-boundary  one joiner, head-to-head splice-latency numbers
 
+Both preemption scenarios additionally run a **preempt-measured** mode:
+safe points detected from the MEASURED residency telemetry
+(`find_safe_points(source="measured")` over a probed TelemetryHub) and
+the budget split by the `eor-learned` arbiter policy (weights from each
+job's measured stall share) — the fully measured-plane variant of the
+modeled `preempt` baseline.  Every policy row also reports
+`calib_err_cold` / `calib_err` (analytic cost-model latency error before
+and after hub-fed recalibration) and `measured_eor`.
+
 Run:  python -m benchmarks.run --only scenarios [--smoke]
 """
 from __future__ import annotations
@@ -50,9 +59,10 @@ from typing import Dict, List, Optional, Tuple
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 
-from repro.core import (BudgetArbiter, MachineProfile, MemoryEngine,
-                        PlanUpdate, SchedulerConfig, SchedulingPlan, analyze,
-                        build_pipeline, find_safe_points, simulate)
+from repro.core import (BudgetArbiter, CostModel, DeviceCalibration,
+                        MachineProfile, MemoryEngine, PlanUpdate,
+                        SchedulerConfig, SchedulingPlan, TelemetryHub,
+                        analyze, build_pipeline, find_safe_points, simulate)
 
 # the CPU-sized MLP device class used by the system tests: fast to capture,
 # slow enough per-op that swaps have real windows
@@ -214,6 +224,25 @@ PREEMPT_SCENARIOS: List[PreemptScenario] = [
 ]
 
 
+def _calibration_metrics(hub: TelemetryHub) -> Dict[str, float]:
+    """Modeled-vs-measured calibration quality for one simulated run.
+
+    A CostModel is started from deliberately WRONG cold-start constants
+    (4x off both throughput axes — the miscalibrated-device case) and
+    recalibrated online from the run's telemetry; ``calib_err_cold`` is
+    the analytic model's mean relative latency error before any feedback,
+    ``calib_err`` after hub-fed recalibration.  The gap is exactly what
+    the measured-telemetry plane buys; `calib_err` is gated by
+    tools/check_bench_regression.py (>25 % regression fails CI)."""
+    truth = DeviceCalibration()
+    cm = CostModel(DeviceCalibration(flops=truth.flops / 4.0,
+                                     mem_bw=truth.mem_bw / 4.0))
+    cold = cm.calibration_report(hub)
+    fit = cm.recalibrate(hub)
+    return {"calib_err_cold": cold.overall, "calib_err": fit.overall,
+            "calib_samples": fit.samples}
+
+
 def _time_to_within(timeline, level: int, t_from: float) -> float:
     """Seconds from `t_from` until usage is back at or under `level` FOR
     GOOD: the first at-or-under sample after the LAST over-`level` state
@@ -302,6 +331,33 @@ def run_preempt_scenario(scn: PreemptScenario, smoke: bool = False) -> Dict:
                            budgets={victim: v_slice}).plans[victim]
     safe_ops = frozenset(sp.op_idx for sp in future)
 
+    # measured plane ("preempt-measured" mode): probe the victim and the
+    # crowd through the simulator with a TelemetryHub attached, detect the
+    # victim's safe points from MEASURED residency (not the modeled
+    # ledger), and split the budget with the eor-learned policy (weights
+    # from each job's measured stall share; demand caps keep the split
+    # sound when stalls are uniform)
+    probe_hub = TelemetryHub(clock="virtual")
+    simulate([vseq], {victim: pre_plan.copy()}, PROFILE, iterations=2,
+             telemetry=probe_hub)
+    simulate(bseqs, {j: p.copy() for j, p in crowd.plans.items()}, PROFILE,
+             iterations=1, offsets={j: 0.0 for j in burst_ids},
+             telemetry=probe_hub)
+    sps_m = find_safe_points(vseq, pre_plan, source="measured",
+                             telemetry=probe_hub)
+    future_m = [sp for sp in sps_m if sp.time > t_burst]
+    step_m = future_m[0].op_idx if future_m else step
+    arb_m = BudgetArbiter(budget, policy="eor-learned", mode="preempt",
+                          telemetry=probe_hub)
+    arb_m.register(victim, demand_bytes=0)        # hungry: uncapped
+    for j, d in demands.items():
+        arb_m.register(j, demand_bytes=d)
+    budgets_m = arb_m.split([victim] + burst_ids)
+    inc_m = pipe.replan_from(
+        [vseq], {victim: pre_plan}, {victim: step_m},
+        budgets={victim: budgets_m[victim]}).plans[victim]
+    safe_ops_m = frozenset(sp.op_idx for sp in future_m)
+
     # vanilla normalizer for EOR (paper §V-A)
     vanilla = simulate([vseq] + bseqs, None, PROFILE, iterations=iters,
                        offsets=offsets, free_at_last_use=False)
@@ -321,22 +377,31 @@ def run_preempt_scenario(scn: PreemptScenario, smoke: bool = False) -> Dict:
         "policies": {},
     }
 
-    for mode in ("boundary", "preempt"):
+    for mode in ("boundary", "preempt", "preempt-measured"):
         updates = [PlanUpdate(at_time=t_burst, plan=full, mode="boundary")]
+        mode_budgets, mode_slice = budgets, v_slice
         if mode == "preempt":
             updates.insert(0, PlanUpdate(
                 at_time=t_burst, plan=inc, mode="safe-point",
                 safe_ops=safe_ops))
+        elif mode == "preempt-measured":
+            updates.insert(0, PlanUpdate(
+                at_time=t_burst, plan=inc_m, mode="safe-point",
+                safe_ops=safe_ops_m))
+            mode_budgets = budgets_m
+            mode_slice = budgets_m[victim]
         plans = {victim: pre_plan.copy(), **crowd.plans}
+        hub = TelemetryHub(clock="virtual")
         eng = MemoryEngine(PROFILE, capacity_bytes=budget)
         sim = simulate([vseq] + bseqs, plans, PROFILE, iterations=iters,
                        offsets=offsets, engine=eng,
-                       plan_updates={victim: updates})
+                       plan_updates={victim: updates}, telemetry=hub)
         ttwb = _time_to_within(eng.ledger.timeline, budget, t_burst)
         ttws = _time_to_within(eng.ledger.job_timeline.get(victim, []),
-                               v_slice, t_burst)
-        util = {j: sim.per_job_peak.get(j, 0) / max(budgets.get(j, 1), 1)
-                for j in budgets}
+                               mode_slice, t_burst)
+        util = {j: sim.per_job_peak.get(j, 0)
+                / max(mode_budgets.get(j, 1), 1)
+                for j in mode_budgets}
         rec["policies"][mode] = {
             "peak": sim.peak_bytes,
             "within_budget": bool(sim.peak_bytes <= budget),
@@ -359,6 +424,11 @@ def run_preempt_scenario(scn: PreemptScenario, smoke: bool = False) -> Dict:
             "victim_ttws_burst_iters": ttws / T_burst,
             "plan_swaps": {j: list(map(list, v))
                            for j, v in sim.plan_swaps.items()},
+            "canceled_swap_ins": sim.canceled_swap_ins,
+            "measured_eor": max((hub.measured_eor(j)
+                                 for j in [victim] + burst_ids),
+                                default=0.0),
+            **_calibration_metrics(hub),
         }
     return rec
 
@@ -461,11 +531,12 @@ def run_scenario(scn: Scenario, smoke: bool = False,
                 .plan(seqs, offsets=offsets)
             plans = res.plans
             plan_wall = res.plan_wallclock_s
+        hub = TelemetryHub(clock="virtual")
         eng = MemoryEngine(PROFILE, capacity_bytes=budget)
         sim = simulate(seqs, plans, PROFILE, iterations=iters,
                        offsets=offsets,
                        free_at_last_use=(policy != "vanilla"),
-                       engine=eng)
+                       engine=eng, telemetry=hub)
         msr = sim.msr(vanilla)
         eor = sim.eor(vanilla)
         util = {j: sim.per_job_peak.get(j, 0) / max(entitlement.get(j, 1), 1)
@@ -482,6 +553,9 @@ def run_scenario(scn: Scenario, smoke: bool = False,
             "swap_conflicts": sim.swap_conflicts,
             "passive_swap_ins": sim.passive_swap_ins,
             "plan_wallclock_s": plan_wall,
+            "measured_eor": max((hub.measured_eor(j) for j in jobs),
+                                default=0.0),
+            **_calibration_metrics(hub),
         }
     return rec
 
@@ -513,19 +587,31 @@ def run(out_json: Optional[str] = None, smoke: bool = False,
 
 
 def format_markdown(table: Dict[str, Dict]) -> str:
+    """The scenario table; two modeled-vs-measured columns come from the
+    telemetry plane — `calib (cold→fit)` is the analytic cost model's
+    latency error before (deliberately miscalibrated cold-start
+    constants) and after hub-fed recalibration, and `EOR meas` is the
+    hub-measured stall/compute ratio (vs `EOR`, the vanilla-normalized
+    simulated overhead)."""
     lines = ["| scenario | policy | peak (MiB) | ≤ budget | MSR | EOR | "
-             "CBR | fairness | ttwb (burst iters) |",
-             "|---|---|---|---|---|---|---|---|---|"]
+             "EOR meas | CBR | fairness | ttwb (burst iters) | "
+             "calib (cold→fit) |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
     for scn, rec in table.items():
         for pol, m in rec["policies"].items():
             cbr = (f"{m['CBR']:.3f}" if m["CBR"] < 1e3 else "≫100")
             ttwb = m.get("ttwb_burst_iters")
+            calib = (f"{m['calib_err_cold']:.2f}→{m['calib_err']:.3f}"
+                     if "calib_err" in m else "—")
+            meor = m.get("measured_eor")
             lines.append(
                 f"| {scn} | {pol} | {m['peak'] / 2**20:.2f} "
                 f"| {'✓' if m['within_budget'] else '✗'} "
-                f"| {m['MSR']:.4f} | {m['EOR']:.4f} | {cbr} "
+                f"| {m['MSR']:.4f} | {m['EOR']:.4f} "
+                f"| {f'{meor:.4f}' if meor is not None else '—'} | {cbr} "
                 f"| {m['fairness']:.3f} "
-                f"| {f'{ttwb:.3f}' if ttwb is not None else '—'} |")
+                f"| {f'{ttwb:.3f}' if ttwb is not None else '—'} "
+                f"| {calib} |")
     return "\n".join(lines)
 
 

@@ -10,6 +10,10 @@ Public API:
     analyze / vanilla_peak        — Algorithm 2 (peak analysis)
     MemoryEngine / DeviceLedger / DmaChannel — the shared memory-event
                                     engine both runtimes execute against
+    TelemetryHub                  — the measured-telemetry plane: one sink
+                                    for op/transfer/stall/residency records
+                                    from both runtimes; consumers replace
+                                    modeled time with measured time
     simulate / evaluate           — discrete-event metrics (MSR/EOR/CBR)
     JaxprExecutor                 — interpreting executor with real host swap
     GlobalController              — multi-workload runtime (paper Fig. 3)
@@ -21,8 +25,8 @@ See docs/architecture.md for the engine + pass-pipeline layering.
 from .access import (AccessSequence, AccessType, Operator, Phase, TensorKind,
                      TensorSpec, format_bytes)
 from .baselines import capuchin_plan, vanilla_plan, vdnn_conv_plan
-from .cost_model import (CostModel, DeviceCalibration, EWMATracker,
-                         LatencyMLP, calibrate_cpu)
+from .cost_model import (CalibrationReport, CostModel, DeviceCalibration,
+                         EWMATracker, LatencyMLP, calibrate_cpu)
 from .engine import (DeviceLedger, DmaChannel, EngineTrace, JobContext,
                      JobLedgerView, MemoryEngine, SafePoint, find_safe_points)
 from .executor import (DeviceAccountant, ExecutionStats, JaxprExecutor,
@@ -45,5 +49,8 @@ from .scheduler import (MemoryScheduler, ScheduleResult, SchedulerConfig,
                         schedule_single)
 from .simulator import PlanUpdate, SimResult, evaluate, simulate
 from .swap_planner import PeriodicChannel, SwapPlanner
+from .telemetry import (IterationView, OpSample, ResidencySample,
+                        StallSample, TelemetryHub, TransferSample,
+                        record_schemas)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -53,10 +53,37 @@ def _nbytes(aval) -> int:
 class DeviceCalibration:
     """Effective throughput of the executing device.  Defaults are calibrated
     for this container's CPU at import time of the benchmarks (cheap matmul /
-    memcpy probes); the TPU target constants live in plan.MachineProfile."""
+    memcpy probes); the TPU target constants live in plan.MachineProfile.
+
+    Beyond the import-time probes, the constants recalibrate ONLINE from
+    measured telemetry: ``CostModel.recalibrate(hub)`` folds every new
+    TelemetryHub op sample (measured latency + the op's static
+    flops/bytes) into ``flops`` / ``mem_bw`` with an EWMA, so the model
+    tracks the device it is actually running on instead of the device it
+    was probed on."""
     flops: float = 5e10
     mem_bw: float = 1e10
     overhead_s: float = 2e-6
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """How well the (re)calibrated analytic model predicts the measured
+    latencies in a TelemetryHub: mean relative error overall and per
+    primitive.  Exposed so the benchmarks/CI can gate on calibration
+    quality (`calib_err` in BENCH_scenarios.json)."""
+
+    overall: float                       # mean |pred - measured| / measured
+    per_primitive: Dict[str, float]
+    samples: int
+
+
+def _clamped(estimate: float, current: float, limit: float = 16.0) -> float:
+    """Bound a single-sample throughput point-estimate to within
+    ``limit``x of the current constant: one outlier (GC pause, cold
+    cache) must not move the calibration by orders of magnitude — the
+    EWMA then walks toward a persistent shift over several samples."""
+    return min(max(estimate, current / limit), current * limit)
 
 
 class CostModel:
@@ -64,6 +91,9 @@ class CostModel:
         self.calib = calib or DeviceCalibration()
         self.mlp: Optional["LatencyMLP"] = None
         self.utilization: float = 0.0  # 0..1, "GPU usage" analogue
+        # recalibration cursor per job: only hub samples newer than this
+        # are folded in on the next recalibrate() call
+        self._recal_cursor: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def eqn_cost(self, eqn) -> Tuple[float, float]:
@@ -156,6 +186,65 @@ class CostModel:
             if pred > 0:
                 return float(0.5 * base + 0.5 * pred)
         return float(base)
+
+    # ------------------------------------------------------------------
+    # Online recalibration from measured telemetry (the §IV-E feedback
+    # loop widened from per-op latencies to the throughput constants)
+    # ------------------------------------------------------------------
+    def recalibrate(self, hub, alpha: float = 0.5) -> "CalibrationReport":
+        """Fold every NEW TelemetryHub op sample into the calibration:
+        each measured (flops, bytes, latency) triple yields a point
+        estimate of the constant its roofline term is bound by — the
+        classification uses the current calibration, so consistent
+        samples contract both constants geometrically toward the device's
+        effective throughput.  Samples already consumed (per-job cursor)
+        are skipped, so the controller can call this after every
+        iteration at O(new samples) cost.  Returns the post-update
+        ``calibration_report``."""
+        c = self.calib
+        for job_id in hub.jobs():
+            samples = hub.ops.get(job_id, ())
+            start = self._recal_cursor.get(job_id, 0)
+            for s in samples[start:]:
+                eff = s.latency_s - c.overhead_s
+                if eff <= 0 or (s.flops <= 0 and s.bytes_accessed <= 0):
+                    continue
+                if eff < 0.25 * s.latency_s:
+                    # overhead-dominated sample: measurement jitter of
+                    # the same order as `eff` would make the throughput
+                    # estimate unbounded — no signal, skip it
+                    continue
+                if s.flops / c.flops >= s.bytes_accessed / c.mem_bw:
+                    est = _clamped(s.flops / eff, c.flops)
+                    c.flops = (1 - alpha) * c.flops + alpha * est
+                else:
+                    est = _clamped(s.bytes_accessed / eff, c.mem_bw)
+                    c.mem_bw = (1 - alpha) * c.mem_bw + alpha * est
+            self._recal_cursor[job_id] = len(samples)
+        return self.calibration_report(hub)
+
+    def calibration_report(self, hub) -> "CalibrationReport":
+        """Per-primitive relative error of the analytic model against the
+        hub's measured latencies (utilization-free prediction: the error
+        isolates the throughput constants, not the contention factor)."""
+        util, self.utilization = self.utilization, 0.0
+        try:
+            errs: Dict[str, list] = {}
+            for job_id in hub.jobs():
+                for s in hub.ops.get(job_id, ()):
+                    if s.latency_s <= 0 or (s.flops <= 0
+                                            and s.bytes_accessed <= 0):
+                        continue
+                    pred = self.latency(s.flops, s.bytes_accessed, s.prim)
+                    rel = abs(pred - s.latency_s) / s.latency_s
+                    errs.setdefault(s.prim or "?", []).append(rel)
+        finally:
+            self.utilization = util
+        per_prim = {p: sum(v) / len(v) for p, v in errs.items()}
+        n = sum(len(v) for v in errs.values())
+        overall = (sum(sum(v) for v in errs.values()) / n) if n else 0.0
+        return CalibrationReport(overall=overall, per_primitive=per_prim,
+                                 samples=n)
 
 
 # ======================================================================
@@ -251,6 +340,7 @@ class EWMATracker:
     def __init__(self, alpha: float = 0.3):
         self.alpha = alpha
         self.values: Dict[int, float] = {}
+        self._hub_cursor: Dict[str, int] = {}
 
     def update(self, op_idx: int, measured: float) -> float:
         old = self.values.get(op_idx)
@@ -258,6 +348,18 @@ class EWMATracker:
             self.alpha * measured + (1 - self.alpha) * old)
         self.values[op_idx] = new
         return new
+
+    def ingest(self, hub, job_id: str) -> int:
+        """Fold every NEW TelemetryHub op sample of the job into the
+        tracker (per-job cursor, O(new samples)); returns how many were
+        consumed.  This is the hub-fed path of §IV-E — the tracker no
+        longer needs the executor to hand it latency lists directly."""
+        samples = hub.ops.get(job_id, ())
+        start = self._hub_cursor.get(job_id, 0)
+        for s in samples[start:]:
+            self.update(s.op_idx, s.latency_s)
+        self._hub_cursor[job_id] = len(samples)
+        return len(samples) - start
 
     def drift_ratio(self, baseline_sum: float) -> float:
         s = sum(self.values.values())

@@ -46,6 +46,7 @@ from .access import AccessSequence, TensorKind
 from .peak_analysis import PERSISTENT_KINDS, storage_of
 from .plan import (EventType, MachineProfile, ScheduleEvent,
                    SchedulingPlan, wrap_intervals)
+from .telemetry import TelemetryHub
 
 
 # ----------------------------------------------------------------------
@@ -60,12 +61,17 @@ class DeviceLedger:
     """
 
     def __init__(self, capacity_bytes: Optional[int] = None,
-                 trace: Optional["EngineTrace"] = None):
+                 trace: Optional["EngineTrace"] = None,
+                 telemetry: Optional[TelemetryHub] = None):
         self.capacity = capacity_bytes
         self.used = 0
         self.peak = 0
         self.oom_events = 0
         self.lock = threading.Lock()
+        # measured-telemetry plane: every residency mutation is mirrored
+        # into the hub, so the executor's measured timeline and the
+        # simulator's virtual one are ordered identically by construction
+        self.telemetry = telemetry
         self.timeline: List[Tuple[float, int]] = []
         # per-job usage over time — what "is job j inside its slice at
         # instant t" questions (time-to-within-budget) are answered from.
@@ -117,6 +123,9 @@ class DeviceLedger:
                 self.job_timeline.setdefault(job_id, []).append((t, jb))
             if self.trace is not None:
                 self.trace.record("alloc", job_id, storage)
+            if self.telemetry is not None:
+                self.telemetry.record_residency(job_id, storage, "alloc",
+                                                jb, t)
             return True
 
     def free(self, job_id: str, storage: str,
@@ -136,6 +145,9 @@ class DeviceLedger:
                 self.job_timeline.setdefault(job_id, []).append((t, jb))
             if self.trace is not None:
                 self.trace.record("free", job_id, storage)
+            if self.telemetry is not None:
+                self.telemetry.record_residency(job_id, storage, "free",
+                                                jb, t)
             return nbytes
 
     def view(self, job_id: str,
@@ -215,16 +227,41 @@ class DmaChannel:
         # virtual-time state
         self.busy_until = 0.0
         self.conflicts = 0
+        # most recent acquire, for best-effort refunds:
+        # (busy_until before it, slot start, slot end)
+        self._last_acquire: Optional[Tuple[float, float, float]] = None
         # real-time state
         self.lock = threading.Lock()
         self.busy_s = 0.0
 
     def acquire(self, t: float, dur: float) -> Tuple[float, float]:
+        prev = self.busy_until
         if t < self.busy_until:
             self.conflicts += 1
             t = self.busy_until
         self.busy_until = t + dur
+        self._last_acquire = (prev, t, t + dur)
         return t, t + dur
+
+    def try_refund(self, start: float, end: float) -> bool:
+        """Best-effort cancellation of a virtual-time booking: only the
+        most recent (tail) slot can be refunded — the channel is a FIFO
+        scalar, earlier slots already have later bookings queued behind
+        them.  Refunding the most recent acquire restores the exact
+        pre-booking state; an older tail slot shrinks to its start.  Used
+        when an incremental replan cancels a swap-in that was booked but
+        has not started at the safe point."""
+        if self._last_acquire is not None:
+            prev, s, e = self._last_acquire
+            if abs(s - start) < 1e-12 and abs(e - end) < 1e-12 \
+                    and abs(self.busy_until - end) < 1e-12:
+                self.busy_until = prev
+                self._last_acquire = None
+                return True
+        if abs(self.busy_until - end) < 1e-12 and start < end:
+            self.busy_until = start
+            return True
+        return False
 
     def transfer(self, fn: Callable):
         with self.lock:
@@ -431,9 +468,54 @@ class SafePoint:
     resident_bytes: int  # modeled device residency at the boundary
 
 
+def _measured_safe_points(seq: AccessSequence, telemetry: TelemetryHub,
+                          min_iterations: int) -> Optional[List[SafePoint]]:
+    """Safe points from the MEASURED residency timeline: op boundaries
+    that, in each of the last ``min_iterations`` completed iterations,
+    were quiescent (no recorded transfer in flight across the measured
+    completion instant) and at a non-strict local minimum of the measured
+    per-boundary residency.  Returns None when fewer than
+    ``min_iterations`` instrumented iterations exist — the caller falls
+    back to the modeled ledger (cold start, paper §IV-C blending)."""
+    job_id = seq.job_id
+    n = len(seq.operators)
+    if n <= 1:
+        return []
+    done = telemetry.iterations(job_id)
+    if done < min_iterations:
+        return None
+    common: Optional[set] = None
+    res_sum: Dict[int, int] = {}
+    for it in range(done - min_iterations, done):
+        resident = telemetry.measured_boundary_residency(job_id, it, n)
+        quiescent = telemetry.quiescent_boundaries(job_id, it, n)
+        if resident is None or quiescent is None:
+            return None                      # iteration not instrumented
+        ok = set()
+        qset = set(quiescent)
+        for k in range(n - 1):               # final op == iteration boundary
+            if k not in qset:
+                continue
+            left = resident[k - 1] if k > 0 else resident[k]
+            right = resident[k + 1]
+            if resident[k] <= left and resident[k] <= right:
+                ok.add(k)
+        common = ok if common is None else (common & ok)
+        for k in ok:
+            res_sum[k] = res_sum.get(k, 0) + resident[k]
+    if not common:
+        return []
+    return [SafePoint(op_idx=k, time=seq.op_end[k],
+                      resident_bytes=res_sum[k] // min_iterations)
+            for k in sorted(common)]
+
+
 def find_safe_points(seq: AccessSequence,
                      plan: Optional[SchedulingPlan] = None,
-                     free_at_last_use: bool = True) -> List[SafePoint]:
+                     free_at_last_use: bool = True,
+                     source: str = "modeled",
+                     telemetry: Optional[TelemetryHub] = None,
+                     min_iterations: int = 2) -> List[SafePoint]:
     """Safe points of one (job, plan) pair, in op order.
 
     A boundary after op k qualifies when (1) no swap/recompute event of the
@@ -444,8 +526,19 @@ def find_safe_points(seq: AccessSequence,
     iteration boundary, which is the non-preemptive case.  Cross-iteration
     events are wrapped modulo the iteration period, mirroring the planner's
     PeriodicChannel bookings.
+
+    ``source="measured"`` detects the same two conditions from the
+    TelemetryHub's measured records instead of the modeled ledger; below
+    ``min_iterations`` of instrumented iterations (or with no hub at all)
+    it falls back to the modeled path — the paper's §IV-C cold-start
+    blending applied to safe-point detection.
     """
     from .peak_analysis import build_events
+
+    if source == "measured" and telemetry is not None:
+        measured = _measured_safe_points(seq, telemetry, min_iterations)
+        if measured is not None:
+            return measured
 
     eps = 1e-12
     n = len(seq.operators)
@@ -520,7 +613,8 @@ class MemoryEngine:
                  capacity_bytes: Optional[int] = None,
                  ledger: Optional[DeviceLedger] = None,
                  channel: Optional[DmaChannel] = None,
-                 trace: bool = False):
+                 trace: bool = False,
+                 telemetry: Optional[TelemetryHub] = None):
         self.profile = profile or MachineProfile()
         self.trace = EngineTrace() if trace else None
         self.ledger = ledger or DeviceLedger(capacity_bytes, trace=self.trace)
@@ -528,6 +622,17 @@ class MemoryEngine:
             self.ledger.trace = self.trace
         self.channel = channel or DmaChannel()
         self.jobs: Dict[str, JobContext] = {}
+        self.telemetry: Optional[TelemetryHub] = None
+        if telemetry is not None:
+            self.attach_telemetry(telemetry)
+
+    def attach_telemetry(self, hub: TelemetryHub) -> None:
+        """Bind the measured-telemetry hub: residency mutations on the
+        ledger mirror into it from here on (both runtimes emit through
+        this single point, so record ordering stays parity-testable)."""
+        self.telemetry = hub
+        if self.ledger.telemetry is None:
+            self.ledger.telemetry = hub
 
     def add_job(self, seq: AccessSequence,
                 plan: Optional[SchedulingPlan] = None,

@@ -43,6 +43,7 @@ from .engine import (INPUT_AWAIT_PREFETCH, INPUT_PASSIVE_SWAP_IN,
                      INPUT_RESIDENT, DeviceLedger, DmaChannel, MemoryEngine,
                      ResidencyView)
 from .plan import EventType, SchedulingPlan
+from .telemetry import TelemetryHub
 
 # Back-compat names: the seed defined these locally; they now live in (and
 # are shared through) the engine.
@@ -63,6 +64,12 @@ class ExecutionStats:
     stall_time_s: float = 0.0
     # mid-iteration plan hot-swaps applied at a safe point
     hot_swaps: int = 0
+    # queued (unstarted) prefetches cancelled when a hot-swap revised
+    # swap-INs already booked on the channel
+    canceled_swap_ins: int = 0
+    # measured per-job residency timeline of THIS iteration, (t, bytes)
+    # in hub time — filled from the TelemetryHub when one is attached
+    residency_timeline: Optional[List[tuple]] = None
 
 
 class AsyncSwapExecutor:
@@ -74,6 +81,13 @@ class AsyncSwapExecutor:
         self.q: "queue.Queue" = queue.Queue()
         self.inflight: Dict[str, threading.Event] = {}
         self._stop = False
+        # state_lock guards running/poisoned: `running` is the key whose
+        # transfer is physically on the wire; `poisoned` keys were
+        # cancelled after the worker popped them but before it started —
+        # the worker discards them instead of transferring
+        self.state_lock = threading.Lock()
+        self.running: Optional[str] = None
+        self.poisoned: set = set()
         self.thread = threading.Thread(target=self._run, daemon=True)
         self.thread.start()
 
@@ -89,11 +103,56 @@ class AsyncSwapExecutor:
                 key, fn, done = self.q.get(timeout=0.05)
             except queue.Empty:
                 continue
+            with self.state_lock:
+                if key in self.poisoned:
+                    self.poisoned.discard(key)
+                    done.set()
+                    self.inflight.pop(key, None)
+                    continue
+                self.running = key
             try:
                 self.channel.transfer(fn)
             finally:
+                with self.state_lock:
+                    self.running = None
                 done.set()
                 self.inflight.pop(key, None)
+
+    def cancel_unstarted(self, prefix: str = "") -> Optional[List[str]]:
+        """Cancel every transfer whose key starts with ``prefix`` that
+        has NOT physically started — queued items are drained, items the
+        worker already popped (but not started) are poisoned so it
+        discards them.  Returns None WITHOUT cancelling anything when a
+        matching transfer is on the wire (the caller must defer), else
+        the cancelled keys.  Waiters are released — ``_ensure_input``
+        re-derives the action, so a consumer of a cancelled prefetch
+        falls back to a passive swap-in."""
+        with self.state_lock:
+            if self.running is not None and self.running.startswith(prefix):
+                return None
+            cancelled: List[str] = []
+            requeue = []
+            while True:
+                try:
+                    item = self.q.get_nowait()
+                except queue.Empty:
+                    break
+                key, _fn, done = item
+                if key.startswith(prefix):
+                    cancelled.append(key)
+                    self.inflight.pop(key, None)
+                    done.set()
+                else:
+                    requeue.append(item)
+            for item in requeue:
+                self.q.put(item)
+            # popped-but-unstarted items are blocked on state_lock right
+            # now: poison them, the worker will discard and release them
+            for key in list(self.inflight):
+                if key.startswith(prefix) and key != self.running:
+                    self.poisoned.add(key)
+                    cancelled.append(key)
+            return cancelled
 
     def drain(self):
         while not self.q.empty():
@@ -118,13 +177,17 @@ class JaxprExecutor:
                  async_swap: bool = False,
                  measure_latency: bool = False,
                  host_resident_inputs: Optional[Set[str]] = None,
-                 engine: Optional[MemoryEngine] = None):
+                 engine: Optional[MemoryEngine] = None,
+                 telemetry: Optional[TelemetryHub] = None):
         self.closed = closed_jaxpr
         self.jaxpr = closed_jaxpr.jaxpr
         self.seq = seq
         self.plan = plan
         self.engine = engine or MemoryEngine(ledger=accountant,
                                              channel=channel)
+        if telemetry is not None:
+            self.engine.attach_telemetry(telemetry)
+        self.telemetry = self.engine.telemetry
         self.ctx = self.engine.add_job(seq, plan)
         self.accountant = self.engine.ledger
         self.channel = self.engine.channel
@@ -182,7 +245,14 @@ class JaxprExecutor:
     def _maybe_hot_swap(self, idx: int) -> None:
         """Splice the pending plan in if op boundary `idx` is an eligible
         safe point.  Runs on the executor thread right after the op's plan
-        events, mirroring the simulator's splice instant exactly."""
+        events, mirroring the simulator's splice instant exactly.
+
+        Swap-INs already booked on the channel do not block the splice:
+        queued prefetches the Swap Executor has not started yet are
+        CANCELLED (the new plan re-books what it still needs; a consumer
+        of a cancelled prefetch degrades to a passive swap-in) — only a
+        transfer physically in progress defers the splice to the next
+        safe point."""
         if self._pending_plan is None:
             return
         with self._plan_lock:
@@ -192,7 +262,19 @@ class JaxprExecutor:
             if idx not in safe_ops:
                 return
             if self.async_exec and self.async_exec.inflight:
-                return
+                cancelled = self.async_exec.cancel_unstarted("in:")
+                if cancelled is None:
+                    # a prefetch is physically on the wire: defer to the
+                    # next safe point.  cancel_unstarted cancels NOTHING
+                    # in that case, so the still-running old plan keeps
+                    # every prefetch it queued.
+                    return
+                with self.async_exec.state_lock:
+                    blocking = [k for k in self.async_exec.inflight
+                                if k not in self.async_exec.poisoned]
+                if blocking:
+                    return       # e.g. a swap-out raced in: next point
+                self.stats.canceled_swap_ins += len(cancelled)
             self.plan = plan
             self.ctx.set_plan(plan)
             self.stats.hot_swaps += 1
@@ -253,12 +335,19 @@ class JaxprExecutor:
         val = self.device[st]
 
         def do():
+            hub = self.telemetry
+            ts = hub.now() if hub is not None else 0.0
+            t0 = _time.perf_counter()
             if compressed:
                 from repro.kernels.offload_quant import quantize_blocked
                 self._host_put(st, quantize_blocked(jax.numpy.asarray(val)),
                                compressed=True)
             else:
                 self._host_put(st, np.asarray(val), compressed=False)
+            if hub is not None:
+                hub.record_transfer(
+                    self.ctx.job_id, st, "out", self.ctx.size_of(st),
+                    _time.perf_counter() - t0, compressed=compressed, t=ts)
 
         if self.async_exec:
             done = self.async_exec.submit("out:" + st, do)
@@ -279,9 +368,18 @@ class JaxprExecutor:
             return True
         if st not in self.host:
             return False
+        compressed = st in self.ctx.host_compressed
 
         def do():
+            hub = self.telemetry
+            ts = hub.now() if hub is not None else 0.0
+            t0 = _time.perf_counter()
             self._put_device(st, self._host_fetch(st))
+            if hub is not None:
+                hub.record_transfer(
+                    self.ctx.job_id, st, "in", self.ctx.size_of(st),
+                    _time.perf_counter() - t0, compressed=compressed,
+                    passive=passive, t=ts)
 
         self.engine.record("passive_in" if passive else "swap_in",
                            self.ctx, st)
@@ -292,7 +390,11 @@ class JaxprExecutor:
             self.channel.transfer(do)
             if passive:
                 self.stats.passive_swap_ins += 1
-                self.stats.stall_time_s += _time.perf_counter() - t0
+                stall = _time.perf_counter() - t0
+                self.stats.stall_time_s += stall
+                if self.telemetry is not None:
+                    self.telemetry.record_stall(
+                        self.ctx.job_id, self._cur_idx, stall, "passive_in")
         self.stats.swap_in_count += 1
         return True
 
@@ -309,7 +411,11 @@ class JaxprExecutor:
         if action is INPUT_AWAIT_PREFETCH:
             ts = _time.perf_counter()
             self.async_exec.inflight["in:" + st].wait()
-            self.stats.stall_time_s += _time.perf_counter() - ts
+            stall = _time.perf_counter() - ts
+            self.stats.stall_time_s += stall
+            if self.telemetry is not None:
+                self.telemetry.record_stall(
+                    self.ctx.job_id, self._cur_idx, stall, "await_prefetch")
             if st in self.device:
                 return
             action = self.ctx.input_action(self.resident, name)
@@ -339,6 +445,10 @@ class JaxprExecutor:
     # ------------------------------------------------------------------
     def run(self, *args: Any) -> Any:
         t_start = _time.perf_counter()
+        res_start = 0
+        if self.telemetry is not None:
+            res_start = len(
+                self.telemetry.residency.get(self.ctx.job_id, ()))
         # absorb host values preloaded by the controller between iterations
         self.ctx.host |= set(self.host)
         flat, _ = jax.tree.flatten(args)
@@ -356,6 +466,7 @@ class JaxprExecutor:
         for v, val in zip(self.jaxpr.constvars, self.closed.consts):
             self._put_device(self._name_of(v), val)
 
+        measure = self.measure_latency or self.telemetry is not None
         for idx, eqn in enumerate(self.jaxpr.eqns):
             self._cur_idx = idx
             t0 = _time.perf_counter()
@@ -367,10 +478,24 @@ class JaxprExecutor:
                 nm = self._name_of(v)
                 self._ensure_input(nm)
                 invals.append(self._get(nm))
+            t1 = _time.perf_counter()
             outs = _eval_eqn(eqn, invals)
-            if self.measure_latency:
+            if measure:
                 jax.block_until_ready(outs)
-                self.stats.op_latencies.append(_time.perf_counter() - t0)
+                t2 = _time.perf_counter()
+                if self.measure_latency:
+                    self.stats.op_latencies.append(t2 - t0)
+                if self.telemetry is not None:
+                    # compute-only latency: input-ensure time is reported
+                    # separately as stall records, so calibration samples
+                    # are not polluted by memory waits
+                    op = (self.seq.operators[idx]
+                          if idx < len(self.seq.operators) else None)
+                    self.telemetry.record_op(
+                        self.ctx.job_id, idx, t2 - t1,
+                        prim=eqn.primitive.name,
+                        flops=op.flops if op else 0.0,
+                        bytes_accessed=op.bytes_accessed if op else 0.0)
             for v, o in zip(eqn.outvars, outs):
                 # dropped results still occupy their buffer until the op's
                 # releases run — the allocator model both runtimes share
@@ -409,9 +534,11 @@ class JaxprExecutor:
             self.async_exec.drain()
         # fetching outputs back to Python is harness work, not part of the
         # modeled iteration (steady state leaves swapped outputs on host) —
-        # pause the trace for it, resume afterwards for later iterations
+        # pause the trace (and telemetry) for it, resume afterwards
         if self.engine.trace is not None:
             self.engine.trace.paused = True
+        if self.telemetry is not None:
+            self.telemetry.paused = True
         outs = []
         for v in self.jaxpr.outvars:
             if isinstance(v, jcore.Literal):
@@ -423,6 +550,13 @@ class JaxprExecutor:
             outs.append(self._get(nm))
         if self.engine.trace is not None:
             self.engine.trace.paused = False
+        if self.telemetry is not None:
+            self.telemetry.paused = False
+            self.stats.residency_timeline = [
+                (r.t, r.resident_bytes)
+                for r in self.telemetry.residency.get(
+                    self.ctx.job_id, [])[res_start:]]
+            self.telemetry.end_iteration(self.ctx.job_id)
         self.stats.wall_time_s = _time.perf_counter() - t_start
         self.stats.peak_bytes = self.accountant.peak
         return outs

@@ -50,6 +50,7 @@ from .graph_capture import capture_train_step
 from .peak_analysis import analyze
 from .plan import MachineProfile, SchedulingPlan
 from .scheduler import MemoryScheduler, SchedulerConfig
+from .telemetry import TelemetryHub
 
 
 class JobFailedError(RuntimeError):
@@ -120,11 +121,32 @@ def _peak_weights(arb: "BudgetArbiter", live: Sequence[str]
     return {j: float(max(arb.demands.get(j, 0), 1)) for j in live}
 
 
+# how strongly a job's measured stall share bids for extra bytes under
+# the eor-learned policy: weight = 1 + GAIN * stall_share (stall_share in
+# [0, 1], so weights stay within [1, 1+GAIN] — bounded re-splits)
+EOR_LEARNED_GAIN = 3.0
+
+
+def _eor_learned_weights(arb: "BudgetArbiter", live: Sequence[str]
+                         ) -> Dict[str, float]:
+    """Learned from the measured-telemetry plane: a job losing more of
+    its measured time to memory stalls (passive swap-ins, late
+    prefetches) is the job whose slice is too small — it bids for more
+    bytes in proportion to its measured stall share.  Jobs with no
+    samples yet (cold start) bid the neutral weight, so the policy
+    degrades to equal-share until telemetry exists."""
+    hub = arb.telemetry
+    if hub is None:
+        return {j: 1.0 for j in live}
+    return {j: 1.0 + EOR_LEARNED_GAIN * hub.stall_share(j) for j in live}
+
+
 ARBITER_POLICIES: Dict[str, Callable[["BudgetArbiter", Sequence[str]],
                                      Dict[str, float]]] = {
     "equal": _equal_weights,
     "priority": _priority_weights,
     "peak": _peak_weights,
+    "eor-learned": _eor_learned_weights,
 }
 
 
@@ -150,7 +172,8 @@ class BudgetArbiter:
     """
 
     def __init__(self, capacity_bytes: int, policy: str = "equal",
-                 mode: str = "boundary"):
+                 mode: str = "boundary",
+                 telemetry: Optional[TelemetryHub] = None):
         if policy not in ARBITER_POLICIES:
             raise KeyError(f"unknown arbiter policy {policy!r}; "
                            f"known: {sorted(ARBITER_POLICIES)}")
@@ -160,6 +183,9 @@ class BudgetArbiter:
         self.capacity = int(capacity_bytes)
         self.policy = policy
         self.mode = mode
+        # measured-telemetry plane: the eor-learned policy reads each
+        # job's measured stall share from here (None -> equal weights)
+        self.telemetry = telemetry
         self.priorities: Dict[str, float] = {}
         self.demands: Dict[str, int] = {}       # peak demand, bytes
         self.history: List[Dict[str, int]] = []
@@ -243,8 +269,19 @@ class GlobalController:
                  pipeline_name: Optional[str] = None,
                  arbiter: Optional[BudgetArbiter] = None,
                  arbiter_policy: Optional[str] = None,
-                 arbiter_mode: Optional[str] = None):
+                 arbiter_mode: Optional[str] = None,
+                 telemetry: Optional[TelemetryHub] = None,
+                 safe_point_source: str = "measured"):
         self.profile = profile or MachineProfile()
+        # ONE measured-telemetry hub per device: every executor produces
+        # into it; safe-point detection, drift replans, swap-window sizing
+        # and the eor-learned arbiter policy consume from it
+        self.telemetry = telemetry or TelemetryHub(clock="real")
+        # how `_preempt_victims` finds splice points: "measured" detects
+        # them from the hub's residency records (falling back to modeled
+        # below min_iterations of samples — §IV-C blending), "modeled"
+        # always uses the plan's DeviceLedger model
+        self.safe_point_source = safe_point_source
         pipeline = None
         if pipeline_name is not None:
             from .passes import build_pipeline
@@ -254,10 +291,13 @@ class GlobalController:
                                       config=cfg)
         self.scheduler = MemoryScheduler(self.profile, scheduler_config,
                                          pipeline=pipeline)
+        if self.scheduler.pipeline.telemetry is None:
+            self.scheduler.pipeline.telemetry = self.telemetry
         self.cost_model = cost_model or CostModel()
         # one engine ledger + DMA channel shared by every job on the device
         self.engine = MemoryEngine(self.profile,
-                                   capacity_bytes=device_capacity)
+                                   capacity_bytes=device_capacity,
+                                   telemetry=self.telemetry)
         self.accountant: DeviceLedger = self.engine.ledger
         self.channel: DmaChannel = self.engine.channel
         # the device-wide budget the arbiter splits: explicit capacity,
@@ -268,8 +308,11 @@ class GlobalController:
                    or self.profile.device_memory_bytes)
         mode = arbiter_mode or self.scheduler.config.arbiter_mode
         self.arbiter = arbiter or (
-            BudgetArbiter(cap, policy=arbiter_policy, mode=mode)
+            BudgetArbiter(cap, policy=arbiter_policy, mode=mode,
+                          telemetry=self.telemetry)
             if arbiter_policy is not None else None)
+        if self.arbiter is not None and self.arbiter.telemetry is None:
+            self.arbiter.telemetry = self.telemetry
         self.async_swap = async_swap
         self.jobs: Dict[str, JobHandle] = {}
         self.ewma: Dict[str, EWMATracker] = {}
@@ -382,7 +425,9 @@ class GlobalController:
             if ex is None:
                 continue            # between iterations: boundary covers it
             running = ex.plan
-            safe = find_safe_points(h.seq, running)
+            safe = find_safe_points(h.seq, running,
+                                    source=self.safe_point_source,
+                                    telemetry=self.telemetry)
             cur = ex.current_op_index
             future = [sp.op_idx for sp in safe if sp.op_idx > cur]
             if not future:
@@ -422,7 +467,8 @@ class GlobalController:
                     ex = JaxprExecutor(
                         handle.closed_jaxpr, handle.seq, plan,
                         accountant=self.accountant, channel=self.channel,
-                        async_swap=self.async_swap, measure_latency=True)
+                        async_swap=self.async_swap, measure_latency=True,
+                        telemetry=self.telemetry)
                     ex.host.update(old_host)
                     ex.ctx.host_compressed |= old_compressed
                     version_used = version
@@ -436,7 +482,8 @@ class GlobalController:
                     ex = JaxprExecutor(
                         handle.closed_jaxpr, handle.seq, plan,
                         accountant=self.accountant, channel=self.channel,
-                        async_swap=self.async_swap, measure_latency=True)
+                        async_swap=self.async_swap, measure_latency=True,
+                        telemetry=self.telemetry)
                     ex.host.update(host)
                     ex.ctx.host_compressed |= compressed
                     handle.executor = ex
@@ -454,13 +501,15 @@ class GlobalController:
                 o = _jax.tree.unflatten(_jax.tree.structure(args[1]),
                                         outs[n_p:n_p + n_o])
                 args = (p, o, args[2])
-                # report measured latencies (paper step 4)
-                if ex.stats.op_latencies:
-                    drift = self.report_latencies(handle.job_id,
-                                                  ex.stats.op_latencies)
-                    if drift:
-                        with self._lock:
-                            self._replan()
+                # measured-telemetry feedback (paper step 4): the hub
+                # already holds this iteration's op samples; fold them
+                # into the job's sequence and replan on HUB-reported
+                # drift (the scheduler-private EWMA path stays available
+                # as report_latencies for embedders without a hub)
+                drift = self.report_telemetry(handle.job_id)
+                if drift:
+                    with self._lock:
+                        self._replan()
                 ex.close()
         except BaseException as e:  # noqa: BLE001 - surfaced via wait()
             handle.error = e
@@ -501,6 +550,15 @@ class GlobalController:
             if job_id not in self.scheduler.jobs:
                 return False
             return self.scheduler.update_latencies(job_id, measured)
+
+    def report_telemetry(self, job_id: str) -> bool:
+        """Fold the hub's measured latencies into the job's sequence and
+        return whether the hub reports drift past the replan threshold."""
+        with self._lock:
+            if job_id not in self.scheduler.jobs:
+                return False
+            return self.scheduler.update_latencies_from_hub(
+                job_id, self.telemetry)
 
     def failures(self) -> Dict[str, BaseException]:
         """Failed jobs so far (job_id -> exception)."""

@@ -227,7 +227,8 @@ class SwapPass(PlanningPass):
                 j: SwapPlanner(state.jobs[j], state.plans[j], state.profile,
                                (cfg.per_job_swap_ratio or {}).get(
                                    j, cfg.max_swap_ratio),
-                               cross_iteration=state.cross_iteration)
+                               cross_iteration=state.cross_iteration,
+                               telemetry=state.shared.get("telemetry"))
                 for j in state.jobs}
 
     def step(self, report: PeakReport) -> bool:
@@ -305,7 +306,8 @@ class CompressedOffloadPass(PlanningPass):
                                j, cfg.max_swap_ratio),
                            cross_iteration=state.cross_iteration,
                            compressed=True,
-                           max_tensor_bytes=cfg.compressed_max_bytes)
+                           max_tensor_bytes=cfg.compressed_max_bytes,
+                           telemetry=state.shared.get("telemetry"))
             for j in state.jobs}
 
     def step(self, report: PeakReport) -> bool:
@@ -351,7 +353,8 @@ def _build_swap_planners(state: PipelineState) -> Dict[str, "SwapPlanner"]:
         j: SwapPlanner(state.jobs[j], state.plans[j], state.profile,
                        (cfg.per_job_swap_ratio or {}).get(
                            j, cfg.max_swap_ratio),
-                       cross_iteration=state.cross_iteration)
+                       cross_iteration=state.cross_iteration,
+                       telemetry=state.shared.get("telemetry"))
         for j in state.jobs}
 
 
@@ -450,6 +453,12 @@ class PreemptiveReplanPass(PlanningPass):
     this pass cannot undo, but they persist into the window, so the
     windowed per-job peak is exactly "will job j fit its new slice from
     the splice on".
+
+    When the windowed swap budget is infeasible — no eager swap-out pair
+    fits the remainder of the DMA channel — the pass may emit RECOMPUTE
+    actions instead (release now, regenerate at the next use), gated by
+    the same per-step windowed-peak verification and rolled back when
+    they do not strictly improve the window.
     """
 
     name = "preemptive-replan"
@@ -462,6 +471,7 @@ class PreemptiveReplanPass(PlanningPass):
             state.shared.get("replan_from_op", {}))
         self.from_time: Dict[str, float] = {}
         self.planners: Dict[str, SwapPlanner] = {}
+        self.rec_planners: Dict[str, RecomputePlanner] = {}
         self._window_cache: Dict[str, Tuple[Tuple[int, int], PeakReport]] = {}
         for j, op in self.from_op.items():
             seq = state.jobs.get(j)
@@ -480,7 +490,8 @@ class PreemptiveReplanPass(PlanningPass):
                 seq, state.plans[j], state.profile,
                 (cfg.per_job_swap_ratio or {}).get(j, cfg.max_swap_ratio),
                 cross_iteration=state.cross_iteration,
-                not_before=t0)
+                not_before=t0,
+                telemetry=state.shared.get("telemetry"))
             # tensors the running plan already swaps are eligible AGAIN:
             # under the shrunken slice an extra eviction + re-fetch pair in
             # the remainder window is exactly the lever left (runtime skip
@@ -543,6 +554,38 @@ class PreemptiveReplanPass(PlanningPass):
                                 pass
                     del plan.events[n0:]
                     self._window_cache.pop(job_id, None)
+            # the windowed swap budget is infeasible for this job (no
+            # eager swap-out pair fits the remaining channel time):
+            # recomputation is the lever left — release now, regenerate
+            # at the next use, same per-step peak verification
+            if self._try_recompute(job_id, rep):
+                return True
+        return False
+
+    def _try_recompute(self, job_id: str,
+                       rep: PeakReport) -> bool:
+        """One recompute action strictly inside the remainder window,
+        verified against the windowed peak and rolled back when it does
+        not strictly improve (rejected tensors stay marked)."""
+        plan = self.state.plans[job_id]
+        rp = self.rec_planners.get(job_id)
+        if rp is None:
+            rp = self.rec_planners[job_id] = RecomputePlanner(
+                self.state.jobs[job_id], plan)
+        from_op = self.from_op.get(job_id, -1)
+        for cand in rp.candidates(rep):
+            # both events must TRIGGER strictly after the safe-point op —
+            # anything at or before it would never fire post-splice
+            if (cand.release_after_op <= from_op
+                    or max(cand.target_op - 1, 0) <= from_op):
+                continue
+            n0 = len(plan.events)
+            rp.apply(cand)
+            self._window_cache.pop(job_id, None)
+            if self._window_report(job_id).peak_bytes < rep.peak_bytes:
+                return True
+            del plan.events[n0:]
+            self._window_cache.pop(job_id, None)
         return False
 
 
@@ -791,7 +834,8 @@ class Pipeline:
                  profile: Optional[MachineProfile] = None,
                  config: Optional[SchedulerConfig] = None,
                  free_at_last_use: bool = True,
-                 passive_iterations: int = 0):
+                 passive_iterations: int = 0,
+                 telemetry=None):
         self.pass_specs = list(passes)
         self.name = name
         self.cross_iteration = cross_iteration
@@ -801,6 +845,11 @@ class Pipeline:
         # vDNN/vanilla platforms have no activity-analysis releases
         self.free_at_last_use = free_at_last_use
         self.passive_iterations = passive_iterations
+        # measured-telemetry plane: a TelemetryHub here is handed to every
+        # pass via state.shared["telemetry"], so swap windows are sized
+        # from measured DMA bandwidth once samples exist (None = modeled
+        # constants, byte-reproducible plans)
+        self.telemetry = telemetry
 
     def _instantiate(self) -> List[PlanningPass]:
         return [p() if isinstance(p, type) else p for p in self.pass_specs]
@@ -824,6 +873,8 @@ class Pipeline:
                                   j: b for j, b in
                                   (cfg.per_job_budget_bytes or {}).items()
                                   if j in jobs})
+        if self.telemetry is not None:
+            state.shared["telemetry"] = self.telemetry
         passes = self._instantiate()
         for p in passes:
             p.setup(state)
@@ -930,6 +981,8 @@ class Pipeline:
                               config=cfg, offsets={}, budget=budget,
                               cross_iteration=self.cross_iteration,
                               job_budgets=job_budgets)
+        if self.telemetry is not None:
+            state.shared["telemetry"] = self.telemetry
         state.shared["replan_from_op"] = {j: op for j, op in steps.items()
                                           if j in jobs}
         initial = analyze(seqs, plans={j: prior_plans.get(j) for j in jobs

@@ -89,6 +89,30 @@ class MemoryScheduler:
             return True
         return abs(s_new - s_old) / s_old > self.config.update_threshold
 
+    def update_latencies_from_hub(self, job_id: str, hub) -> bool:
+        """Hub-fed §IV-E correction (the measured-telemetry plane): fold
+        the TelemetryHub's EWMA-corrected measured latencies into the
+        job's sequence, and judge the replan decision by the HUB's drift
+        ratio against the latency sum the current plan was built from —
+        drift detection no longer lives in scheduler-private EWMA deltas.
+        Ops the hub has no sample for yet keep their modeled latency
+        (cold-start blending)."""
+        if job_id not in self.jobs:
+            return False
+        seq = self.jobs[job_id]
+        measured = hub.op_latencies(job_id)
+        if not measured:
+            return False
+        a = self.config.ewma_alpha
+        new = [a * measured[i] + (1 - a) * op.latency if i in measured
+               else op.latency
+               for i, op in enumerate(seq.operators)]
+        seq.set_latencies(new)
+        s_old = self._plan_latency_sum.get(job_id, 0.0)
+        if s_old <= 0:
+            return True
+        return hub.drift_ratio(job_id, s_old) > self.config.update_threshold
+
     # ------------------------------------------------------------------
     def schedule(self, job_ids: Optional[Sequence[str]] = None,
                  budgets: Optional[Dict[str, int]] = None) -> ScheduleResult:

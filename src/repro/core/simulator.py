@@ -37,6 +37,7 @@ from .engine import (INPUT_AWAIT_PREFETCH, INPUT_PASSIVE_SWAP_IN,
                      INPUT_RECOMPUTE, INPUT_RESIDENT, JobContext, MemoryEngine)
 from .peak_analysis import PERSISTENT_KINDS
 from .plan import EventType, MachineProfile, SchedulingPlan
+from .telemetry import TelemetryHub
 
 
 @dataclasses.dataclass
@@ -78,6 +79,9 @@ class SimResult:
     # (applied_time, applied_op) per job for every plan update that landed
     plan_swaps: Dict[str, List[Tuple[float, int]]] = \
         dataclasses.field(default_factory=dict)
+    # booked-but-unstarted prefetches cancelled when a safe-point splice
+    # revised swap-INs already on the DmaChannel
+    canceled_swap_ins: int = 0
 
     def msr(self, vanilla: "SimResult") -> float:
         v = vanilla.peak_bytes
@@ -108,6 +112,13 @@ class _JobClock:
         self.finish_time = 0.0
         # storage -> completion time of an in-flight planned swap-in
         self.swap_in_at: Dict[str, float] = {}
+        # storage -> channel-scheduled START of that swap-in (a booked
+        # transfer that has not started yet may be cancelled at a splice)
+        self.swap_in_start: Dict[str, float] = {}
+        # storage -> identity token of its pending swap_in_done event;
+        # cancelled tokens make the event a no-op when it pops
+        self.swap_in_token: Dict[str, int] = {}
+        self.canceled_tokens: set = set()
         # async swap-outs still in flight (a safe-point splice must wait)
         self.inflight_out = 0
         self.updates = sorted(updates or [], key=lambda u: u.at_time)
@@ -121,7 +132,8 @@ def simulate(seqs: Sequence[AccessSequence],
              free_at_last_use: bool = True,
              transfer_mode: str = "async",
              engine: Optional[MemoryEngine] = None,
-             plan_updates: Optional[Dict[str, List[PlanUpdate]]] = None
+             plan_updates: Optional[Dict[str, List[PlanUpdate]]] = None,
+             telemetry: Optional[TelemetryHub] = None
              ) -> SimResult:
     """Run `iterations` training iterations of every job concurrently.
     `iterations` may be a per-job dict (dynamic-workload scenarios: short
@@ -131,12 +143,21 @@ def simulate(seqs: Sequence[AccessSequence],
     boundary-mode updates land right before the next iteration, safe-point
     updates hot-swap the job's plan at the first eligible safe point.
 
+    `telemetry` attaches a TelemetryHub: the simulator then emits the SAME
+    record shapes as the real executor — op latencies, transfer durations,
+    stalls, residency mutations — stamped in virtual time, so both
+    runtimes stay parity-testable and every measured-telemetry consumer
+    can be exercised against the simulator.
+
     `free_at_last_use=False` reproduces the vanilla platform (nothing is
     released before iteration end — paper §V-A normalizer)."""
     plans = plans or {}
     offsets = offsets or {}
     plan_updates = plan_updates or {}
     eng = engine or MemoryEngine(profile)
+    if telemetry is not None:
+        eng.attach_telemetry(telemetry)
+    hub = eng.telemetry
     profile = eng.profile
 
     jobs: Dict[str, _JobClock] = {}
@@ -151,6 +172,7 @@ def simulate(seqs: Sequence[AccessSequence],
 
     stall = 0.0
     passive = 0
+    canceled_swap_ins = 0
 
     # initial residency (paper Alg 2 line 1)
     for job in jobs.values():
@@ -179,9 +201,19 @@ def simulate(seqs: Sequence[AccessSequence],
         seq = ctx.seq
 
         if kind == "swap_in_done":
-            st = payload  # type: ignore[assignment]
+            st, token, s0, dur, compressed, nbytes = payload  # type: ignore[misc]
+            if token in job.canceled_tokens:
+                # booking was revised away at a safe-point splice before
+                # the transfer started: the completion is a no-op
+                job.canceled_tokens.discard(token)
+                continue
+            if hub is not None:
+                hub.record_transfer(job_id, st, "in", nbytes, dur,
+                                    compressed=compressed, t=s0)
             eng.complete_swap_in(ctx, st, t)
             job.swap_in_at.pop(st, None)
+            job.swap_in_start.pop(st, None)
+            job.swap_in_token.pop(st, None)
             continue
         if kind == "swap_out_done":
             st, compressed = payload  # type: ignore[misc]
@@ -207,16 +239,29 @@ def simulate(seqs: Sequence[AccessSequence],
             if action is INPUT_AWAIT_PREFETCH:
                 # prefetch in flight but late: wait for it
                 wait_until = job.swap_in_at.pop(st)
-                stall += max(0.0, wait_until - start)
+                job.swap_in_start.pop(st, None)
+                wait = max(0.0, wait_until - start)
+                stall += wait
+                if hub is not None and wait > 0:
+                    hub.record_stall(job_id, op_idx, wait,
+                                     "await_prefetch", t=start)
                 start = max(start, wait_until)
                 eng.complete_swap_in(ctx, st, start, passive=True)
                 passive += 1
             elif action is INPUT_PASSIVE_SWAP_IN:
                 # passive swap-in: block on the channel (Capuchin-style
                 # overhead — what TENSILE's planned prefetch avoids)
+                compressed = st in ctx.host_compressed
                 dur = profile.transfer_time(
-                    ctx.size_of(tid), compressed=st in ctx.host_compressed)
+                    ctx.size_of(tid), compressed=compressed)
                 s0, s1 = eng.channel.acquire(start, dur)
+                if hub is not None:
+                    hub.record_transfer(job_id, st, "in",
+                                        ctx.size_of(tid), dur,
+                                        compressed=compressed,
+                                        passive=True, t=s0)
+                    hub.record_stall(job_id, op_idx, s1 - start,
+                                     "passive_in", t=start)
                 stall += s1 - start
                 start = s1
                 eng.complete_swap_in(ctx, st, start, passive=True)
@@ -227,6 +272,10 @@ def simulate(seqs: Sequence[AccessSequence],
 
         # ---- run the op -------------------------------------------------
         end = start + op.latency
+        if hub is not None:
+            hub.record_op(job_id, op_idx, op.latency, prim=op.name,
+                          flops=op.flops, bytes_accessed=op.bytes_accessed,
+                          t=end)
 
         # ---- allocate outputs (TGA; updated params alias old storage, so
         # the storage-keyed alloc is a no-op while the old copy is resident)
@@ -251,6 +300,10 @@ def simulate(seqs: Sequence[AccessSequence],
             if ev.event_type is EventType.SWAP_OUT:
                 dur = eng.event_duration(ev)
                 s0, s1 = eng.channel.acquire(end + max(ev.delta, 0.0), dur)
+                if hub is not None:
+                    hub.record_transfer(job_id, st, "out", ev.size_bytes,
+                                        dur, compressed=ev.compressed,
+                                        t=s0)
                 if transfer_mode == "sync":
                     end = max(end, s1)
                     eng.complete_swap_out(ctx, st, end,
@@ -262,11 +315,25 @@ def simulate(seqs: Sequence[AccessSequence],
                 dur = eng.event_duration(ev)
                 s0, s1 = eng.channel.acquire(end + max(ev.delta, 0.0), dur)
                 if transfer_mode == "sync":
+                    if hub is not None:
+                        hub.record_transfer(job_id, st, "in",
+                                            ev.size_bytes, dur,
+                                            compressed=ev.compressed,
+                                            t=s0)
                     end = max(end, s1)
                     eng.complete_swap_in(ctx, st, end)
                 else:
+                    # the transfer is recorded into the hub only at
+                    # COMPLETION: a booking cancelled at a safe-point
+                    # splice must not leave a phantom busy interval in
+                    # the measured plane
                     job.swap_in_at[st] = s1
-                    push(s1, "swap_in_done", job_id, st)
+                    job.swap_in_start[st] = s0
+                    token = seqno  # unique: push() bumps it next
+                    job.swap_in_token[st] = token
+                    push(s1, "swap_in_done", job_id,
+                         (st, token, s0, dur, ev.compressed,
+                          ev.size_bytes))
             elif ev.event_type is EventType.RELEASE:
                 eng.record("release", ctx, st)
                 eng.ledger.free(ctx.job_id, st, end)
@@ -285,8 +352,14 @@ def simulate(seqs: Sequence[AccessSequence],
         # due update is scanned — a safe-point update must not be blocked
         # by a boundary update queued ahead of it — and the LAST eligible
         # one wins (it was built to supersede its predecessors); the
-        # superseded ones are dropped.
-        if job.updates and not job.swap_in_at and job.inflight_out == 0:
+        # superseded ones are dropped.  A swap-IN already booked on the
+        # channel no longer pins the plan: a booking whose transfer has
+        # not STARTED by the splice instant is cancelled (and the channel
+        # tail refunded best-effort) so the new plan can re-book it; only
+        # a transfer physically on the wire defers the splice.
+        started_in = any(s0 <= end + 1e-12
+                         for s0 in job.swap_in_start.values())
+        if job.updates and not started_in and job.inflight_out == 0:
             hit = None
             for i, upd in enumerate(job.updates):
                 if upd.at_time > end + 1e-12:
@@ -296,6 +369,18 @@ def simulate(seqs: Sequence[AccessSequence],
                     hit = i
             if hit is not None:
                 upd = job.updates[hit]
+                # cancel unstarted booked swap-ins, newest booking first
+                # (the FIFO channel can only refund its tail)
+                for st_c, s0 in sorted(job.swap_in_start.items(),
+                                       key=lambda kv: -kv[1]):
+                    s1 = job.swap_in_at.pop(st_c, None)
+                    token = job.swap_in_token.pop(st_c, None)
+                    if token is not None:
+                        job.canceled_tokens.add(token)
+                    if s1 is not None:
+                        eng.channel.try_refund(s0, s1)
+                    canceled_swap_ins += 1
+                job.swap_in_start.clear()
                 ctx.set_plan(upd.plan)
                 upd.applied_time, upd.applied_op = end, op_idx
                 # superseded SAFE-POINT updates are dropped; pending
@@ -316,6 +401,8 @@ def simulate(seqs: Sequence[AccessSequence],
                     if not _persistent_storage(seq, st):
                         eng.ledger.free(ctx.job_id, st, end)
             job.iter += 1
+            if hub is not None:
+                hub.end_iteration(job_id)
             # boundary-mode plan pickup: "right before computing the next
             # batch of data" (paper §III-D).  ALL due updates drain here:
             # a safe-point update whose window has passed is obsolete (the
@@ -353,7 +440,7 @@ def simulate(seqs: Sequence[AccessSequence],
         passive_swap_ins=passive, swap_conflicts=eng.channel.conflicts,
         timeline=list(eng.ledger.timeline),
         trace=eng.trace.keys() if eng.trace else None,
-        plan_swaps=plan_swaps)
+        plan_swaps=plan_swaps, canceled_swap_ins=canceled_swap_ins)
 
 
 def _persistent_storage(seq: AccessSequence, st: str) -> bool:

@@ -118,11 +118,19 @@ class SwapPlanner:
                  cross_iteration: bool = True,
                  compressed: bool = False,
                  max_tensor_bytes: Optional[int] = None,
-                 not_before: float = 0.0):
+                 not_before: float = 0.0,
+                 telemetry=None):
         self.seq = seq
         self.plan = plan
         self.profile = profile
         self.max_swap_ratio = max_swap_ratio
+        # measured-telemetry plane: when a hub with enough transfer
+        # samples is attached, swap windows are sized from the MEASURED
+        # DMA bandwidth instead of the profile constant — `not_before`
+        # feasibility and planned-vs-real overlap are then judged against
+        # what the channel actually sustains.  None (the default) keeps
+        # the modeled constants, so plans stay byte-reproducible.
+        self.telemetry = telemetry
         # incremental replans (safe-point hot-swap) must not schedule new
         # events before the splice instant — the past already executed
         self.not_before = not_before
@@ -157,6 +165,13 @@ class SwapPlanner:
 
     # ------------------------------------------------------------------
     def _swap_time(self, size_bytes: int) -> float:
+        if self.telemetry is not None:
+            bw = self.telemetry.measured_bandwidth(
+                compressed=self.compressed)
+            if bw:
+                # measured effective bandwidth for the size-dependent
+                # term; the per-transfer setup cost stays the profile's
+                return self.profile.host_link_latency + size_bytes / bw
         return self.profile.transfer_time(size_bytes,
                                           compressed=self.compressed)
 

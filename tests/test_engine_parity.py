@@ -84,6 +84,51 @@ def test_sim_and_executor_identical_peak_and_event_order(mlp_with_plan):
                                    rtol=1e-5, atol=1e-6)
 
 
+def test_sim_and_executor_identical_telemetry_records(mlp_with_plan):
+    """Measured-telemetry parity: both runtimes emit records of EXACTLY
+    the same schema (field-for-field), and their residency-event
+    ordering — (action, storage) through the shared DeviceLedger hook —
+    is identical for the same job + plan."""
+    import dataclasses as _dc
+
+    from repro.core import TelemetryHub, record_schemas
+
+    seq, closed, args, plan = mlp_with_plan
+    schemas = record_schemas()
+
+    hub_sim = TelemetryHub(clock="virtual")
+    simulate([seq], {seq.job_id: plan}, PROFILE, iterations=1,
+             transfer_mode="sync", engine=MemoryEngine(PROFILE),
+             telemetry=hub_sim)
+
+    hub_ex = TelemetryHub(clock="real")
+    ex = JaxprExecutor(closed, seq, plan,
+                       engine=MemoryEngine(PROFILE, telemetry=hub_ex))
+    ex.run(*args)
+    ex.close()
+
+    # identical record schemas, produced (not just declared) by BOTH
+    for hub in (hub_sim, hub_ex):
+        j = seq.job_id
+        assert hub.ops[j] and hub.transfers[j] and hub.residency[j]
+        for kind, recs in (("op", hub.ops[j]), ("transfer",
+                                                hub.transfers[j]),
+                           ("residency", hub.residency[j])):
+            names = tuple(f.name for f in _dc.fields(recs[0]))
+            assert names == schemas[kind]
+    # identical residency-event ordering (one executor iteration vs the
+    # simulator's first)
+    sim_keys = [(r.action, r.storage) for r in hub_sim.residency[seq.job_id]
+                if r.iteration == 0]
+    assert hub_ex.residency_keys(seq.job_id) == sim_keys
+    # both runtimes agree on how many iterations completed
+    assert hub_sim.iterations(seq.job_id) == 1
+    assert hub_ex.iterations(seq.job_id) == 1
+    # ...and the executor extends its stats with the measured timeline
+    assert ex.stats.residency_timeline
+    assert ex.stats.residency_timeline[-1][1] >= 0
+
+
 def test_sim_and_executor_identical_without_plan(mlp_with_plan):
     seq, closed, args, _ = mlp_with_plan
     sim_eng = MemoryEngine(PROFILE, trace=True)

@@ -107,6 +107,33 @@ def test_preempt_never_worse_than_boundary(preempt_table):
         assert pre["oom_events"] <= bnd["oom_events"], name
 
 
+def test_measured_preempt_matches_modeled_baseline(preempt_table):
+    """Measured-telemetry acceptance: tensile with MEASURED safe points
+    (find_safe_points(source="measured") over a probed hub) plus
+    eor-learned arbitration achieves time-to-within-budget <= the
+    modeled preempt baseline, with zero ledger OOMs."""
+    for name, rec in preempt_table.items():
+        m = rec["policies"]["preempt-measured"]
+        base = rec["policies"]["preempt"]
+        assert m["ttwb_burst_iters"] <= base["ttwb_burst_iters"] + 1e-9, name
+        assert m["oom_events"] == 0, name
+        assert m["within_budget"], name
+        # the splice actually landed at a measured safe point
+        assert any(op >= 0 for _t, op in m["plan_swaps"]["victim"]), name
+
+
+def test_calibration_metrics_reported_and_converged(table):
+    """Every scenario/policy row carries the modeled-vs-measured
+    calibration pair, and hub-fed recalibration always improves on the
+    deliberately miscalibrated cold-start constants."""
+    for name, rec in table.items():
+        for pol, m in rec["policies"].items():
+            assert "calib_err" in m and "calib_err_cold" in m, (name, pol)
+            assert m["calib_samples"] > 0, (name, pol)
+            assert m["calib_err"] <= m["calib_err_cold"] + 1e-9, (name, pol)
+            assert m["calib_err"] < 0.25, (name, pol)
+
+
 def test_preempt_scenarios_record_the_splice(preempt_table):
     """The hot-swap must actually land: the victim's plan_swaps records a
     safe-point splice (op >= 0) in preempt mode, and only the boundary

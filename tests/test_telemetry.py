@@ -1,0 +1,354 @@
+"""The measured-telemetry plane: hub-fed calibration convergence,
+measured-mode safe-point detection (subset-of-quiescent-instants
+property, cold-start fallback), measured swap-window sizing, the
+eor-learned arbiter policy, hub-reported drift, and the two PR-3
+follow-ups that ride on it — revising swap-INs already booked on the
+DmaChannel at a splice, and recompute actions in incremental remainder
+plans."""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_or_stub
+from repro.core import (ARBITER_POLICIES, BudgetArbiter, CostModel,
+                        DeviceCalibration, JaxprExecutor, MachineProfile,
+                        MemoryEngine, PlanUpdate, SchedulerConfig,
+                        SchedulingPlan, SwapPlanner, TelemetryHub, analyze,
+                        build_pipeline, find_safe_points, simulate)
+from repro.core.plan import EventType, ScheduleEvent
+from repro.core.scheduler import MemoryScheduler
+
+from helpers import capture_mlp, synthetic_chain
+
+given, settings, st = hypothesis_or_stub()
+
+PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
+EPS = 1e-12
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    return capture_mlp(sizes=(64, 128, 128, 8), batch=16, job_id="vic")
+
+
+# ------------------------------------------------------- calibration
+def test_calibration_error_decreases_monotonically(mlp):
+    """Hub-fed DeviceCalibration recalibration: starting from
+    deliberately wrong throughput constants, the analytic model's error
+    against the measured latencies of a captured job decreases
+    monotonically as iterations of samples are folded in."""
+    seq, _, _ = mlp
+    truth = DeviceCalibration()
+    cm = CostModel(DeviceCalibration(flops=truth.flops / 4.0,
+                                     mem_bw=truth.mem_bw / 4.0))
+    hub = TelemetryHub(clock="virtual")
+    errs = []
+    for _ in range(4):
+        simulate([seq], None, PROFILE, iterations=1, telemetry=hub)
+        errs.append(cm.recalibrate(hub).overall)
+    cold = CostModel(DeviceCalibration(flops=truth.flops / 4.0,
+                                       mem_bw=truth.mem_bw / 4.0))
+    err_cold = cold.calibration_report(hub).overall
+    assert errs[0] < err_cold                 # feedback helps immediately
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-9                  # and never regresses
+    assert errs[-1] < 0.05                    # converged on this job
+
+
+def test_calibration_per_primitive_error_exposed(mlp):
+    seq, _, _ = mlp
+    hub = TelemetryHub(clock="virtual")
+    simulate([seq], None, PROFILE, iterations=1, telemetry=hub)
+    cm = CostModel(DeviceCalibration())
+    rep = cm.calibration_report(hub)
+    assert rep.samples == len(hub.ops[seq.job_id])
+    assert "dot_general" in rep.per_primitive
+    assert all(e >= 0 for e in rep.per_primitive.values())
+
+
+def test_ewma_tracker_ingests_hub_samples(mlp):
+    seq, _, _ = mlp
+    from repro.core import EWMATracker
+    hub = TelemetryHub(clock="virtual")
+    simulate([seq], None, PROFILE, iterations=2, telemetry=hub)
+    tr = EWMATracker()
+    n = tr.ingest(hub, seq.job_id)
+    assert n == len(hub.ops[seq.job_id])
+    assert len(tr.values) == len(seq.operators)
+    assert tr.ingest(hub, seq.job_id) == 0    # cursor: nothing new
+
+
+# ------------------------------------------------- measured safe points
+def test_measured_safe_points_cold_start_falls_back_to_modeled(mlp):
+    seq, _, _ = mlp
+    hub = TelemetryHub()                       # no samples at all
+    modeled = find_safe_points(seq, None)
+    measured = find_safe_points(seq, None, source="measured",
+                                telemetry=hub)
+    assert [s.op_idx for s in measured] == [s.op_idx for s in modeled]
+    # one iteration is still below the blending threshold
+    simulate([seq], None, PROFILE, iterations=1, telemetry=hub)
+    measured = find_safe_points(seq, None, source="measured",
+                                telemetry=hub, min_iterations=2)
+    assert [s.op_idx for s in measured] == [s.op_idx for s in modeled]
+
+
+def test_measured_safe_points_subset_of_executor_quiescence(mlp):
+    """Measured-mode safe points are a subset of the quiescent instants
+    of the EXECUTOR's real event log: for every reported safe point, in
+    every iteration it was detected from, no recorded transfer interval
+    spans the op's measured completion instant, and the measured
+    residency is a local minimum."""
+    seq, closed, args = mlp
+    cfg = SchedulerConfig(per_job_budget_bytes={"vic": 1 << 60})
+    plan = build_pipeline("tensile", profile=PROFILE,
+                          config=cfg).plan([seq]).plans["vic"]
+    hub = TelemetryHub(clock="real")
+    eng = MemoryEngine(PROFILE, telemetry=hub)
+    for _ in range(2):
+        ex = JaxprExecutor(closed, seq, plan, engine=eng)
+        ex.run(*args)
+        ex.close()
+    assert hub.iterations("vic") == 2
+    sps = find_safe_points(seq, plan, source="measured", telemetry=hub)
+    n = len(seq.operators)
+    for it in range(2):
+        view = hub.iteration_view("vic", it)
+        resident = hub.measured_boundary_residency("vic", it, n)
+        assert view is not None and resident is not None
+        for sp in sps:
+            assert 0 <= sp.op_idx < n - 1
+            t_k = view.op_end[sp.op_idx]
+            # quiescent in the raw event log
+            assert not any(s < t_k - 1e-9 and t_k < e - 1e-9
+                           for s, e in view.transfers), \
+                f"transfer in flight across measured safe point {sp.op_idx}"
+            # local minimum of the measured residency profile
+            k = sp.op_idx
+            left = resident[k - 1] if k > 0 else resident[k]
+            assert resident[k] <= left and resident[k] <= resident[k + 1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_ops=st.integers(min_value=4, max_value=12),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_measured_safe_points_subset_property(n_ops, seed):
+    """Property (hypothesis): for ANY synthetic record stream — random
+    residency walk, random transfer intervals — every measured-mode safe
+    point is a quiescent local minimum of that stream, in every observed
+    iteration."""
+    seq = synthetic_chain(n_ops=n_ops, latency=1.0, seed=seed,
+                          job_id="chain")
+    rng = np.random.default_rng(seed)
+    total = len(seq.operators)
+    T = seq.iteration_time
+    res = rng.integers(0, 1000, total).tolist()
+    transfers = [(float(rng.uniform(0, T)), float(rng.uniform(0, T / 3)))
+                 for _ in range(int(rng.integers(0, 4)))]
+    hub = TelemetryHub(clock="virtual")
+    for it in range(2):
+        off = it * T
+        for k, op in enumerate(seq.operators):
+            hub.record_op("chain", k, op.latency, prim=op.name,
+                          t=off + seq.op_end[k])
+            hub.record_residency("chain", f"s{k}", "alloc", int(res[k]),
+                                 t=off + seq.op_end[k])
+        for s, d in transfers:
+            hub.record_transfer("chain", "x", "out", 1024, d, t=off + s)
+        hub.end_iteration("chain")
+    sps = find_safe_points(seq, None, source="measured", telemetry=hub)
+    for sp in sps:
+        k = sp.op_idx
+        assert 0 <= k < total - 1
+        t_k = seq.op_end[k]
+        for it in range(2):
+            off = it * T
+            assert not any(off + s < t_k + off - EPS
+                           and t_k + off < off + s + d - EPS
+                           for s, d in transfers)
+        left = res[k - 1] if k > 0 else res[k]
+        assert res[k] <= left and res[k] <= res[k + 1]
+
+
+def test_measured_boundary_residency_tie_break_is_emission_order():
+    """An op's allocs and frees share one timestamp (the op's end
+    instant): the boundary must settle at the LAST-EMITTED value, not
+    the largest one."""
+    seq = synthetic_chain(n_ops=2, latency=1.0, seed=0, job_id="chain")
+    total = len(seq.operators)
+    hub = TelemetryHub(clock="virtual")
+    for k in range(total):
+        hub.record_op("chain", k, 1.0, t=seq.op_end[k])
+    hub.record_residency("chain", "x", "alloc", 150, t=seq.op_end[0])
+    hub.record_residency("chain", "x", "free", 30, t=seq.op_end[0])
+    hub.end_iteration("chain")
+    res = hub.measured_boundary_residency("chain", 0, total)
+    assert res is not None
+    assert res[0] == 30          # post-release value, not the high-water
+
+
+# ------------------------------------------------ measured swap windows
+def test_swap_planner_sizes_windows_from_measured_bandwidth(mlp):
+    """With enough transfer samples, the planner's swap time comes from
+    the measured DMA bandwidth; without a hub it is byte-identical to the
+    profile constant (golden plans stay pinned)."""
+    seq, _, _ = mlp
+    hub = TelemetryHub(clock="virtual")
+    # measured channel is 100x slower than the profile claims
+    for i in range(5):
+        hub.record_transfer("vic", f"s{i}", "out", 1 << 20,
+                            (1 << 20) / (PROFILE.host_link_bw / 100.0))
+    pl_modeled = SwapPlanner(seq, SchedulingPlan(job_id="vic"), PROFILE)
+    pl_measured = SwapPlanner(seq, SchedulingPlan(job_id="vic"), PROFILE,
+                              telemetry=hub)
+    size = 8 << 20
+    assert pl_modeled._swap_time(size) == PROFILE.transfer_time(size)
+    assert pl_measured._swap_time(size) > 50 * pl_modeled._swap_time(size)
+    # below the sample floor the planner stays on the modeled constant
+    cold = SwapPlanner(seq, SchedulingPlan(job_id="vic"), PROFILE,
+                       telemetry=TelemetryHub())
+    assert cold._swap_time(size) == PROFILE.transfer_time(size)
+
+
+# ------------------------------------------------- eor-learned arbiter
+def test_eor_learned_policy_weights_stalled_jobs():
+    assert "eor-learned" in ARBITER_POLICIES
+    hub = TelemetryHub()
+    # job a: 40% of its time lost to stalls; job b: stall-free
+    hub.record_op("a", 0, 0.6)
+    hub.record_stall("a", 0, 0.4, "passive_in")
+    hub.record_op("b", 0, 1.0)
+    arb = BudgetArbiter(1000, policy="eor-learned", telemetry=hub)
+    arb.register("a")
+    arb.register("b")
+    split = arb.split(["a", "b"])
+    assert split["a"] > split["b"]
+    assert split["a"] + split["b"] <= 1000
+
+
+def test_eor_learned_policy_degrades_to_equal_without_telemetry():
+    arb = BudgetArbiter(1000, policy="eor-learned")
+    arb.register("a")
+    arb.register("b")
+    split = arb.split(["a", "b"])
+    assert split["a"] == split["b"]
+
+
+def test_hub_drift_ratio_and_scheduler_fold(mlp):
+    seq, _, _ = mlp
+    hub = TelemetryHub(clock="virtual")
+    sched = MemoryScheduler(PROFILE)
+    sched.register_job(seq)
+    baseline = sum(op.latency for op in seq.operators)
+    assert hub.drift_ratio("vic", baseline) == 0.0      # no samples yet
+    assert not sched.update_latencies_from_hub("vic", hub)
+    # measured latencies 3x the modeled ones -> drift past the threshold
+    for i, op in enumerate(seq.operators):
+        hub.record_op("vic", i, 3.0 * op.latency, prim=op.name)
+    assert hub.drift_ratio("vic", baseline) > 1.0
+    old = [op.latency for op in seq.operators]
+    assert sched.update_latencies_from_hub("vic", hub)
+    new = [op.latency for op in seq.operators]
+    assert sum(new) > sum(old)                          # folded in
+
+
+# --------------------------------- revising booked swap-INs at a splice
+def _chain_with_late_swap_in(n_ops=6):
+    seq = synthetic_chain(n_ops=n_ops, latency=1.0, seed=3, job_id="c")
+    spec = seq.tensors["a0"]
+    plan = SchedulingPlan(job_id="c")
+    plan.add(ScheduleEvent(
+        event_type=EventType.SWAP_OUT, tensor_id="a0", job_id="c",
+        trigger_op=1, delta=0.0, start=0.0, end=0.0,
+        size_bytes=spec.size_bytes))
+    # prefetch booked at op 3 but scheduled to START much later
+    # (delta 5): between those instants it is booked-but-unstarted
+    plan.add(ScheduleEvent(
+        event_type=EventType.SWAP_IN, tensor_id="a0", job_id="c",
+        trigger_op=3, delta=5.0, start=0.0, end=0.0,
+        size_bytes=spec.size_bytes, target_op=2 * n_ops - 1))
+    return seq, plan
+
+
+def test_simulator_splice_cancels_unstarted_booked_swap_in():
+    """A safe-point splice no longer waits for a swap-IN that is booked
+    on the channel but has not started: the booking is cancelled (and
+    the channel tail refunded), the splice lands, and the value is still
+    correct via the passive path at its next use."""
+    seq, plan = _chain_with_late_swap_in()
+    upd = PlanUpdate(at_time=3.5, plan=SchedulingPlan(job_id="c"),
+                     mode="safe-point", safe_ops=frozenset({3}))
+    sim = simulate([seq], {"c": plan}, PROFILE, iterations=1,
+                   plan_updates={"c": [upd]})
+    assert upd.applied_op == 3                 # splice landed mid-iteration
+    assert sim.canceled_swap_ins == 1          # the booked prefetch revised
+    assert sim.passive_swap_ins >= 1           # value refetched passively
+
+
+def test_simulator_splice_still_waits_for_started_swap_in():
+    """A transfer already on the wire pins the splice to a later safe
+    point — cancellation only covers unstarted bookings."""
+    seq, plan = _chain_with_late_swap_in()
+    # allow every op boundary: the first eligible one AFTER the transfer
+    # starts (t=8) must be used, never one inside the transfer
+    upd = PlanUpdate(at_time=8.2, plan=SchedulingPlan(job_id="c"),
+                     mode="safe-point", safe_ops=None)
+    sim = simulate([seq], {"c": plan}, PROFILE, iterations=1,
+                   plan_updates={"c": [upd]})
+    assert upd.applied_op is not None
+    assert sim.canceled_swap_ins == 0          # it landed, nothing revised
+
+
+def test_executor_splice_cancels_queued_prefetches(mlp):
+    """The real executor path: cancel_unstarted drains queued (not yet
+    running) swap-ins so a hot-swap is not blocked by them, and the run
+    still reproduces the reference outputs."""
+    from repro.core import reference_outputs
+    seq, closed, args = mlp
+    cfg = SchedulerConfig(per_job_budget_bytes={"vic": 1 << 60})
+    plan = build_pipeline("tensile", profile=PROFILE,
+                          config=cfg).plan([seq]).plans["vic"]
+    sps = find_safe_points(seq, plan)
+    assert sps
+    ex = JaxprExecutor(closed, seq, plan, async_swap=True)
+    ex.request_plan(SchedulingPlan(job_id="vic"),
+                    {sp.op_idx for sp in sps})
+    out = ex.run(*args)
+    ex.close()
+    assert ex.stats.hot_swaps == 1
+    ref = reference_outputs(closed, *args)
+    for a, b in zip(ref, out):
+        assert np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------- recompute in incremental remainder plans
+def test_preemptive_replan_emits_recompute_when_swaps_infeasible():
+    """When the windowed swap budget is infeasible (the DMA channel is
+    too slow for any eager swap-out pair to fit the remainder), the
+    incremental replan may emit RECOMPUTE actions — triggered strictly
+    after the safe point and only when they verifiably lower the
+    windowed peak."""
+    seq = synthetic_chain(n_ops=8, latency=1.0, seed=7, job_id="c")
+    # per-transfer setup alone exceeds any window: swaps can never fit
+    slow = MachineProfile(host_link_bw=1e3, host_link_latency=1e6)
+    pipe = build_pipeline("tensile+autoscale", profile=slow,
+                          config=SchedulerConfig())
+    prior = SchedulingPlan(job_id="c")
+    sps = find_safe_points(seq, prior)
+    assert sps
+    step = sps[0].op_idx
+    solo = analyze([seq]).peak_bytes
+    res = pipe.replan_from([seq], {"c": prior}, {"c": step},
+                           budgets={"c": max(1, int(solo * 0.5))})
+    plan = res.plans["c"]
+    recs = plan.recomputes()
+    assert recs, "infeasible swap window must fall back to recomputation"
+    assert not plan.swap_outs()                 # swaps truly infeasible
+    for ev in plan.events:
+        assert ev.trigger_op > step             # strictly after the splice
+    # per-step peak verification held: the windowed peak improved
+    w0 = analyze([seq], plans={"c": prior},
+                 window=(seq.op_end[step], seq.iteration_time)).peak_bytes
+    w1 = analyze([seq], plans={"c": plan},
+                 window=(seq.op_end[step], seq.iteration_time)).peak_bytes
+    assert w1 < w0

@@ -9,7 +9,8 @@ tool compares that file against the committed baseline
 
   * a global peak regresses by more than 10 %, or
   * an overhead metric (EOR, time-to-within-budget in burst-job
-    iterations) regresses by more than 25 %, or
+    iterations, or the telemetry plane's post-recalibration cost-model
+    error ``calib_err``) regresses by more than 25 %, or
   * a scenario that was OOM-free gains OOM events, or
   * a scenario/policy row disappears from the current run.
 
@@ -67,7 +68,10 @@ def compare(baseline: dict, current: dict) -> list:
                 f"(+{(c_peak - b_peak) / b_peak:.1%}, limit "
                 f"{PEAK_TOLERANCE:.0%})")
         # ---- overhead metrics ---------------------------------------
-        for metric in ("EOR", "ttwb_burst_iters"):
+        # calib_err is the measured-telemetry plane's post-recalibration
+        # cost-model error: a >25 % regression means the hub→calibration
+        # feedback loop degraded
+        for metric in ("EOR", "ttwb_burst_iters", "calib_err"):
             b, c = base.get(metric), cur.get(metric)
             if b is None or c is None:
                 continue
