@@ -275,6 +275,35 @@ def paper_tables() -> str:
                         f"{m['calib_err_cold']:.2f}→"
                         f"{m['calib_err']:.3f}) vs modeled preempt's "
                         f"{_ttwb(p)}.\n")
+        cw = sc.get("cold-vs-warm", {}).get("modes")
+        if cw:
+            out.append(
+                "#### Cold vs warm boot — the experience plane "
+                "(persistent cross-run store)\n")
+            out.append(
+                "The `cold-vs-warm` rows run the same workload mix "
+                "twice: against a fresh `ExperienceStore` (cold boot — "
+                "4×-miscalibrated constants, plan from scratch, first "
+                "iteration unscheduled) and against the store the cold "
+                "run populated (warm boot — persisted calibration from "
+                "construction, the cached converged plan re-verified "
+                "against the current budget and active from iteration "
+                "0).  Acceptance (tests/test_scenarios.py + "
+                "`tools/check_bench_regression.py::cold_warm_contract`): "
+                "warm dominates cold on first-iteration peak, "
+                "time-to-first-feasible-plan, and first-iteration "
+                "calibration error, with zero ledger OOMs.\n")
+            c, w = cw["cold"], cw["warm"]
+            out.append(
+                f"Warm boot: plan-cache hit={w['plan_cache_hit']}, "
+                f"first-iteration peak "
+                f"{w['first_iter_peak'] / 2**20:.2f} MiB "
+                f"({'within' if w['first_iter_within_budget'] else 'OVER'} "
+                f"budget, {w['oom_events']} OOMs), ttfp "
+                f"{w['ttfp_s']:.3f}s vs cold's {c['ttfp_s']:.3f}s, "
+                f"first-iteration calib err {w['calib_err_cold']:.2e} vs "
+                f"the cold run's converged {c['calib_err']:.2e} "
+                f"(cold started at {c['calib_err_cold']:.2f}).\n")
     lm = _load("latency_model.json")
     if lm:
         out.append("### §IV-C — cold-start latency MLP\n")

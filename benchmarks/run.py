@@ -120,20 +120,27 @@ def bench_pipelines(policies=None, workloads=("vgg16", "tinyllama-r")) -> None:
         json.dump(table, f, indent=1)
 
 
-def bench_scenarios(smoke: bool = False) -> None:
+def bench_scenarios(smoke: bool = False,
+                    experience_dir: str = None) -> None:
     """Multi-workload dynamic scenario suite: staggered launches, job
-    churn, priority inversion, bursty interference, and the two
-    preemption scenarios (flash-crowd, preempt-vs-boundary) — every
-    cross-job policy vs the arbiter-assigned device budget (see
-    benchmarks/scenarios.py).
+    churn, priority inversion, bursty interference, the two preemption
+    scenarios (flash-crowd, preempt-vs-boundary), and the experience
+    plane's cold-vs-warm boot scenario — every cross-job policy vs the
+    arbiter-assigned device budget (see benchmarks/scenarios.py).
+
+    ``experience_dir`` persists the cold-vs-warm scenario's experience
+    store across invocations (CI keys it on the store schema version via
+    actions/cache, proving warm boot works across whole CI runs); without
+    it the warm run boots from a scratch store the cold run populated.
 
     Also distills the CI perf-trajectory gate metrics (global peak,
-    time-to-within-budget, EOR per scenario/policy) into
-    ``experiments/results/BENCH_scenarios.json``;
+    time-to-within-budget, EOR per scenario/policy, and the cold-vs-warm
+    dominance fields) into ``experiments/results/BENCH_scenarios.json``;
     ``tools/check_bench_regression.py`` diffs that file against the
     committed baseline ``benchmarks/BENCH_scenarios.json``."""
     from . import scenarios
-    t = scenarios.run(os.path.join(RESULTS, "scenarios.json"), smoke=smoke)
+    t = scenarios.run(os.path.join(RESULTS, "scenarios.json"), smoke=smoke,
+                      experience_dir=experience_dir)
     # the gate file records which variant produced it: smoke and full-size
     # metrics are NOT comparable, and check_bench_regression refuses to
     # diff (or --update) across the two
@@ -161,6 +168,28 @@ def bench_scenarios(smoke: bool = False) -> None:
                 # overhead metrics)
                 "calib_err": (round(m["calib_err"], 6)
                               if "calib_err" in m else None),
+            }
+        # cold-vs-warm rows: the experience plane's warm-boot dominance
+        # fields (calib_err_first, within-budget/OOM-free first iteration,
+        # plan-cache hit) — tools/check_bench_regression.py enforces the
+        # warm-dominates-cold contract on these
+        for mode, m in rec.get("modes", {}).items():
+            _emit(f"scenarios/{scn}/{mode}", m["time"] * 1e6,
+                  f"peak={m['peak']};within_budget={m['within_budget']};"
+                  f"first_iter_peak={m['first_iter_peak']};"
+                  f"oom={m['oom_events']};"
+                  f"cache_hit={m['plan_cache_hit']};"
+                  f"calib_err={m['calib_err_cold']:.4f}"
+                  f"->{m['calib_err']:.4f}")
+            gate[f"{scn}/{mode}"] = {
+                "peak": m["peak"],
+                "EOR": round(m["EOR"], 6),
+                "oom_events": m["oom_events"],
+                "within_budget": m["within_budget"],
+                "first_iter_within_budget": m["first_iter_within_budget"],
+                "plan_cache_hit": m["plan_cache_hit"],
+                "calib_err": round(m["calib_err"], 6),
+                "calib_err_first": round(m["calib_err_cold"], 6),
             }
     with open(os.path.join(RESULTS, "BENCH_scenarios.json"), "w") as f:
         json.dump(gate, f, indent=1, sort_keys=True)
@@ -236,6 +265,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CPU-sized variants of the heavy suites (currently "
                          "`scenarios`): small workloads, <5 min, for CI")
+    ap.add_argument("--experience-dir", default=None,
+                    help="persistent ExperienceStore root wired through to "
+                         "the controller/scenarios: the cold-vs-warm "
+                         "scenario warm-boots from it and flushes back "
+                         "into it (CI persists it across runs)")
     args = ap.parse_args()
     os.makedirs(RESULTS, exist_ok=True)
     names = args.only.split(",") if args.only else list(ALL)
@@ -245,7 +279,8 @@ def main() -> None:
             bench_pipelines(policies=args.policy.split(",")
                             if args.policy else None)
         elif n == "scenarios":
-            bench_scenarios(smoke=args.smoke)
+            bench_scenarios(smoke=args.smoke,
+                            experience_dir=args.experience_dir)
         else:
             ALL[n]()
 

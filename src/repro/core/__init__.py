@@ -14,6 +14,11 @@ Public API:
                                     for op/transfer/stall/residency records
                                     from both runtimes; consumers replace
                                     modeled time with measured time
+    ExperienceStore / fingerprint — the experience plane: persistent
+                                    cross-run store (distilled telemetry,
+                                    recalibrated calibration, verified plan
+                                    cache per job fingerprint) so recurring
+                                    workloads warm-boot instead of cold-start
     simulate / evaluate           — discrete-event metrics (MSR/EOR/CBR)
     JaxprExecutor                 — interpreting executor with real host swap
     GlobalController              — multi-workload runtime (paper Fig. 3)
@@ -31,6 +36,9 @@ from .engine import (DeviceLedger, DmaChannel, EngineTrace, JobContext,
                      JobLedgerView, MemoryEngine, SafePoint, find_safe_points)
 from .executor import (DeviceAccountant, ExecutionStats, JaxprExecutor,
                        SwapChannel, reference_outputs)
+from .experience import (CalibrationRecord, ExperienceEntry, ExperienceStore,
+                         PlanRecord, TelemetrySummary, budget_bucket,
+                         device_identity, fingerprint, sequence_signature)
 from .graph_capture import CaptureSpec, capture, capture_train_step
 from .jax_integration import (TensileDecisions, backend_supports_memory_kinds,
                               checkpoint_name, make_remat_policy,

@@ -87,8 +87,20 @@ def _clamped(estimate: float, current: float, limit: float = 16.0) -> float:
 
 
 class CostModel:
-    def __init__(self, calib: Optional[DeviceCalibration] = None):
+    def __init__(self, calib: Optional[DeviceCalibration] = None,
+                 experience=None):
+        # warm boot (experience plane): with no explicit calibration, an
+        # attached ExperienceStore supplies the constants persisted by a
+        # prior run's recalibration — capture-time latency estimates then
+        # flow through measured experience instead of probe defaults.
+        # An explicit `calib` always wins (the caller knows better).
+        if calib is None and experience is not None:
+            try:
+                calib = experience.device_calibration()
+            except Exception:   # noqa: BLE001 - corrupt store: cold boot
+                calib = None
         self.calib = calib or DeviceCalibration()
+        self.experience = experience
         self.mlp: Optional["LatencyMLP"] = None
         self.utilization: float = 0.0  # 0..1, "GPU usage" analogue
         # recalibration cursor per job: only hub samples newer than this
@@ -191,7 +203,8 @@ class CostModel:
     # Online recalibration from measured telemetry (the §IV-E feedback
     # loop widened from per-op latencies to the throughput constants)
     # ------------------------------------------------------------------
-    def recalibrate(self, hub, alpha: float = 0.5) -> "CalibrationReport":
+    def recalibrate(self, hub, alpha: float = 0.5,
+                    report: bool = True) -> Optional["CalibrationReport"]:
         """Fold every NEW TelemetryHub op sample into the calibration:
         each measured (flops, bytes, latency) triple yields a point
         estimate of the constant its roofline term is bound by — the
@@ -200,7 +213,9 @@ class CostModel:
         effective throughput.  Samples already consumed (per-job cursor)
         are skipped, so the controller can call this after every
         iteration at O(new samples) cost.  Returns the post-update
-        ``calibration_report``."""
+        ``calibration_report`` — unless ``report=False``, which keeps the
+        whole call O(new samples) for per-iteration callers (the report
+        re-scans every sample)."""
         c = self.calib
         for job_id in hub.jobs():
             samples = hub.ops.get(job_id, ())
@@ -221,7 +236,7 @@ class CostModel:
                     est = _clamped(s.bytes_accessed / eff, c.mem_bw)
                     c.mem_bw = (1 - alpha) * c.mem_bw + alpha * est
             self._recal_cursor[job_id] = len(samples)
-        return self.calibration_report(hub)
+        return self.calibration_report(hub) if report else None
 
     def calibration_report(self, hub) -> "CalibrationReport":
         """Per-primitive relative error of the analytic model against the

@@ -49,12 +49,20 @@ def capture(fn: Callable, *args: Any, job_id: str = "job0",
             spec: Optional[CaptureSpec] = None,
             cost_model: Optional[CostModel] = None,
             phase_split: Optional[Callable[[jcore.JaxprEqn], Phase]] = None,
+            experience=None,
             ) -> AccessSequence:
     """Trace `fn(*args)` and build its AccessSequence.
 
     `args` may be arrays or ShapeDtypeStructs (no allocation needed).
+
+    `experience` (an ExperienceStore) warm-boots the default cost model:
+    capture-time latency estimates then come from the calibration a prior
+    run measured and persisted, not probe constants — the paper's
+    cold-start fix for recurring workloads.  Ignored when an explicit
+    `cost_model` is passed (it may already be warm-booted or deliberately
+    cold).
     """
-    cost_model = cost_model or CostModel()
+    cost_model = cost_model or CostModel(experience=experience)
     closed = jax.make_jaxpr(fn)(*args)
     jaxpr = closed.jaxpr
 
@@ -180,7 +188,8 @@ def capture(fn: Callable, *args: Any, job_id: str = "job0",
 
 def capture_train_step(fn: Callable, params: Any, opt_state: Any, batch: Any,
                        job_id: str = "job0",
-                       cost_model: Optional[CostModel] = None):
+                       cost_model: Optional[CostModel] = None,
+                       experience=None):
     """Capture a canonical ``train_step(params, opt_state, batch) ->
     (new_params, new_opt_state, loss)``: params/opt-state kinds + the
     across-iteration aliasing the paper's Opt-phase scheduling needs."""
@@ -189,4 +198,4 @@ def capture_train_step(fn: Callable, params: Any, opt_state: Any, batch: Any,
         out_kinds=[TensorKind.PARAM, TensorKind.OPT_STATE, TensorKind.OUTPUT],
         alias_pairs=[(0, 0), (1, 1)])
     return capture(fn, params, opt_state, batch, job_id=job_id, spec=spec,
-                   cost_model=cost_model)
+                   cost_model=cost_model, experience=experience)

@@ -46,6 +46,7 @@ from .cost_model import CostModel, EWMATracker
 from .engine import (DeviceLedger, DmaChannel, JobLedgerView, MemoryEngine,
                      find_safe_points)
 from .executor import JaxprExecutor
+from .experience import ExperienceStore, device_identity
 from .graph_capture import capture_train_step
 from .peak_analysis import analyze
 from .plan import MachineProfile, SchedulingPlan
@@ -88,6 +89,9 @@ class JobHandle:
     # the arbiter-assigned slice of the device budget, as a live view over
     # the shared DeviceLedger (None until the first split)
     ledger_view: Optional[JobLedgerView] = None
+    # structural fingerprint in the attached ExperienceStore (None when
+    # the controller runs without one)
+    fingerprint: Optional[str] = None
     # the executor currently running this job's iteration (None between
     # iterations / after finish) — the preemptive arbiter hot-swaps plans
     # into it at a safe point
@@ -117,8 +121,18 @@ def _peak_weights(arb: "BudgetArbiter", live: Sequence[str]
                   ) -> Dict[str, float]:
     """Proportional to each job's peak demand: the measured per-job peak
     (folded in from the shared DeviceLedger / EngineTrace as the job runs)
-    once available, else the predicted vanilla peak from capture."""
-    return {j: float(max(arb.demands.get(j, 0), 1)) for j in live}
+    once available, else a persisted peak a PRIOR run measured for the
+    same fingerprint (experience prior), else the predicted vanilla peak
+    from capture."""
+    out: Dict[str, float] = {}
+    for j in live:
+        w = arb.demands.get(j, 0)
+        prior = arb.priors.get(j)
+        if prior is not None and prior.peak_bytes \
+                and j not in arb.live_peak_seen:
+            w = prior.peak_bytes
+        out[j] = float(max(w, 1))
+    return out
 
 
 # how strongly a job's measured stall share bids for extra bytes under
@@ -132,13 +146,22 @@ def _eor_learned_weights(arb: "BudgetArbiter", live: Sequence[str]
     """Learned from the measured-telemetry plane: a job losing more of
     its measured time to memory stalls (passive swap-ins, late
     prefetches) is the job whose slice is too small — it bids for more
-    bytes in proportion to its measured stall share.  Jobs with no
-    samples yet (cold start) bid the neutral weight, so the policy
-    degrades to equal-share until telemetry exists."""
+    bytes in proportion to its measured stall share.  Jobs with no live
+    samples yet bid the stall share a PRIOR run persisted for the same
+    fingerprint (experience prior) when one exists, else the neutral
+    weight — so the policy degrades to equal-share only on a genuinely
+    first-ever run."""
     hub = arb.telemetry
-    if hub is None:
-        return {j: 1.0 for j in live}
-    return {j: 1.0 + EOR_LEARNED_GAIN * hub.stall_share(j) for j in live}
+    out: Dict[str, float] = {}
+    for j in live:
+        share = None
+        if hub is not None and hub.has_samples(j):
+            share = hub.stall_share(j)
+        if share is None:
+            prior = arb.priors.get(j)
+            share = prior.stall_share if prior is not None else 0.0
+        out[j] = 1.0 + EOR_LEARNED_GAIN * share
+    return out
 
 
 ARBITER_POLICIES: Dict[str, Callable[["BudgetArbiter", Sequence[str]],
@@ -188,6 +211,13 @@ class BudgetArbiter:
         self.telemetry = telemetry
         self.priorities: Dict[str, float] = {}
         self.demands: Dict[str, int] = {}       # peak demand, bytes
+        # experience priors: persisted telemetry summaries standing in
+        # for live measurements on jobs that have not produced any yet
+        # (set_prior; consumed by the eor-learned and peak policies)
+        self.priors: Dict[str, Any] = {}
+        # jobs whose demand has been updated from a LIVE measured peak —
+        # from then on the prior stops overriding the peak policy
+        self.live_peak_seen: Dict[str, bool] = {}
         self.history: List[Dict[str, int]] = []
         self.last_assignment: Dict[str, int] = {}
 
@@ -220,10 +250,21 @@ class BudgetArbiter:
         if job_id in self.demands:
             self.demands[job_id] = max(self.demands[job_id],
                                        int(demand_bytes))
+            self.live_peak_seen[job_id] = True
+
+    def set_prior(self, job_id: str, prior) -> None:
+        """Attach a persisted experience prior (a TelemetrySummary-shaped
+        object with ``stall_share`` and ``peak_bytes``) for a job that
+        has not produced live samples yet — the eor-learned and peak
+        policies read it until live telemetry supersedes it."""
+        if prior is not None:
+            self.priors[job_id] = prior
 
     def unregister(self, job_id: str) -> None:
         self.priorities.pop(job_id, None)
         self.demands.pop(job_id, None)
+        self.priors.pop(job_id, None)
+        self.live_peak_seen.pop(job_id, None)
 
     # -- the split -----------------------------------------------------
     def split(self, live: Sequence[str]) -> Dict[str, int]:
@@ -271,12 +312,25 @@ class GlobalController:
                  arbiter_policy: Optional[str] = None,
                  arbiter_mode: Optional[str] = None,
                  telemetry: Optional[TelemetryHub] = None,
-                 safe_point_source: str = "measured"):
+                 safe_point_source: str = "measured",
+                 experience: Optional[ExperienceStore] = None,
+                 experience_dir: Optional[str] = None):
         self.profile = profile or MachineProfile()
         # ONE measured-telemetry hub per device: every executor produces
         # into it; safe-point detection, drift replans, swap-window sizing
         # and the eor-learned arbiter policy consume from it
         self.telemetry = telemetry or TelemetryHub(clock="real")
+        # the experience plane (cross-run persistence): an attached store
+        # warm-boots the cost model's calibration, the pipeline's plan
+        # cache, the planner's DMA bandwidth, and the arbiter's learned
+        # priors — and distilled experience flushes back on job finish
+        if experience is None and experience_dir is not None:
+            experience = ExperienceStore(
+                experience_dir, device_id=device_identity(self.profile))
+        self.experience = experience
+        # (job_id, error) for experience flushes that failed — persistence
+        # must never take a job down with it
+        self.experience_failures: List[tuple] = []
         # how `_preempt_victims` finds splice points: "measured" detects
         # them from the hub's residency records (falling back to modeled
         # below min_iterations of samples — §IV-C blending), "modeled"
@@ -290,10 +344,15 @@ class GlobalController:
             pipeline = build_pipeline(pipeline_name, profile=self.profile,
                                       config=cfg)
         self.scheduler = MemoryScheduler(self.profile, scheduler_config,
-                                         pipeline=pipeline)
+                                         pipeline=pipeline,
+                                         experience=self.experience)
         if self.scheduler.pipeline.telemetry is None:
             self.scheduler.pipeline.telemetry = self.telemetry
-        self.cost_model = cost_model or CostModel()
+        # cost model warm boot: with a store attached, capture-time
+        # latency estimates start from the calibration a prior run
+        # persisted instead of probe constants (and keep recalibrating
+        # online from the hub — see report_telemetry)
+        self.cost_model = cost_model or CostModel(experience=self.experience)
         # one engine ledger + DMA channel shared by every job on the device
         self.engine = MemoryEngine(self.profile,
                                    capacity_bytes=device_capacity,
@@ -356,6 +415,17 @@ class GlobalController:
                 demand = analyze([seq], free_at_last_use=False).peak_bytes
                 self.arbiter.register(job_id, priority=eff_priority,
                                       demand_bytes=demand)
+            if self.experience is not None:
+                # experience priors: a prior run's distilled telemetry
+                # for this fingerprint stands in for live samples the
+                # job has not produced yet (eor-learned / peak policies)
+                try:
+                    handle.fingerprint = self.experience.fingerprint(seq)
+                    prior = self.experience.prior(seq)
+                    if prior is not None and self.arbiter is not None:
+                        self.arbiter.set_prior(job_id, prior)
+                except Exception as e:  # noqa: BLE001 - cold boot instead
+                    self.experience_failures.append((job_id, e))
             if schedule:
                 self._replan()
         t = threading.Thread(target=self._run_job, args=(handle,), daemon=True)
@@ -531,6 +601,29 @@ class GlobalController:
         handle.done = True
         handle.executor = None
         with self._lock:
+            if self.experience is not None:
+                # flush distilled experience BEFORE deregistering: the
+                # hub still holds this job's records, the handle its
+                # final plan.  Failures are recorded, never raised — the
+                # store must not take a (possibly successful) job down.
+                try:
+                    self.cost_model.recalibrate(self.telemetry,
+                                                report=False)
+                    fp = handle.fingerprint \
+                        or self.experience.fingerprint(handle.seq)
+                    samples = self.telemetry.total_op_samples()
+                    self.experience.record_job(
+                        fp, seq=handle.seq, hub=self.telemetry,
+                        job_id=handle.job_id, plan=handle.plan,
+                        pipeline=self.scheduler.pipeline.name,
+                        peak_bytes=max(
+                            handle.peak_bytes,
+                            self.accountant.job_peak(handle.job_id)),
+                        calib=self.cost_model.calib,
+                        calib_samples=samples)
+                    self.experience.flush()
+                except Exception as e:  # noqa: BLE001
+                    self.experience_failures.append((handle.job_id, e))
             self.scheduler.remove_job(handle.job_id)
             if self.arbiter is not None:
                 reclaimed = self.arbiter.last_assignment.get(
@@ -553,10 +646,15 @@ class GlobalController:
 
     def report_telemetry(self, job_id: str) -> bool:
         """Fold the hub's measured latencies into the job's sequence and
-        return whether the hub reports drift past the replan threshold."""
+        return whether the hub reports drift past the replan threshold.
+        The cost model recalibrates from the same new samples (O(new
+        samples), per-job cursors), closing the capture-time loop: the
+        NEXT ``launch()`` estimates latencies from measured constants,
+        not the probe defaults the process started with."""
         with self._lock:
             if job_id not in self.scheduler.jobs:
                 return False
+            self.cost_model.recalibrate(self.telemetry, report=False)
             return self.scheduler.update_latencies_from_hub(
                 job_id, self.telemetry)
 

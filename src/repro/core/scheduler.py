@@ -32,13 +32,19 @@ class MemoryScheduler:
 
     def __init__(self, profile: Optional[MachineProfile] = None,
                  config: Optional[SchedulerConfig] = None,
-                 pipeline: Optional[Pipeline] = None):
+                 pipeline: Optional[Pipeline] = None,
+                 experience=None):
         self.profile = profile or MachineProfile()
         self.config = config or SchedulerConfig()
         # the planning policy; defaults to the paper's TENSILE pipeline but
         # any registered pipeline (or a custom pass list) drops in
         self.pipeline = pipeline or build_pipeline(
             "tensile", profile=self.profile, config=self.config)
+        # experience plane: an ExperienceStore makes `schedule` consult
+        # the per-fingerprint plan cache (verified warm starts) and seeds
+        # swap windows from persisted bandwidth — see passes.Pipeline
+        if experience is not None and self.pipeline.experience is None:
+            self.pipeline.experience = experience
         self.jobs: Dict[str, AccessSequence] = {}
         self.offsets: Dict[str, float] = {}
         self.priorities: Dict[str, float] = {}

@@ -119,7 +119,8 @@ class SwapPlanner:
                  compressed: bool = False,
                  max_tensor_bytes: Optional[int] = None,
                  not_before: float = 0.0,
-                 telemetry=None):
+                 telemetry=None,
+                 experience=None):
         self.seq = seq
         self.plan = plan
         self.profile = profile
@@ -131,6 +132,21 @@ class SwapPlanner:
         # what the channel actually sustains.  None (the default) keeps
         # the modeled constants, so plans stay byte-reproducible.
         self.telemetry = telemetry
+        # experience plane: between a cold start and the first live
+        # transfer samples, windows are sized from the bandwidth a PRIOR
+        # run measured and persisted (ExperienceStore) — live telemetry,
+        # once present, always wins over stored experience.  Resolved
+        # ONCE here: the stored value is static for the process and
+        # _swap_time sits inside the Alg.-3 convergence hot loop (a
+        # per-call store read would hit disk thousands of times)
+        self.experience = experience
+        self._experience_bw: Optional[float] = None
+        if experience is not None:
+            try:
+                self._experience_bw = experience.bandwidth(
+                    compressed=compressed)
+            except Exception:   # noqa: BLE001 - corrupt store: modeled path
+                self._experience_bw = None
         # incremental replans (safe-point hot-swap) must not schedule new
         # events before the splice instant — the past already executed
         self.not_before = not_before
@@ -172,6 +188,9 @@ class SwapPlanner:
                 # measured effective bandwidth for the size-dependent
                 # term; the per-transfer setup cost stays the profile's
                 return self.profile.host_link_latency + size_bytes / bw
+        if self._experience_bw:
+            return self.profile.host_link_latency \
+                + size_bytes / self._experience_bw
         return self.profile.transfer_time(size_bytes,
                                           compressed=self.compressed)
 

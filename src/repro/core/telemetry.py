@@ -252,6 +252,35 @@ class TelemetryHub:
                     | set(self.stalls) | set(self.residency))
             return sorted(seen)
 
+    def has_samples(self, job_id: str) -> bool:
+        """Whether the job has produced any measured records yet — the
+        arbiter's learned policies fall back to persisted experience
+        priors for jobs that have not."""
+        with self._lock:
+            return bool(self.ops.get(job_id) or self.stalls.get(job_id))
+
+    def op_summary(self, job_id: str) -> Dict[str, Dict[str, float]]:
+        """Per-primitive distilled latency fit of one job's op samples:
+        ``{prim: {n, flops, bytes, latency_s}}`` with the three numeric
+        fields as MEANS — the persistent form the experience store keeps
+        per fingerprint (enough to re-fit throughput constants without
+        replaying raw samples)."""
+        with self._lock:
+            acc: Dict[str, Dict[str, float]] = {}
+            for s in self.ops.get(job_id, ()):
+                d = acc.setdefault(s.prim or "?", {
+                    "n": 0.0, "flops": 0.0, "bytes": 0.0, "latency_s": 0.0})
+                d["n"] += 1
+                d["flops"] += s.flops
+                d["bytes"] += s.bytes_accessed
+                d["latency_s"] += s.latency_s
+        for d in acc.values():
+            n = max(d["n"], 1.0)
+            d["flops"] /= n
+            d["bytes"] /= n
+            d["latency_s"] /= n
+        return acc
+
     def op_latencies(self, job_id: str) -> Dict[int, float]:
         """EWMA-corrected measured latency per op index (§IV-E)."""
         with self._lock:
@@ -292,6 +321,37 @@ class TelemetryHub:
         if n < min_samples or tot_s <= _EPS:
             return None
         return tot_b / tot_s
+
+    def transfer_totals(self, compressed: bool = False,
+                        min_bytes: int = 1,
+                        job_id: Optional[str] = None
+                        ) -> Tuple[int, int, float]:
+        """(transfers, source bytes, busy seconds) over recorded
+        transfers of the given path — hub-wide by default, one job's
+        with ``job_id`` — the cumulative form the experience store
+        persists so a future cold start can seed ``measured_bandwidth``
+        before any live sample exists."""
+        with self._lock:
+            tot_b = 0
+            tot_s = 0.0
+            n = 0
+            streams = ([self.transfers.get(job_id, [])]
+                       if job_id is not None
+                       else list(self.transfers.values()))
+            for recs in streams:
+                for r in recs:
+                    if r.compressed != compressed or r.size_bytes < min_bytes:
+                        continue
+                    tot_b += r.size_bytes
+                    tot_s += r.duration_s
+                    n += 1
+        return n, tot_b, tot_s
+
+    def total_op_samples(self) -> int:
+        """Hub-wide op-sample count, read under the hub lock (callers
+        must not iterate ``ops`` themselves while producers insert)."""
+        with self._lock:
+            return sum(len(v) for v in self.ops.values())
 
     # -- queries: stalls / EOR -----------------------------------------
     def stall_share(self, job_id: str) -> float:

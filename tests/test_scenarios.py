@@ -8,7 +8,13 @@ capacity-limited ledger) while `vanilla` exceeds it on at least two.
 Preemption scenarios (flash-crowd, preempt-vs-boundary) add the
 time-to-within-budget contract: preemptive arbitration gets the device
 back inside the budget in < 1 burst-job iteration with zero ledger OOMs,
-while boundary arbitration takes >= 1."""
+while boundary arbitration takes >= 1.
+
+The cold-vs-warm scenario adds the experience plane's acceptance
+contract: a warm boot's first-iteration calibration error is at or below
+the cold run's CONVERGED error, its verified cached plan runs within
+budget from iteration 0 with zero ledger OOMs, and it dominates the cold
+boot on first-iteration peak and time-to-first-feasible-plan."""
 import pytest
 
 
@@ -33,10 +39,10 @@ def preempt_table(table):
 
 
 def test_suite_has_dynamic_multi_job_scenarios(table):
-    assert len(table) >= 6
+    assert len(table) >= 7
     names = set(table)
     assert {"staggered", "churn", "priority-inversion", "bursty",
-            "flash-crowd", "preempt-vs-boundary"} <= names
+            "flash-crowd", "preempt-vs-boundary", "cold-vs-warm"} <= names
     for rec in table.values():
         assert len(rec["jobs"]) >= 2
         offsets = [j["offset"] for j in rec["jobs"].values()]
@@ -132,6 +138,54 @@ def test_calibration_metrics_reported_and_converged(table):
             assert m["calib_samples"] > 0, (name, pol)
             assert m["calib_err"] <= m["calib_err_cold"] + 1e-9, (name, pol)
             assert m["calib_err"] < 0.25, (name, pol)
+
+
+@pytest.fixture(scope="module")
+def coldwarm(table):
+    """The experience plane's cold-vs-warm boot scenario."""
+    return table["cold-vs-warm"]
+
+
+# ---------------------------------------------------------- cold vs warm
+def test_warm_calibration_dominates_cold_converged(coldwarm):
+    """THE acceptance criterion: the warm boot's calibration error at its
+    FIRST iteration is at or below the cold run's CONVERGED error — the
+    persisted calibration makes recalibration's end state the warm run's
+    starting state."""
+    cold = coldwarm["modes"]["cold"]
+    warm = coldwarm["modes"]["warm"]
+    assert warm["calib_err_cold"] <= cold["calib_err"] + 1e-9
+    # and far below the cold run's own first-iteration error
+    assert warm["calib_err_cold"] < cold["calib_err_cold"]
+
+
+def test_warm_cached_plan_first_iteration_within_budget(coldwarm):
+    """The warm boot runs its re-verified cached plan from iteration 0:
+    within the device budget, zero ledger OOMs — while the cold boot's
+    unplanned first iteration busts the budget."""
+    warm = coldwarm["modes"]["warm"]
+    cold = coldwarm["modes"]["cold"]
+    assert warm["plan_cache_hit"]
+    assert warm["first_iter_peak"] <= coldwarm["device_budget"]
+    assert warm["first_iter_within_budget"]
+    assert warm["oom_events"] == 0
+    assert warm["within_budget"]
+    assert not cold["first_iter_within_budget"]
+    assert cold["oom_events"] > 0
+
+
+def test_warm_dominates_cold_on_all_three(coldwarm):
+    """Warm must dominate cold on first-iteration peak,
+    time-to-first-feasible-plan, and first-iteration calibration error."""
+    cold = coldwarm["modes"]["cold"]
+    warm = coldwarm["modes"]["warm"]
+    assert warm["first_iter_peak"] <= cold["first_iter_peak"]
+    assert warm["ttfp_s"] <= cold["ttfp_s"]
+    assert warm["calib_err_cold"] <= cold["calib_err_cold"]
+    # the cache hit is what makes ttfp collapse: the verified cached
+    # plan is adopted without re-running the convergence loop
+    assert warm["plan_iterations"] == 0
+    assert cold["plan_iterations"] > 0
 
 
 def test_preempt_scenarios_record_the_splice(preempt_table):

@@ -12,7 +12,11 @@ tool compares that file against the committed baseline
     iterations, or the telemetry plane's post-recalibration cost-model
     error ``calib_err``) regresses by more than 25 %, or
   * a scenario that was OOM-free gains OOM events, or
-  * a scenario/policy row disappears from the current run.
+  * a scenario/policy row disappears from the current run, or
+  * the cold-vs-warm dominance contract breaks on the CURRENT run (warm
+    boot must hit the plan cache, stay within budget with zero OOMs from
+    its first iteration, and start at or below the cold run's converged
+    calibration error — see ``cold_warm_contract``).
 
 Improvements and new rows never fail — they are reported and can be
 pinned with ``--update``, which copies the current metrics over the
@@ -94,6 +98,37 @@ def compare(baseline: dict, current: dict) -> list:
     return failures
 
 
+def cold_warm_contract(current: dict) -> list:
+    """The experience plane's warm-boot dominance contract, enforced on
+    the CURRENT run (not just relative to the baseline): a warm boot
+    must start at or below the cold run's CONVERGED calibration error,
+    run its verified cached plan within budget from the first iteration
+    with zero OOMs, and actually hit the plan cache.  Absent rows (a
+    pre-experience baseline or a run without the scenario) check
+    nothing."""
+    cold = current.get("cold-vs-warm/cold")
+    warm = current.get("cold-vs-warm/warm")
+    if not cold or not warm:
+        return []
+    failures = []
+    wf, cc = warm.get("calib_err_first"), cold.get("calib_err")
+    if wf is not None and cc is not None and wf > cc + 1e-9:
+        failures.append(
+            f"cold-vs-warm: warm first-iteration calib_err {wf:.6f} "
+            f"exceeds the cold run's converged {cc:.6f} — warm boot no "
+            "longer dominates cold calibration")
+    if warm.get("plan_cache_hit") is False:
+        failures.append("cold-vs-warm: warm run missed the plan cache "
+                        "(lookup or re-verification broke)")
+    if warm.get("first_iter_within_budget") is False:
+        failures.append("cold-vs-warm: warm run's cached-plan first "
+                        "iteration exceeded the device budget")
+    if (warm.get("oom_events") or 0) > 0:
+        failures.append(f"cold-vs-warm: warm run produced "
+                        f"{warm['oom_events']} ledger OOM events")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--update", action="store_true",
@@ -142,7 +177,7 @@ def main() -> int:
               "--update")
         return 2
 
-    failures = compare(baseline, current)
+    failures = compare(baseline, current) + cold_warm_contract(current)
     new_rows = sorted(set(current) - set(baseline) - {"_meta"})
     if new_rows:
         print(f"note: {len(new_rows)} new row(s) not in the baseline "
