@@ -195,6 +195,25 @@ def bench_scenarios(smoke: bool = False,
         json.dump(gate, f, indent=1, sort_keys=True)
 
 
+def bench_planner(smoke: bool = False) -> None:
+    """Planner raw-speed trajectory: cold plan, incremental replan
+    (arbitration-tick floor at a safe point), and warm-boot adoption
+    latency vs op count on synthetic chain graphs (see
+    benchmarks/planner_bench.py).  Writes the gate file
+    ``experiments/results/BENCH_planner.json``;
+    ``tools/check_bench_regression.py`` diffs it against the committed
+    baseline ``benchmarks/BENCH_planner.json`` (>25 % per-row latency
+    regression, plus the 10k-op contract: incremental replan >=10x
+    faster than cold and, in smoke, under 5 ms)."""
+    from . import planner_bench
+    t = planner_bench.run(os.path.join(RESULTS, "BENCH_planner.json"),
+                          smoke=smoke)
+    for key, m in sorted(t.items()):
+        extra = ";".join(f"{k}={v}" for k, v in sorted(m.items())
+                         if k not in ("ms",))
+        _emit(f"planner/{key}", m["ms"] * 1e3, extra)
+
+
 def bench_executor_validation() -> None:
     """Real-execution check: interpreter peak/MSR vs simulator prediction
     and bit-exactness of outputs under the plan (CPU-sized workload)."""
@@ -250,6 +269,7 @@ ALL = {
     "latency_model": bench_latency_model,
     "pipelines": bench_pipelines,
     "scenarios": bench_scenarios,
+    "planner": bench_planner,
     "executor_validation": bench_executor_validation,
 }
 
@@ -263,8 +283,9 @@ def main() -> None:
                          "`pipelines` benchmark (default: all registered; "
                          "see repro.core.passes.PIPELINES)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CPU-sized variants of the heavy suites (currently "
-                         "`scenarios`): small workloads, <5 min, for CI")
+                    help="CPU-sized variants of the heavy suites "
+                         "(`scenarios`, `planner`): small workloads, "
+                         "<5 min, for CI")
     ap.add_argument("--experience-dir", default=None,
                     help="persistent ExperienceStore root wired through to "
                          "the controller/scenarios: the cold-vs-warm "
@@ -281,6 +302,8 @@ def main() -> None:
         elif n == "scenarios":
             bench_scenarios(smoke=args.smoke,
                             experience_dir=args.experience_dir)
+        elif n == "planner":
+            bench_planner(smoke=args.smoke)
         else:
             ALL[n]()
 

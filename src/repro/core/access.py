@@ -212,10 +212,19 @@ class AccessSequence:
         return sum(t.size_bytes for t in self.tensors.values())
 
     def activity_analysis(self) -> Dict[str, int]:
-        """Last-use op index per tensor (release point; paper Alg 3 line 2)."""
+        """Last-use op index per tensor (release point; paper Alg 3 line 2).
+
+        Cached per timeline version — the engine's JobContext and the
+        planning passes each re-derive it on every (re)plan, and the
+        result only changes when the timeline is rebuilt.  Callers treat
+        the returned dict as read-only."""
+        cached = getattr(self, "_activity_cache", None)
+        if cached is not None and cached[0] == self._timeline_version:
+            return cached[1]
         last_use: Dict[str, int] = {}
         for a in self.accesses:
             last_use[a.tensor_id] = max(last_use.get(a.tensor_id, -1), a.op_idx)
+        self._activity_cache = (self._timeline_version, last_use)
         return last_use
 
     def __len__(self) -> int:

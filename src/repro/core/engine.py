@@ -42,6 +42,8 @@ import threading
 import time as _time
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+import numpy as np
+
 from .access import AccessSequence, TensorKind
 from .peak_analysis import PERSISTENT_KINDS, storage_of
 from .plan import (EventType, MachineProfile, ScheduleEvent,
@@ -532,13 +534,19 @@ def find_safe_points(seq: AccessSequence,
     ``min_iterations`` of instrumented iterations (or with no hub at all)
     it falls back to the modeled path — the paper's §IV-C cold-start
     blending applied to safe-point detection.
-    """
-    from .peak_analysis import build_events
 
+    The modeled path is a vectorized numpy sweep over the job's SoA event
+    buffers (shared with ``peak_analysis.analyze``); the busy-interval
+    list is cached on the plan per ``SchedulingPlan.version``.
+    ``_reference_safe_points`` keeps the original per-event scan for the
+    equivalence tests.
+    """
     if source == "measured" and telemetry is not None:
         measured = _measured_safe_points(seq, telemetry, min_iterations)
         if measured is not None:
             return measured
+
+    from .peak_analysis import _effective_mask, _seq_arrays
 
     eps = 1e-12
     n = len(seq.operators)
@@ -547,7 +555,61 @@ def find_safe_points(seq: AccessSequence,
     T = max(seq.iteration_time, eps)
 
     # (1) in-flight intervals of the plan, projected into [0, T) with the
-    # same wrapping the planner's PeriodicChannel books with
+    # same wrapping the planner's PeriodicChannel books with (cached on
+    # the plan; rebuilt only when plan.version moves)
+    busy = plan.busy_intervals(T) if plan is not None else []
+
+    # (2) modeled residency at every op boundary: effective-event cumsum
+    # (idempotent alloc/free — exactly the ledger semantics), then one
+    # searchsorted per boundary instead of the per-event scan
+    t, o, d, k_ids, _rel, _base = _seq_arrays(seq, plan, free_at_last_use)
+    op_end = np.asarray(seq.op_end[:n], dtype=np.float64)
+    if len(t):
+        eff = _effective_mask(k_ids, d)
+        mem = np.cumsum(np.where(eff, d, 0))
+        cnt = np.searchsorted(t, op_end + eps, side="right")
+        resident = np.where(cnt > 0, mem[np.maximum(cnt - 1, 0)], 0)
+    else:
+        resident = np.zeros(n, dtype=np.int64)
+
+    # (3) local-minimum + not-busy filter over boundaries 0..n-2 (the
+    # final op is the iteration boundary — the non-preemptive case)
+    r = resident
+    left = np.empty(n - 1, dtype=r.dtype)
+    left[0] = r[0]
+    left[1:] = r[:-2] if n > 2 else r[:0]
+    ok = (r[:-1] <= left) & (r[:-1] <= r[1:])
+    if busy:
+        # covered iff some interval has s < t_k - eps AND e > t_k + eps:
+        # sort by start, prefix-max of ends, one searchsorted per boundary
+        bs = np.asarray([s for s, _ in busy], dtype=np.float64)
+        be = np.asarray([e for _, e in busy], dtype=np.float64)
+        srt = np.argsort(bs, kind="stable")
+        bs, be = bs[srt], be[srt]
+        pmax_e = np.maximum.accumulate(be)
+        tk = op_end[:n - 1]
+        ns = np.searchsorted(bs, tk - eps, side="left")
+        covered = (ns > 0) & (pmax_e[np.maximum(ns - 1, 0)] > tk + eps)
+        ok &= ~covered
+    return [SafePoint(op_idx=int(kk), time=float(op_end[kk]),
+                      resident_bytes=int(r[kk]))
+            for kk in np.flatnonzero(ok)]
+
+
+def _reference_safe_points(seq: AccessSequence,
+                           plan: Optional[SchedulingPlan] = None,
+                           free_at_last_use: bool = True) -> List[SafePoint]:
+    """The original per-event modeled safe-point scan, kept verbatim as
+    the semantic reference for the vectorized path above (equivalence
+    tests assert identical SafePoint lists).  Not on any hot path."""
+    from .peak_analysis import build_events
+
+    eps = 1e-12
+    n = len(seq.operators)
+    if n <= 1:
+        return []
+    T = max(seq.iteration_time, eps)
+
     busy: List[Tuple[float, float]] = []
     if plan is not None:
         for ev in plan.events:
@@ -559,8 +621,6 @@ def find_safe_points(seq: AccessSequence,
                 continue
             busy.extend((s, e) for s, e in wrap_intervals(ev.start, dur, T))
 
-    # (2) modeled residency at every op boundary (idempotent alloc/free,
-    # exactly the ledger semantics)
     events = sorted(build_events(seq, plan, free_at_last_use=free_at_last_use),
                     key=lambda e: (e.time, e.order))
     resident = [0] * n

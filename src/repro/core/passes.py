@@ -49,7 +49,8 @@ import time as _time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .access import AccessSequence, AccessType, TensorKind
-from .peak_analysis import PERSISTENT_KINDS, PeakReport, analyze, storage_of
+from .peak_analysis import (PERSISTENT_KINDS, PeakReport, WindowSweep,
+                            analyze, storage_of)
 from .plan import (EventType, MachineProfile, ScheduleEvent, SchedulingPlan)
 from .recompute_planner import RecomputePlanner, plan_one_recompute
 from .swap_planner import SwapPlanner, plan_one_swap
@@ -253,8 +254,10 @@ class RecomputePass(PlanningPass):
         super().setup(state)
         self._solo_cache: Dict[str, Tuple[Tuple[int, int], PeakReport]] = {}
         if self.style == "tensile":
+            exp = state.shared.get("experience")
             self.planners = {
-                j: RecomputePlanner(state.jobs[j], state.plans[j])
+                j: RecomputePlanner(state.jobs[j], state.plans[j],
+                                    experience=exp)
                 for j in state.jobs}
 
     def gate(self, report: PeakReport) -> bool:
@@ -476,6 +479,11 @@ class PreemptiveReplanPass(PlanningPass):
         self.planners: Dict[str, SwapPlanner] = {}
         self.rec_planners: Dict[str, RecomputePlanner] = {}
         self._window_cache: Dict[str, Tuple[Tuple[int, int], PeakReport]] = {}
+        # per-job incremental sweeps; Pipeline.replan_from shares its
+        # cross-replan cache through state.shared so a job's frozen prefix
+        # survives consecutive replans at the same safe point
+        self._sweeps: Dict[str, WindowSweep] = state.shared.setdefault(
+            "window_sweeps", {})
         for j, op in self.from_op.items():
             seq = state.jobs.get(j)
             if seq is None:
@@ -506,13 +514,16 @@ class PreemptiveReplanPass(PlanningPass):
     def _window_report(self, job_id: str) -> PeakReport:
         seq = self.state.jobs[job_id]
         plan = self.state.plans[job_id]
-        key = (len(plan.events), len(plan.release_after_op))
+        key = (plan.version, len(plan.release_after_op))
         hit = self._window_cache.get(job_id)
         if hit is not None and hit[0] == key:
             return hit[1]
-        rep = analyze([seq], plans={job_id: plan},
-                      window=(self.from_time[job_id],
-                              seq.iteration_time + 1e-12))
+        sweep = self._sweeps.get(job_id)
+        if sweep is None:
+            sweep = self._sweeps[job_id] = WindowSweep(
+                free_at_last_use=True)
+        rep = sweep.report(seq, plan, self.from_time[job_id],
+                           seq.iteration_time + 1e-12)
         self._window_cache[job_id] = (key, rep)
         return rep
 
@@ -556,7 +567,7 @@ class PreemptiveReplanPass(PlanningPass):
                                 pl.channel.release(ev.start, ev.duration)
                             except ValueError:
                                 pass
-                    del plan.events[n0:]
+                    plan.truncate(n0)
                     self._window_cache.pop(job_id, None)
             # the windowed swap budget is infeasible for this job (no
             # eager swap-out pair fits the remaining channel time):
@@ -575,7 +586,8 @@ class PreemptiveReplanPass(PlanningPass):
         rp = self.rec_planners.get(job_id)
         if rp is None:
             rp = self.rec_planners[job_id] = RecomputePlanner(
-                self.state.jobs[job_id], plan)
+                self.state.jobs[job_id], plan,
+                experience=self.state.shared.get("experience"))
         from_op = self.from_op.get(job_id, -1)
         for cand in rp.candidates(rep):
             # both events must TRIGGER strictly after the safe-point op —
@@ -588,7 +600,7 @@ class PreemptiveReplanPass(PlanningPass):
             self._window_cache.pop(job_id, None)
             if self._window_report(job_id).peak_bytes < rep.peak_bytes:
                 return True
-            del plan.events[n0:]
+            plan.truncate(n0)
             self._window_cache.pop(job_id, None)
         return False
 
@@ -639,7 +651,7 @@ class VdnnSwapPass(PlanningPass):
         last_use = seq.activity_analysis()
         for tid, spec in seq.tensors.items():
             if spec.kind is TensorKind.ACTIVATION and tid in heavy_io:
-                plan.release_after_op[tid] = last_use[tid]
+                plan.set_release(tid, last_use[tid])
                 changed = True
         for tid, spec in seq.tensors.items():
             if spec.kind is not TensorKind.ACTIVATION or tid not in heavy_io:
@@ -862,6 +874,12 @@ class Pipeline:
         # SwapPlanner via state.shared["experience"].  None (the default)
         # keeps cold planning byte-reproducible.
         self.experience = experience
+        # per-job incremental window sweeps carried ACROSS replan_from
+        # calls: a WindowSweep re-freezes itself whenever its
+        # preconditions break (timeline version, safe point, prefix
+        # events), so persisting it here just lets consecutive replans of
+        # an unchanged job reuse the frozen prefix aggregates
+        self._window_sweeps: Dict[str, WindowSweep] = {}
 
     def _instantiate(self) -> List[PlanningPass]:
         return [p() if isinstance(p, type) else p for p in self.pass_specs]
@@ -1029,6 +1047,10 @@ class Pipeline:
             state.shared["experience"] = self.experience
         state.shared["replan_from_op"] = {j: op for j, op in steps.items()
                                           if j in jobs}
+        # drop sweeps of jobs that no longer exist, keep live ones warm
+        self._window_sweeps = {j: sw for j, sw in self._window_sweeps.items()
+                               if j in jobs}
+        state.shared["window_sweeps"] = self._window_sweeps
         initial = analyze(seqs, plans={j: prior_plans.get(j) for j in jobs
                                        if prior_plans.get(j) is not None},
                           free_at_last_use=self.free_at_last_use)

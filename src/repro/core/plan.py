@@ -10,7 +10,11 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# how many times any plan rebuilt its busy-interval list (regression tests
+# assert one construction per plan version, see SchedulingPlan.busy_intervals)
+BUSY_REBUILDS = 0
 
 
 class EventType(enum.Enum):
@@ -57,6 +61,9 @@ class ScheduleEvent:
         return ScheduleEvent(**d)  # type: ignore[arg-type]
 
 
+_PLAN_UID = [0]
+
+
 @dataclasses.dataclass
 class SchedulingPlan:
     """Per-job plan S_j: ordered swap/recompute/release events."""
@@ -83,12 +90,85 @@ class SchedulingPlan:
     # auditable by tests and reports
     provenance: List[Dict[str, object]] = dataclasses.field(
         default_factory=list)
+    # monotone edit counter: every event mutation (add / remove / truncate /
+    # rebase) bumps it, so derived per-plan state — the safe-point busy
+    # intervals below, the pipeline's incremental sweep caches — can key on
+    # (id(plan), version) instead of rescanning the event list.  Not
+    # serialized: a from_dict plan starts a fresh lineage at 0.
+    version: int = dataclasses.field(default=0, init=False, repr=False,
+                                     compare=False)
+    # process-unique, never-recycled identity: (uid, version) names this
+    # plan's event/release CONTENT (not its reporting metadata), which is
+    # what lets whole-report analyze results be memoized without content
+    # hashing (id() recycles addresses).  ``copy()`` shares the pair —
+    # the copy is content-identical — and the first mutation of either
+    # object forks it onto a fresh uid (copy-on-write), so an unchanged
+    # replan copy hits the same analyze memo rows as its source.
+    uid: int = dataclasses.field(default=0, init=False, repr=False,
+                                 compare=False)
+    _cow: bool = dataclasses.field(default=False, init=False, repr=False,
+                                   compare=False)
+    _busy_cache: Optional[tuple] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def __post_init__(self) -> None:
+        _PLAN_UID[0] += 1
+        self.uid = _PLAN_UID[0]
+
+    def _bump(self) -> None:
+        if self._cow:
+            _PLAN_UID[0] += 1
+            self.uid = _PLAN_UID[0]
+            self._cow = False
+        self.version += 1
 
     def add(self, ev: ScheduleEvent) -> None:
         self.events.append(ev)
+        self._bump()
 
     def remove(self, ev: ScheduleEvent) -> None:
         self.events.remove(ev)
+        self._bump()
+
+    def truncate(self, n: int) -> None:
+        """Drop events[n:] (a pass rolling back a failed attempt).  The
+        version bump keeps busy-interval and sweep caches honest — passes
+        must use this instead of ``del plan.events[n:]``."""
+        if n < len(self.events):
+            del self.events[n:]
+            self._bump()
+
+    def set_release(self, tid: str, op_idx: int) -> None:
+        """Record an early-release point.  Release entries feed the same
+        sweep caches as events, so writes go through here for the version
+        bump."""
+        self.release_after_op[tid] = op_idx
+        self._bump()
+
+    def busy_intervals(self, period: float) -> List[Tuple[float, float]]:
+        """In-flight transfer spans of this plan, projected into
+        ``[0, period)`` with the planner's PeriodicChannel wrapping.
+        Cached per (version, period): ``find_safe_points`` historically
+        rebuilt this list from scratch on every call even when the plan
+        had not changed, which dominated preemptive-replan latency."""
+        global BUSY_REBUILDS
+        key = (self.version, period)
+        if self._busy_cache is not None and self._busy_cache[0] == key:
+            return self._busy_cache[1]
+        eps = 1e-12
+        busy: List[Tuple[float, float]] = []
+        for ev in self.events:
+            if ev.event_type not in (EventType.SWAP_OUT, EventType.SWAP_IN,
+                                     EventType.RECOMPUTE):
+                continue
+            dur = ev.end - ev.start
+            if dur <= eps:
+                continue
+            busy.extend((s, e)
+                        for s, e in wrap_intervals(ev.start, dur, period))
+        BUSY_REBUILDS += 1
+        self._busy_cache = (key, busy)
+        return busy
 
     def by_type(self, et: EventType) -> List[ScheduleEvent]:
         return [e for e in self.events if e.event_type is et]
@@ -133,6 +213,12 @@ class SchedulingPlan:
         p.budget_bytes = self.budget_bytes
         p.passive_iterations = self.passive_iterations
         p.provenance = [dict(r) for r in self.provenance]
+        # content-identical: share (uid, version) until either side
+        # mutates, so analyze memo rows built for the source also serve
+        # the copy (the common no-change replan case)
+        p.uid = self.uid
+        p.version = self.version
+        p._cow = True
         return p
 
     def splice(self, new_plan: "SchedulingPlan",

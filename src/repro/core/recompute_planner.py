@@ -35,12 +35,25 @@ class RecomputeCandidate:
 
 
 class RecomputePlanner:
-    def __init__(self, seq: AccessSequence, plan: SchedulingPlan):
+    def __init__(self, seq: AccessSequence, plan: SchedulingPlan,
+                 experience=None):
         self.seq = seq
         self.plan = plan
         self.recomputed: set = {
             e.tensor_id for e in plan.events
             if e.event_type is EventType.RECOMPUTE}
+        # per-fingerprint memo of the MSPS statics (ExperienceStore
+        # attached): identical candidate stream, skips the per-call
+        # re-derivation of TGA/TUA structure for every tensor
+        self._ps = None
+        if experience is not None:
+            try:
+                self._ps = experience.pass_state(seq)
+            except Exception:   # noqa: BLE001 - corrupt store: cold path
+                self._ps = None
+        if self._ps is None:
+            from .experience import default_pass_state
+            self._ps = default_pass_state(seq)
 
     # ------------------------------------------------------------------
     def _touched(self) -> set:
@@ -70,6 +83,26 @@ class RecomputePlanner:
                 return False
         return True
 
+    def _eligible(self) -> List[tuple]:
+        """(tid, spec, tga, TUAs, recompute_time) for every activation
+        with a producer and at least one use, in ``seq.tensors`` order —
+        from the per-fingerprint memo when available."""
+        seq = self.seq
+        if self._ps is not None:
+            return self._ps.recompute_statics(seq)
+        out = []
+        for tid, spec in seq.tensors.items():
+            if spec.kind is not TensorKind.ACTIVATION:
+                continue
+            accs = seq.tensor_accesses(tid)
+            tuas = [a for a in accs if a.access_type is AccessType.TUA]
+            tga = seq.tga(tid)
+            if tga is None or len(tuas) < 1:
+                continue
+            out.append((tid, spec, tga, tuas,
+                        max(seq.operators[tga.op_idx].latency, 1e-12)))
+        return out
+
     # ------------------------------------------------------------------
     def candidates(self, report: PeakReport) -> List[RecomputeCandidate]:
         seq = self.seq
@@ -77,15 +110,9 @@ class RecomputePlanner:
         out: List[RecomputeCandidate] = []
         peak_ids = {sid for sid, j, _ in report.peak_tensors
                     if j == seq.job_id}
-        for tid, spec in seq.tensors.items():
-            if (spec.kind is not TensorKind.ACTIVATION
-                    or tid in touched or tid in self.recomputed
+        for tid, spec, tga, tuas, rec_time in self._eligible():
+            if (tid in touched or tid in self.recomputed
                     or storage_of(spec) not in peak_ids):
-                continue
-            accs = seq.tensor_accesses(tid)
-            tuas = [a for a in accs if a.access_type is AccessType.TUA]
-            tga = seq.tga(tid)
-            if tga is None or len(tuas) < 1:
                 continue
             # the release/recompute gap must cover the peak instant
             prev_end, target = None, None
@@ -101,7 +128,7 @@ class RecomputePlanner:
                 continue
             out.append(RecomputeCandidate(
                 tensor_id=tid, job_id=seq.job_id, size_bytes=spec.size_bytes,
-                recompute_time=max(seq.operators[tga.op_idx].latency, 1e-12),
+                recompute_time=rec_time,
                 release_after_op=cursor.op_idx, target_op=target.op_idx,
                 producer_op=tga.op_idx))
         out.sort(key=lambda c: -c.msps)

@@ -160,17 +160,24 @@ class SwapPlanner:
         self.max_tensor_bytes = max_tensor_bytes
         self.channel = PeriodicChannel(max(seq.iteration_time, EPS))
         self.swapped: set = set(plan.swapped_tensors())
-        self._swappable_total = max(
-            1, sum(1 for t in seq.tensors.values()
-                   if len(seq.tensor_accesses(t.tid)) >= 1))
-        # storage -> candidate tensor ids, updated-param aliases first
-        # (plan_one_swap runs once per greedy iteration over thousands of
-        # MPT entries; a per-entry full-tensor scan is quadratic)
-        self.alias_candidates: Dict[str, List[str]] = {}
-        for t in seq.tensors.values():
-            self.alias_candidates.setdefault(storage_of(t), []).append(t.tid)
-        for cands in self.alias_candidates.values():
-            cands.sort(key=lambda tid: seq.tensors[tid].updates is None)
+        # structural inputs (swappable count + storage -> candidate tensor
+        # ids, updated-param aliases first): with an ExperienceStore
+        # attached these come from its per-fingerprint JobPassState memo —
+        # identical values, skipping the O(tensors) reconstruction every
+        # replan pays (plan_one_swap runs once per greedy iteration over
+        # thousands of MPT entries; a per-entry full-tensor scan is
+        # quadratic)
+        ps = None
+        if experience is not None:
+            try:
+                ps = experience.pass_state(seq)
+            except Exception:   # noqa: BLE001 - corrupt store: cold path
+                ps = None
+        if ps is None:
+            from .experience import default_pass_state
+            ps = default_pass_state(seq)
+        self._swappable_total = ps.swappable_total
+        self.alias_candidates: Dict[str, List[str]] = ps.alias_candidates
         # re-book existing events (planner may be re-run after latency drift)
         for ev in plan.events:
             if ev.event_type in (EventType.SWAP_OUT, EventType.SWAP_IN):

@@ -1,0 +1,268 @@
+"""Vectorized-sweep equivalence and planner hot-path regression tests.
+
+The planner's event-sweep core (``peak_analysis.analyze``, the
+``WindowSweep`` incremental variant, and ``engine.find_safe_points``) is
+a vectorized numpy rewrite of the original per-event Algorithm-2 scan.
+The originals are kept verbatim as ``_reference_sweep`` /
+``_reference_safe_points``; this module pins byte-identical equivalence
+across the golden-shaped cases and random timelines — which is what
+keeps the golden seed plans stable — plus the memoization semantics the
+incremental-replan latency contract rests on (plan content identity,
+copy-on-write forking, busy-interval caching per plan version).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (MachineProfile, SchedulerConfig, analyze,
+                        build_pipeline, find_safe_points, schedule_single,
+                        vanilla_peak)
+from repro.core.engine import _reference_safe_points
+from repro.core.peak_analysis import WindowSweep, _reference_sweep
+from repro.core.plan import EventType, ScheduleEvent, SchedulingPlan
+from repro.core import plan as plan_mod
+
+from conftest import hypothesis_or_stub
+from helpers import synthetic_chain
+
+given, settings, st = hypothesis_or_stub()
+
+PROFILE = MachineProfile(host_link_bw=1e6, host_link_latency=1e-3,
+                         compute_flops=1e9, mem_bw=1e9)
+
+
+def planned_chain(n_ops=12, seed=0, latency=2.0, budget_frac=None,
+                  job_id="chain"):
+    """A chain plus a real pass-pipeline plan for it (the golden
+    ``tensile_chain`` shape when called with the defaults)."""
+    seq = synthetic_chain(n_ops=n_ops, latency=latency, seed=seed,
+                          job_id=job_id)
+    if budget_frac is None:
+        res = schedule_single(seq, profile=PROFILE)
+    else:
+        budget = int(budget_frac * vanilla_peak(seq))
+        res = build_pipeline(
+            "tensile", profile=PROFILE,
+            config=SchedulerConfig(memory_budget_bytes=budget,
+                                   max_iterations=16)).plan([seq])
+    return seq, res.plans[seq.job_id]
+
+
+def assert_same_report(got, ref):
+    """Every PeakReport field, byte-identical (lazy fields forced)."""
+    assert got.peak_bytes == ref.peak_bytes
+    assert got.peak_time == ref.peak_time
+    assert got.peak_tensors == ref.peak_tensors
+    assert got.timeline == ref.timeline
+    assert got.last_input_access == ref.last_input_access
+    assert got.per_job_peak == ref.per_job_peak
+
+
+def assert_matches_reference(seqs, plans=None, offsets=None, window=None,
+                             free_at_last_use=True):
+    got = analyze(seqs, plans=plans, offsets=offsets, window=window,
+                  free_at_last_use=free_at_last_use)
+    ref = _reference_sweep(seqs, plans=plans, offsets=offsets,
+                           window=window,
+                           free_at_last_use=free_at_last_use)
+    assert_same_report(got, ref)
+
+
+def sp_tuples(points):
+    return [(p.op_idx, p.time, p.resident_bytes) for p in points]
+
+
+# ---------------------------------------------------------------------------
+# analyze == _reference_sweep
+# ---------------------------------------------------------------------------
+
+def test_analyze_matches_reference_golden_chain():
+    seq, plan = planned_chain()
+    assert_matches_reference([seq])
+    assert_matches_reference([seq], plans={seq.job_id: plan})
+    assert_matches_reference([seq], plans={seq.job_id: plan},
+                             free_at_last_use=False)
+
+
+def test_analyze_matches_reference_windowed_and_offset():
+    seq, plan = planned_chain(n_ops=10, seed=9, latency=1.0)
+    T = seq.iteration_time
+    for window in [(0.0, T), (0.25 * T, 0.75 * T), (0.9 * T, 0.95 * T)]:
+        assert_matches_reference([seq], plans={seq.job_id: plan},
+                                 window=window)
+    other = synthetic_chain(n_ops=7, seed=4, job_id="j2")
+    assert_matches_reference([seq, other], plans={seq.job_id: plan},
+                             offsets={"j2": 0.37 * T})
+    assert_matches_reference([seq, other], plans={seq.job_id: plan},
+                             offsets={"j2": 0.37 * T},
+                             window=(0.2 * T, 1.4 * T))
+
+
+def test_analyze_matches_reference_random_timelines():
+    for seed in range(1, 7):
+        rng = np.random.default_rng(seed)
+        n_ops = int(rng.integers(2, 30))
+        seq, plan = planned_chain(
+            n_ops=n_ops, seed=seed, latency=float(rng.uniform(0.5, 3.0)),
+            budget_frac=float(rng.uniform(0.5, 0.9)))
+        plans = {seq.job_id: plan}
+        assert_matches_reference([seq], plans=plans)
+        T = seq.iteration_time
+        lo = float(rng.uniform(0, 0.8)) * T
+        hi = lo + float(rng.uniform(0.05, 0.5)) * T
+        assert_matches_reference([seq], plans=plans, window=(lo, hi))
+        assert sp_tuples(find_safe_points(seq, plan)) == \
+            sp_tuples(_reference_safe_points(seq, plan))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=24),
+       st.integers(min_value=0, max_value=10_000),
+       st.booleans())
+def test_property_analyze_matches_reference(n_ops, seed, falu):
+    seq = synthetic_chain(n_ops=n_ops, seed=seed % 997,
+                          latency=1.0 + (seed % 7) / 3.0)
+    rng = np.random.default_rng(seed)
+    seq2, plan = planned_chain(n_ops=max(2, n_ops), seed=seed % 997,
+                               latency=1.0,
+                               budget_frac=float(rng.uniform(0.4, 0.95)))
+    assert_matches_reference([seq], free_at_last_use=falu)
+    assert_matches_reference([seq2], plans={seq2.job_id: plan},
+                             free_at_last_use=falu)
+    assert sp_tuples(find_safe_points(seq2, plan,
+                                      free_at_last_use=falu)) == \
+        sp_tuples(_reference_safe_points(seq2, plan,
+                                         free_at_last_use=falu))
+
+
+# ---------------------------------------------------------------------------
+# find_safe_points == _reference_safe_points, busy-interval caching
+# ---------------------------------------------------------------------------
+
+def test_safe_points_match_reference_golden_chain():
+    seq, plan = planned_chain()
+    assert sp_tuples(find_safe_points(seq, plan)) == \
+        sp_tuples(_reference_safe_points(seq, plan))
+    # no plan / trivial sequence edges
+    assert sp_tuples(find_safe_points(seq, None)) == \
+        sp_tuples(_reference_safe_points(seq, None))
+    one = synthetic_chain(n_ops=1, job_id="one")
+    assert find_safe_points(one, None) == _reference_safe_points(one, None)
+
+
+def test_busy_intervals_built_once_per_plan_version():
+    seq, plan = planned_chain(n_ops=10, seed=9, latency=1.0)
+    assert plan.events, "needs a plan with in-flight transfers"
+    before = plan_mod.BUSY_REBUILDS
+    find_safe_points(seq, plan)
+    find_safe_points(seq, plan)
+    find_safe_points(seq, plan)
+    assert plan_mod.BUSY_REBUILDS == before + 1
+    # any content mutation bumps plan.version -> exactly one rebuild
+    ev = plan.events[0]
+    plan.add(ScheduleEvent(ev.event_type, ev.tensor_id, plan.job_id,
+                           trigger_op=ev.trigger_op, delta=ev.delta,
+                           start=ev.start, end=ev.end,
+                           size_bytes=ev.size_bytes,
+                           target_op=ev.target_op))
+    find_safe_points(seq, plan)
+    find_safe_points(seq, plan)
+    assert plan_mod.BUSY_REBUILDS == before + 2
+
+
+# ---------------------------------------------------------------------------
+# WindowSweep == windowed analyze, incrementally
+# ---------------------------------------------------------------------------
+
+def test_window_sweep_matches_windowed_analyze():
+    seq, plan = planned_chain(n_ops=10, seed=9, latency=1.0)
+    T = seq.iteration_time
+    sps = find_safe_points(seq, plan)
+    t0 = sps[len(sps) // 2].time if sps else 0.4 * T
+    ws = WindowSweep()
+    work = plan.copy()
+    assert_same_report(ws.report(seq, work, t0, T),
+                       analyze([seq], plans={seq.job_id: work},
+                               window=(t0, T)))
+    # suffix-only mutation: the frozen prefix must be reused AND the
+    # result must still equal a full windowed analyze
+    frozen = ws._frozen
+    tid = next(t for t in seq.tensors
+               if seq.tensors[t].size_bytes > 0)
+    work.add(ScheduleEvent(EventType.SWAP_OUT, tid, work.job_id,
+                           trigger_op=len(seq.operators) - 2, delta=0.0,
+                           start=t0 + 0.1, end=t0 + 0.2,
+                           size_bytes=seq.tensors[tid].size_bytes))
+    assert_same_report(ws.report(seq, work, t0, T),
+                       analyze([seq], plans={seq.job_id: work},
+                               window=(t0, T)))
+    assert ws._frozen is frozen, "prefix re-frozen on a suffix-only edit"
+
+
+# ---------------------------------------------------------------------------
+# plan content identity (copy-on-write) and the whole-report memo
+# ---------------------------------------------------------------------------
+
+def test_plan_copy_shares_identity_until_mutation():
+    p = SchedulingPlan(job_id="t")
+    p.add(ScheduleEvent(EventType.SWAP_OUT, "a", "t", trigger_op=0,
+                        delta=0.0, start=1.0, end=1.5, size_bytes=64))
+    c = p.copy()
+    assert (c.uid, c.version) == (p.uid, p.version)
+    c.add(ScheduleEvent(EventType.SWAP_IN, "a", "t", trigger_op=0,
+                        delta=0.4, start=1.9, end=2.0, size_bytes=64,
+                        target_op=1))
+    # first mutation of the copy forks it onto a fresh uid; the source's
+    # identity is untouched
+    assert c.uid != p.uid
+    assert len(p.events) == 1
+    # an un-forked mutation advances version under the same uid — every
+    # (uid, version) pair still names exactly one content state
+    uid, v = p.uid, p.version
+    p.set_release("a", 2)
+    assert p.uid == uid and p.version == v + 1
+
+
+def test_set_release_bumps_version():
+    p = SchedulingPlan(job_id="t")
+    v = p.version
+    p.set_release("a", 3)
+    assert p.release_after_op["a"] == 3 and p.version == v + 1
+
+
+def test_report_memo_hits_and_invalidates():
+    seq, plan = planned_chain(n_ops=10, seed=9, latency=1.0)
+    plans = {seq.job_id: plan}
+    r1 = analyze([seq], plans=plans)
+    assert analyze([seq], plans=plans) is r1
+    # a content-identical copy (the no-change replan case) hits the SAME
+    # memo row — this is what makes the steady-state incremental replan a
+    # pure cache lookup
+    assert analyze([seq], plans={seq.job_id: plan.copy()}) is r1
+    # event mutation invalidates...
+    ev = plan.events[0]
+    plan.add(ScheduleEvent(EventType.SWAP_OUT, ev.tensor_id, plan.job_id,
+                           trigger_op=ev.trigger_op, delta=0.0,
+                           start=ev.start + 0.01, end=ev.end + 0.01,
+                           size_bytes=ev.size_bytes))
+    r2 = analyze([seq], plans=plans)
+    assert r2 is not r1
+    assert_same_report(r2, _reference_sweep([seq], plans=plans))
+    # ...and so does a release-point edit (the VdnnSwapPass write path)
+    tid = seq.operators[0].outputs[0]
+    plan.set_release(tid, len(seq.operators) - 1)
+    r3 = analyze([seq], plans=plans)
+    assert r3 is not r2
+    assert_same_report(r3, _reference_sweep([seq], plans=plans))
+
+
+def test_report_memo_keyed_on_sequence_timeline_version():
+    seq, plan = planned_chain(n_ops=8, seed=3, latency=1.0)
+    plans = {seq.job_id: plan}
+    r1 = analyze([seq], plans=plans)
+    lat = [op.latency for op in seq.operators]
+    lat[0] += 1.0
+    seq.set_latencies(lat)
+    r2 = analyze([seq], plans=plans)
+    assert r2 is not r1
+    assert_same_report(r2, _reference_sweep([seq], plans=plans))

@@ -18,11 +18,31 @@ tool compares that file against the committed baseline
     its first iteration, and start at or below the cold run's converged
     calibration error — see ``cold_warm_contract``).
 
+The tool also gates the planner latency trajectory: ``python -m
+benchmarks.run --only planner --smoke`` writes
+``experiments/results/BENCH_planner.json`` (cold plan / incremental
+replan / warm boot wall-time per op-count, see
+``benchmarks/planner_bench.py``) and this tool diffs it against
+``benchmarks/BENCH_planner.json``:
+
+  * a per-(size, mode) row's ``ms`` regressing by more than 25 % fails
+    (rows under a 1 ms absolute floor are exempt from the relative test
+    — sub-millisecond timings cannot regress meaningfully by
+    percentage, only past the floor), and
+  * the hard latency contract on the CURRENT run: at the 10k-op row an
+    incremental replan must be at least 10x faster than a cold plan,
+    under 5 ms in the smoke environment, and warm boot must actually
+    adopt the cached plan (see ``planner_contract``).
+
+Unlike the scenario metrics, planner rows are wall-clock, so min-of-N
+timing plus the 25 % + 1 ms slack absorbs scheduler noise.
+
 Improvements and new rows never fail — they are reported and can be
 pinned with ``--update``, which copies the current metrics over the
-committed baseline.  Metrics are deterministic (the simulator runs in
-virtual time from roofline-predicted latencies), so the thresholds guard
-against real planning/engine regressions, not machine noise.
+committed baselines.  Scenario metrics are deterministic (the simulator
+runs in virtual time from roofline-predicted latencies), so their
+thresholds guard against real planning/engine regressions, not machine
+noise.
 
     PYTHONPATH=src python tools/check_bench_regression.py
     PYTHONPATH=src python tools/check_bench_regression.py --update
@@ -39,12 +59,25 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_scenarios.json")
 CURRENT = os.path.join(ROOT, "experiments", "results",
                        "BENCH_scenarios.json")
+PLANNER_BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_planner.json")
+PLANNER_CURRENT = os.path.join(ROOT, "experiments", "results",
+                               "BENCH_planner.json")
 
 PEAK_TOLERANCE = 0.10        # >10 % peak growth fails
 OVERHEAD_TOLERANCE = 0.25    # >25 % EOR / time-to-within-budget growth fails
 # overhead ratios near zero would make the relative test hair-trigger; a
 # regression below this absolute floor is ignored
 OVERHEAD_FLOOR = 0.05
+
+LATENCY_TOLERANCE = 0.25     # >25 % planner wall-time growth fails
+# wall-clock rows faster than this can't regress meaningfully by
+# percentage; only crossing the floor counts
+LATENCY_FLOOR_MS = 1.0
+# the 10k-op latency contract (ISSUE 6): incremental replan >=10x
+# faster than cold plan, and <5 ms in the smoke environment
+CONTRACT_OPS = 10000
+CONTRACT_SPEEDUP = 10.0
+CONTRACT_SMOKE_MS = 5.0
 
 
 def _rel_increase(base: float, cur: float, floor: float) -> float:
@@ -129,59 +162,150 @@ def cold_warm_contract(current: dict) -> list:
     return failures
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--update", action="store_true",
-                    help="re-pin benchmarks/BENCH_scenarios.json from the "
-                         "current run instead of diffing")
-    ap.add_argument("--baseline", default=BASELINE)
-    ap.add_argument("--current", default=CURRENT)
-    args = ap.parse_args()
+def compare_planner(baseline: dict, current: dict) -> list:
+    """Per-(size, mode) planner wall-time diff: fail when a row's ``ms``
+    grows by more than 25 % AND crosses the 1 ms absolute floor.  A row
+    disappearing from the current run fails too (an op-count tier or
+    bench mode was dropped)."""
+    failures = []
+    for key in sorted(baseline):
+        if key == "_meta":
+            continue
+        base = baseline[key]
+        cur = current.get(key)
+        if cur is None:
+            failures.append(f"planner {key}: missing from the current run "
+                            "(size or mode removed?)")
+            continue
+        # warm boot falling back to cold convergence is a functional
+        # regression even if it happens to be fast
+        if base.get("adopted") is True and cur.get("adopted") is False:
+            failures.append(f"planner {key}: warm boot no longer adopts "
+                            "the cached plan")
+        b, c = base.get("ms"), cur.get("ms")
+        if b is None or c is None:
+            continue
+        if c <= max(b, LATENCY_FLOOR_MS):
+            continue
+        inc = (c - b) / max(b, LATENCY_FLOOR_MS)
+        if inc > LATENCY_TOLERANCE:
+            failures.append(
+                f"planner {key}: latency regressed {b:.3f} ms -> "
+                f"{c:.3f} ms (+{inc:.1%}, limit {LATENCY_TOLERANCE:.0%}, "
+                f"floor {LATENCY_FLOOR_MS:g} ms)")
+    return failures
 
-    if not os.path.exists(args.current):
-        print(f"current metrics not found at {args.current}; run\n"
-              "    python -m benchmarks.run --only scenarios --smoke\n"
-              "first.")
-        return 2
 
-    with open(args.current) as f:
-        current = json.load(f)
-    baseline = None
-    if os.path.exists(args.baseline):
-        with open(args.baseline) as f:
-            baseline = json.load(f)
+def planner_contract(current: dict) -> list:
+    """The ISSUE-6 latency contract, enforced on the CURRENT run: at the
+    10k-op row an incremental replan must be >=10x faster than a cold
+    plan, under 5 ms when the run is a smoke variant, and the warm-boot
+    row must actually adopt its cached plan."""
+    failures = []
+    cold = current.get(f"{CONTRACT_OPS}/cold_plan")
+    inc = current.get(f"{CONTRACT_OPS}/incremental_replan")
+    if cold is None or inc is None:
+        failures.append(
+            f"planner contract: the {CONTRACT_OPS}-op cold_plan/"
+            "incremental_replan rows are missing — the contract size "
+            "must stay in every bench variant")
+        return failures
+    c_ms, i_ms = cold.get("ms"), inc.get("ms")
+    if c_ms and i_ms and i_ms * CONTRACT_SPEEDUP > c_ms:
+        failures.append(
+            f"planner contract: incremental replan at {CONTRACT_OPS} ops "
+            f"is only {c_ms / i_ms:.1f}x faster than a cold plan "
+            f"({i_ms:.3f} ms vs {c_ms:.3f} ms, need "
+            f">={CONTRACT_SPEEDUP:g}x)")
+    if current.get("_meta", {}).get("smoke") and i_ms is not None \
+            and i_ms > CONTRACT_SMOKE_MS:
+        failures.append(
+            f"planner contract: incremental replan at {CONTRACT_OPS} ops "
+            f"took {i_ms:.3f} ms (smoke limit {CONTRACT_SMOKE_MS:g} ms)")
+    for key, row in sorted(current.items()):
+        if key.endswith("/warm_boot") and row.get("adopted") is False:
+            failures.append(f"planner contract: {key} did not adopt the "
+                            "cached plan (warm boot fell back to cold "
+                            "convergence)")
+    return failures
 
+
+def _smoke_mismatch(baseline: dict, current: dict, bench: str) -> bool:
     # smoke and full-size metrics are different universes; refuse to diff
     # or re-pin across the two (run the variant the baseline was pinned
     # from — CI uses --smoke)
-    if baseline is not None:
-        b_smoke = baseline.get("_meta", {}).get("smoke")
-        c_smoke = current.get("_meta", {}).get("smoke")
-        if b_smoke is not None and c_smoke is not None \
-                and b_smoke != c_smoke:
-            want = "--smoke" if b_smoke else "no --smoke"
-            print(f"variant mismatch: baseline was pinned from a "
-                  f"{'smoke' if b_smoke else 'full-size'} run, current is "
-                  f"{'smoke' if c_smoke else 'full-size'}; rerun the "
-                  f"scenarios bench with {want} (or re-pin deliberately "
-                  "by deleting the baseline first).")
+    b_smoke = baseline.get("_meta", {}).get("smoke")
+    c_smoke = current.get("_meta", {}).get("smoke")
+    if b_smoke is None or c_smoke is None or b_smoke == c_smoke:
+        return False
+    want = "--smoke" if b_smoke else "no --smoke"
+    print(f"variant mismatch: the {bench} baseline was pinned from a "
+          f"{'smoke' if b_smoke else 'full-size'} run, current is "
+          f"{'smoke' if c_smoke else 'full-size'}; rerun the "
+          f"{bench} bench with {want} (or re-pin deliberately "
+          "by deleting the baseline first).")
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin the committed baselines from the current "
+                         "run instead of diffing")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--current", default=CURRENT)
+    ap.add_argument("--planner-baseline", default=PLANNER_BASELINE)
+    ap.add_argument("--planner-current", default=PLANNER_CURRENT)
+    args = ap.parse_args()
+
+    # (baseline, current, bench name, compare fn, contract fn, run hint)
+    gates = [
+        (args.baseline, args.current, "scenarios", compare,
+         cold_warm_contract, "--only scenarios --smoke"),
+        (args.planner_baseline, args.planner_current, "planner",
+         compare_planner, planner_contract, "--only planner --smoke"),
+    ]
+
+    failures: list = []
+    checked = 0
+    for base_path, cur_path, bench, cmp_fn, contract_fn, hint in gates:
+        have_baseline = os.path.exists(base_path)
+        if not os.path.exists(cur_path):
+            # a current file is only required where a baseline is
+            # committed (lets the tool run before a bench's first pin)
+            if have_baseline and not args.update:
+                print(f"current {bench} metrics not found at {cur_path}; "
+                      f"run\n    python -m benchmarks.run {hint}\nfirst.")
+                return 2
+            continue
+        with open(cur_path) as f:
+            current = json.load(f)
+        baseline = None
+        if have_baseline:
+            with open(base_path) as f:
+                baseline = json.load(f)
+            if _smoke_mismatch(baseline, current, bench):
+                return 2
+
+        if args.update:
+            shutil.copyfile(cur_path, base_path)
+            print(f"re-pinned {base_path}")
+            continue
+
+        if baseline is None:
+            print(f"no committed {bench} baseline at {base_path}; pin "
+                  "one with --update")
             return 2
 
+        failures += cmp_fn(baseline, current) + contract_fn(current)
+        new_rows = sorted(set(current) - set(baseline) - {"_meta"})
+        if new_rows:
+            print(f"note: {len(new_rows)} new {bench} row(s) not in the "
+                  f"baseline (pin with --update): {', '.join(new_rows)}")
+        checked += len([k for k in baseline if k != "_meta"])
+
     if args.update:
-        shutil.copyfile(args.current, args.baseline)
-        print(f"re-pinned {args.baseline}")
         return 0
-
-    if baseline is None:
-        print(f"no committed baseline at {args.baseline}; pin one with "
-              "--update")
-        return 2
-
-    failures = compare(baseline, current) + cold_warm_contract(current)
-    new_rows = sorted(set(current) - set(baseline) - {"_meta"})
-    if new_rows:
-        print(f"note: {len(new_rows)} new row(s) not in the baseline "
-              f"(pin with --update): {', '.join(new_rows)}")
     if failures:
         print(f"\nBENCH REGRESSION: {len(failures)} failure(s)")
         for fmsg in failures:
@@ -190,9 +314,9 @@ def main() -> int:
               "PYTHONPATH=src python tools/check_bench_regression.py "
               "--update")
         return 1
-    n_rows = len([k for k in baseline if k != "_meta"])
-    print(f"bench OK: {n_rows} rows within tolerance "
-          f"(peak +{PEAK_TOLERANCE:.0%}, overhead +{OVERHEAD_TOLERANCE:.0%})")
+    print(f"bench OK: {checked} rows within tolerance "
+          f"(peak +{PEAK_TOLERANCE:.0%}, overhead +{OVERHEAD_TOLERANCE:.0%}, "
+          f"latency +{LATENCY_TOLERANCE:.0%})")
     return 0
 
 
