@@ -6,8 +6,13 @@ loop actually sits on, against synthetic chain graphs of growing op count:
     cold_plan          — Pipeline.plan from an empty plan (Alg. 3
                          convergence, iteration-capped)
     incremental_replan — Pipeline.replan_from at a mid-iteration safe
-                         point with a shrunken slice, steady-state (the
-                         per-job WindowSweep prefix is already frozen)
+                         point with an unchanged slice, steady-state (the
+                         per-job WindowSweep prefix is already frozen) —
+                         the latency FLOOR of an arbitration tick
+    shrinking_replan   — the same safe-point replan with the slice CUT to
+                         0.9x, so eager events must be scheduled on top
+                         of the frozen sweep — the cost of a real
+                         flash-crowd tick
     warm_boot          — Pipeline.plan adopting a verified cached plan
                          from an ExperienceStore (rebase + re-verify)
 
@@ -139,6 +144,20 @@ def bench_size(n_ops: int, smoke: bool) -> Dict[str, Dict[str, float]]:
 
     ms_inc = _best_ms(incremental, inc_reps)
 
+    # -- shrinking replan (the slice is cut at the tick) ---------------
+    # the expensive half of a preemptive arbitration tick: the job's
+    # slice shrinks at the safe point, so the replan schedules eager
+    # evictions on top of the frozen prefix sweep; its latency bounds a
+    # real flash-crowd tick end to end
+    shrunk = {jid: int(budget * 0.9)}
+    rs = pipe.replan_from([seq], res.plans, step, shrunk)
+    added_shrink = rs.plans[jid].provenance[-1]["added_events"]
+
+    def shrinking():
+        pipe.replan_from([seq], res.plans, step, shrunk)
+
+    ms_shrink = _best_ms(shrinking, inc_reps)
+
     # -- warm boot (plan-cache adoption) ------------------------------
     with tempfile.TemporaryDirectory() as td:
         store = ExperienceStore(td)
@@ -167,6 +186,10 @@ def bench_size(n_ops: int, smoke: bool) -> Dict[str, Dict[str, float]]:
         f"{n}/incremental_replan": {"ms": round(ms_inc, 4), "ops": n,
                                     "safe_point": int(step),
                                     "added_events": int(added)},
+        f"{n}/shrinking_replan": {"ms": round(ms_shrink, 4), "ops": n,
+                                  "safe_point": int(step),
+                                  "budget_frac": 0.9,
+                                  "added_events": int(added_shrink)},
         f"{n}/warm_boot": {"ms": round(ms_warm, 4), "ops": n,
                            "adopted": bool(adopted)},
     }

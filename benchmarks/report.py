@@ -304,6 +304,38 @@ def paper_tables() -> str:
                 f"first-iteration calib err {w['calib_err_cold']:.2e} vs "
                 f"the cold run's converged {c['calib_err']:.2e} "
                 f"(cold started at {c['calib_err_cold']:.2f}).\n")
+        ov = sc.get("overload", {}).get("policies", {})
+        if "admission" in ov and "no-admission" in ov:
+            a, n = ov["admission"], ov["no-admission"]
+            cap = sc["overload"].get("device_budget", 0)
+            out.append(
+                "#### Overload — admission control in the service plane\n")
+            out.append(
+                "The `overload` rows gate the scheduler-as-a-service "
+                "daemon's `AdmissionQueue` (docs/architecture.md, "
+                "\"Scheduler as a service\"): staggered demand at ~2.2× "
+                "device capacity.  `admission` holds each job until its "
+                "predicted-peak reservation fits (warm fingerprints "
+                "reserve the experience store's contended-probe peak, "
+                "cold jobs the conservative cost-model bound refined "
+                "after one profiled iteration); `no-admission` starts "
+                "every job at submit time.  Reproduce: `PYTHONPATH=src "
+                "python -m benchmarks.run --only scenarios --smoke`; "
+                "CI enforces `admission_contract` via "
+                "`tools/check_bench_regression.py`.\n")
+            err = a.get("admission_max_abs_err")
+            out.append(
+                f"Admission: peak {a['peak'] / 2**20:.2f} MiB ≤ budget "
+                f"{cap / 2**20:.2f} MiB, {a['oom_events']} OOMs, "
+                f"{a['admitted_jobs']} jobs admitted with warm precision "
+                f"max |err| {err:.3f}"
+                f" (contract ≤0.15), cold bound "
+                f"{a.get('cold_bound_ratio', 0):.2f}× conservative, "
+                f"queue wait mean/max "
+                f"{a['queue_wait_mean_iters']:.2f}/"
+                f"{a['queue_wait_max_iters']:.2f} iters; no-admission "
+                f"busts the device at {n['peak'] / 2**20:.2f} MiB with "
+                f"{n['oom_events']} OOMs.\n")
     lm = _load("latency_model.json")
     if lm:
         out.append("### §IV-C — cold-start latency MLP\n")

@@ -169,6 +169,22 @@ def bench_scenarios(smoke: bool = False,
                 "calib_err": (round(m["calib_err"], 6)
                               if "calib_err" in m else None),
             }
+            # service-plane overload rows: queue-wait trajectory plus the
+            # admission contract fields (reservations never over capacity,
+            # warm-fingerprint prediction precision) the gate enforces
+            if "queue_wait_mean_iters" in m:
+                err = m.get("admission_max_abs_err")
+                gate[f"{scn}/{pol}"].update({
+                    "within_budget": m["within_budget"],
+                    "queue_wait_mean_iters":
+                        round(m["queue_wait_mean_iters"], 6),
+                    "queue_wait_max_iters":
+                        round(m["queue_wait_max_iters"], 6),
+                    "admission_max_abs_err":
+                        (round(err, 6) if err is not None else None),
+                    "admitted_over_capacity": m["admitted_over_capacity"],
+                    "admitted_jobs": m["admitted_jobs"],
+                })
         # cold-vs-warm rows: the experience plane's warm-boot dominance
         # fields (calib_err_first, within-budget/OOM-free first iteration,
         # plan-cache hit) — tools/check_bench_regression.py enforces the

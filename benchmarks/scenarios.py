@@ -25,6 +25,13 @@ Scenarios (all ≥ 2 concurrent jobs, all dynamic):
                        high-priority job arrives late and must still get
                        its weighted share
     bursty             a burst of small jobs interferes with one big job
+    overload           sustained demand beyond device capacity; the service
+                       plane's AdmissionQueue holds jobs until their
+                       predicted peak (ExperienceStore fingerprint, else a
+                       conservative cost-model bound) fits the unreserved
+                       capacity — measuring queue wait, admission precision
+                       (predicted vs measured peak), fairness over
+                       slowdowns, and zero OOMs
 
 Preemption scenarios (arbiter mode "boundary" vs "preempt", measuring
 **time-to-within-budget** — how long after a burst the device budget is
@@ -65,6 +72,7 @@ from repro.core import (BudgetArbiter, CostModel, DeviceCalibration,
                         PlanUpdate, SchedulerConfig, SchedulingPlan,
                         TelemetryHub, analyze, build_pipeline,
                         find_safe_points, simulate)
+from repro.service import AdmissionQueue, JobSpec
 
 # the CPU-sized MLP device class used by the system tests: fast to capture,
 # slow enough per-op that swaps have real windows
@@ -128,13 +136,23 @@ SHAPES = {
 }
 
 
-@dataclasses.dataclass
-class JobSpec:
-    job_id: str
-    size: str                 # key into SHAPES
-    offset_frac: float        # launch time, in mean-iteration units
-    iterations: int
-    priority: float = 1.0
+def _job(job_id: str, size: str, offset_frac: float, iterations: int,
+         priority: Optional[float] = None) -> JobSpec:
+    """Scenario shorthand over the service-plane ``JobSpec`` wire format:
+    the job is the registered ``"mlp"`` workload at a size class, arriving
+    at ``offset_frac`` mean-iterations.  The scenario runners map the size
+    class through ``SHAPES`` (smoke-aware) themselves."""
+    return JobSpec(job_id, workload="mlp", workload_params={"size": size},
+                   offset_frac=offset_frac, iterations=iterations,
+                   priority=priority)
+
+
+def _size_of(js: JobSpec) -> str:
+    return js.workload_params["size"]
+
+
+def _priority_of(js: JobSpec) -> float:
+    return js.priority if js.priority is not None else 1.0
 
 
 @dataclasses.dataclass
@@ -150,32 +168,32 @@ SCENARIOS: List[Scenario] = [
     Scenario(
         name="staggered",
         description="three equal jobs launched half-an-iteration apart",
-        jobs=[JobSpec("s0", "medium", 0.0, 3),
-              JobSpec("s1", "medium", 0.5, 3),
-              JobSpec("s2", "medium", 1.0, 3)],
+        jobs=[_job("s0", "medium", 0.0, 3),
+              _job("s1", "medium", 0.5, 3),
+              _job("s2", "medium", 1.0, 3)],
         arbiter_policy="equal"),
     Scenario(
         name="churn",
         description="short jobs join and leave around a long-running job; "
                     "finished jobs' budgets are reclaimed and redistributed",
-        jobs=[JobSpec("long", "medium", 0.0, 4),
-              JobSpec("short0", "small", 0.2, 1),
-              JobSpec("short1", "small", 0.8, 1),
-              JobSpec("late", "medium", 1.6, 2)],
+        jobs=[_job("long", "medium", 0.0, 4),
+              _job("short0", "small", 0.2, 1),
+              _job("short1", "small", 0.8, 1),
+              _job("late", "medium", 1.6, 2)],
         arbiter_policy="peak"),
     Scenario(
         name="priority-inversion",
         description="low-priority memory hogs start first; a high-priority "
                     "job arrives late and must still get its weighted share",
-        jobs=[JobSpec("hog0", "large", 0.0, 3, priority=1.0),
-              JobSpec("hog1", "large", 0.15, 3, priority=1.0),
-              JobSpec("vip", "medium", 0.6, 2, priority=4.0)],
+        jobs=[_job("hog0", "large", 0.0, 3, priority=1.0),
+              _job("hog1", "large", 0.15, 3, priority=1.0),
+              _job("vip", "medium", 0.6, 2, priority=4.0)],
         arbiter_policy="priority"),
     Scenario(
         name="bursty",
         description="a burst of small jobs interferes with one big job",
-        jobs=[JobSpec("big", "large", 0.0, 4)] + [
-            JobSpec(f"burst{i}", "small", 0.5 + 0.08 * i, 1)
+        jobs=[_job("big", "large", 0.0, 4)] + [
+            _job(f"burst{i}", "small", 0.5 + 0.08 * i, 1)
             for i in range(4)],
         arbiter_policy="equal"),
 ]
@@ -460,8 +478,8 @@ COLD_WARM = ColdWarmScenario(
                 "scratch, first iteration unscheduled) and against the "
                 "store the cold run populated (warm: persisted "
                 "calibration, verified cached plan from iteration 0)",
-    jobs=[JobSpec("mix0", "medium", 0.0, 3),
-          JobSpec("mix1", "small", 0.4, 3)])
+    jobs=[_job("mix0", "medium", 0.0, 3),
+          _job("mix1", "small", 0.4, 3)])
 
 
 def _relatency(seq, cm: CostModel) -> None:
@@ -485,7 +503,7 @@ def run_cold_warm_scenario(scn: ColdWarmScenario, smoke: bool = False,
 
     base: Dict[str, object] = {}
     for js in scn.jobs:
-        shape, batch = SHAPES[js.size][smoke]
+        shape, batch = SHAPES[_size_of(js)][smoke]
         base[js.job_id] = _mlp_seq(tuple(shape), batch).clone(js.job_id)
     seqs = list(base.values())
     mean_T = sum(s.iteration_time for s in seqs) / len(seqs)
@@ -709,7 +727,7 @@ def _build_jobs(scn: Scenario, smoke: bool):
     seqs, offsets, iters, prios = [], {}, {}, {}
     mean_T = 0.0
     for js in scn.jobs:
-        shape, batch = SHAPES[js.size][smoke]
+        shape, batch = SHAPES[_size_of(js)][smoke]
         seq = _mlp_seq(tuple(shape), batch).clone(js.job_id)
         seqs.append(seq)
         mean_T += seq.iteration_time
@@ -717,7 +735,7 @@ def _build_jobs(scn: Scenario, smoke: bool):
     for js, seq in zip(scn.jobs, seqs):
         offsets[js.job_id] = js.offset_frac * mean_T
         iters[js.job_id] = js.iterations
-        prios[js.job_id] = js.priority
+        prios[js.job_id] = _priority_of(js)
     return seqs, offsets, iters, prios
 
 
@@ -798,6 +816,300 @@ def run_scenario(scn: Scenario, smoke: bool = False,
     return rec
 
 
+# ----------------------------------------------------------------------
+# Overload: admission control under sustained demand beyond capacity
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class OverloadScenario:
+    """More demand than the device can ever hold at once.  Jobs are held in
+    the service plane's ``AdmissionQueue`` and admitted only when their
+    predicted peak fits the unreserved capacity: warm size classes predict
+    from an ``ExperienceStore`` fingerprint a probe run populated, cold
+    classes get the conservative no-free cost-model bound, refined to the
+    measured peak after the job's first iteration (freeing headroom that
+    admits waiting jobs).  The replay is virtual-time and deterministic —
+    the exact admission policy the live daemon runs, minus wall clocks."""
+
+    name: str
+    description: str
+    jobs: List[JobSpec]            # offset_frac = submission time
+    warm_sizes: Tuple[str, ...]    # size classes probed into the store
+    capacity_frac: float           # capacity / sum of predicted peaks
+    arbiter_policy: str = "priority"
+
+
+OVERLOAD = OverloadScenario(
+    name="overload",
+    description="sustained demand beyond device capacity: eight jobs submit "
+                "within one iteration; the admission queue holds them until "
+                "their predicted peak (experience fingerprint, else a "
+                "conservative cost-model bound refined after one profiled "
+                "iteration) fits the unreserved capacity",
+    jobs=[_job("o0", "large", 0.0, 2),
+          _job("o1", "medium", 0.1, 2),
+          _job("o2", "medium", 0.2, 2),
+          _job("o3", "small", 0.3, 2),           # cold: conservative bound
+          _job("o4", "large", 0.4, 2, priority=2.0),
+          _job("o5", "medium", 0.5, 2),
+          _job("o6", "medium", 0.6, 2),
+          _job("o7", "large", 0.7, 2)],
+    warm_sizes=("medium", "large"),
+    capacity_frac=0.45)
+
+# admission keeps this fraction of device capacity unreserved, absorbing
+# plan-vs-run drift so certified per-job peaks never sum past the device
+ADMISSION_HEADROOM = 0.03
+# reservations are taken at predicted * (1 + margin): the prediction is the
+# experience-measured peak; the margin absorbs residual DMA-contention
+# drift between the probed mix and the live one
+RESERVE_MARGIN = 0.10
+
+
+def _admission_replay(capacity: int, order: List[str],
+                      submit: Dict[str, float], predicted: Dict[str, int],
+                      sources: Dict[str, str], prios: Dict[str, float],
+                      durations: Dict[str, float],
+                      first_iter: Dict[str, float],
+                      measured: Optional[Dict[str, int]] = None):
+    """Deterministic virtual-time replay of the admission queue.
+
+    Events: job submissions, reservation refinements (one iteration after
+    admission, when ``measured`` peaks are known from a prior pass), and
+    job finishes.  After every event the queue admits whatever fits.
+    Returns (admit_times, queue) — the queue carries the reservation
+    high-water mark and admission log for the CI contract."""
+    q = AdmissionQueue(capacity)
+    events: List[Tuple[float, int, str, str]] = [
+        (submit[j], i, "submit", j) for i, j in enumerate(order)]
+    admit: Dict[str, float] = {}
+    n = len(order)
+    while events:
+        events.sort()
+        t, _, kind, jid = events.pop(0)
+        if kind == "submit":
+            q.push(jid, predicted[jid], priority=prios[jid],
+                   source=sources[jid], enqueued_at=t)
+        elif kind == "refine" and measured is not None \
+                and measured.get(jid, 0) > 0:
+            q.refine(jid, measured[jid])
+        elif kind == "finish":
+            q.release(jid)
+        for job in q.pop_admissible(t):
+            admit[job.job_id] = t
+            n += 1
+            events.append((t + durations[job.job_id], n, "finish",
+                           job.job_id))
+            if measured is not None:
+                n += 1
+                events.append((t + first_iter[job.job_id], n, "refine",
+                               job.job_id))
+    return admit, q
+
+
+def run_overload_scenario(scn: OverloadScenario, smoke: bool = False) -> Dict:
+    base: Dict[str, object] = {}
+    for js in scn.jobs:
+        shape, batch = SHAPES[_size_of(js)][smoke]
+        base[js.job_id] = _mlp_seq(tuple(shape), batch).clone(js.job_id)
+    order = [js.job_id for js in scn.jobs]
+    seqs = [base[j] for j in order]
+    mean_T = sum(s.iteration_time for s in seqs) / len(seqs)
+    submit = {js.job_id: js.offset_frac * mean_T for js in scn.jobs}
+    iters = {js.job_id: js.iterations for js in scn.jobs}
+    prios = {js.job_id: _priority_of(js) for js in scn.jobs}
+    T = {j: base[j].iteration_time for j in order}
+
+    # ---- warm phase: probe each warm size class solo, distill into a
+    # scratch experience store (fingerprints are structural, so one probe
+    # covers every job instance of that class)
+    store = ExperienceStore(tempfile.mkdtemp(prefix="tensile-overload-"),
+                            device_id="scenario-device")
+    for size in scn.warm_sizes:
+        shape, batch = SHAPES[size][smoke]
+        probe = _mlp_seq(tuple(shape), batch).clone(f"warm-{size}")
+        plan_budget = None
+        for _ in range(3):      # converge budget -> simulated peak
+            cfg = SchedulerConfig(memory_budget_bytes=plan_budget)
+            res_p = build_pipeline("tensile+autoscale", profile=PROFILE,
+                                   config=cfg).plan([probe])
+            sim_p = simulate([probe],
+                             {probe.job_id: res_p.plans[probe.job_id].copy()},
+                             PROFILE, iterations=1)
+            nxt = int(sim_p.peak_bytes * 1.03)
+            if plan_budget is not None and nxt <= plan_budget:
+                break
+            plan_budget = nxt
+        # the peak the store remembers is measured CONTENDED: two clones of
+        # the class share the device half-an-iteration apart, both planned
+        # against the converged solo budget — a multi-tenant daemon's prior
+        # runs are contended, and contention-delayed swap-outs are what
+        # make a solo-probed peak underpredict the live mix
+        mate = _mlp_seq(tuple(shape), batch).clone(f"warm2-{size}")
+        duo_offsets = {probe.job_id: 0.0,
+                       mate.job_id: 0.5 * probe.iteration_time}
+        cfg_d = SchedulerConfig(
+            memory_budget_bytes=2 * plan_budget,
+            per_job_budget_bytes={probe.job_id: plan_budget,
+                                  mate.job_id: plan_budget})
+        res_d = build_pipeline("tensile+autoscale", profile=PROFILE,
+                               config=cfg_d).plan([probe, mate],
+                                                  offsets=duo_offsets)
+        hub_p = TelemetryHub(clock="virtual")
+        eng_p = MemoryEngine(PROFILE)
+        sim_d = simulate([probe, mate],
+                         {j: p.copy() for j, p in res_d.plans.items()},
+                         PROFILE, iterations={probe.job_id: 2,
+                                              mate.job_id: 2},
+                         offsets=duo_offsets, engine=eng_p, telemetry=hub_p)
+        store.record_job(store.fingerprint(probe), seq=probe, hub=hub_p,
+                         job_id=probe.job_id,
+                         plan=res_p.plans[probe.job_id],
+                         pipeline="tensile+autoscale",
+                         peak_bytes=max(sim_d.per_job_peak.values()))
+    store.flush()
+
+    # ---- admission predictions: experience for warm fingerprints, the
+    # conservative no-free bound for cold ones (the daemon's predict_peak)
+    predicted: Dict[str, int] = {}
+    sources: Dict[str, str] = {}
+    for j in order:
+        prior = store.predicted_peak(base[j])
+        if prior is not None:
+            predicted[j], sources[j] = prior
+        else:
+            predicted[j] = int(analyze([base[j]],
+                                       free_at_last_use=False).peak_bytes)
+            sources[j] = "cost-model"
+    # reservations carry the drift margin; the planning budget stays at the
+    # raw prediction (planning to the margin would waste device memory)
+    reserve = {j: int(predicted[j] * (1.0 + RESERVE_MARGIN)) for j in order}
+    # floored so the largest reservation still fits the admission
+    # capacity after headroom — overload means waiting, not rejection
+    capacity = max(int(sum(predicted.values()) * scn.capacity_frac),
+                   int(max(reserve.values())
+                       / (1.0 - ADMISSION_HEADROOM)) + 1)
+    adm_capacity = int(capacity * (1.0 - ADMISSION_HEADROOM))
+
+    # vanilla normalizer: every job starts at its SUBMIT time, nothing
+    # freed before iteration end — what an unmanaged device would attempt
+    vanilla = simulate(seqs, None, PROFILE, iterations=iters,
+                       offsets=submit, free_at_last_use=False,
+                       job_lifecycle=True)
+
+    # ---- admission replay + planned sim, iterated to a fixed point: the
+    # replay needs per-job durations, which depend on admission times.
+    # Pass 1 estimates durations from solo iteration times; later passes
+    # use the previous sim's measured finishes and refine cold
+    # reservations from measured peaks.  Deterministic throughout.
+    durations = {j: iters[j] * T[j] for j in order}
+    first_iter = dict(T)
+    measured: Optional[Dict[str, int]] = None
+    admit: Dict[str, float] = {}
+    for _pass in range(6):
+        prev_admit = dict(admit)
+        admit, q = _admission_replay(adm_capacity, order, submit, reserve,
+                                     sources, prios, durations, first_iter,
+                                     measured)
+        budgets = {j: min(predicted[j], adm_capacity) for j in order}
+        cfg = SchedulerConfig(memory_budget_bytes=capacity,
+                              per_job_budget_bytes=budgets,
+                              job_priorities=dict(prios))
+        res = build_pipeline("tensile+autoscale", profile=PROFILE,
+                             config=cfg).plan(seqs, offsets=admit)
+        hub = TelemetryHub(clock="virtual")
+        eng = MemoryEngine(PROFILE, capacity_bytes=capacity)
+        sim = simulate(seqs, {j: res.plans[j].copy() for j in order},
+                       PROFILE, iterations=iters, offsets=admit,
+                       job_lifecycle=True, engine=eng, telemetry=hub)
+        measured = {j: sim.per_job_peak.get(j, 0) for j in order}
+        durations = {}
+        for j in order:
+            tl = eng.ledger.job_timeline.get(j, [])
+            end = tl[-1][0] if tl else admit[j] + iters[j] * T[j]
+            durations[j] = max(end - admit[j], T[j])
+        if prev_admit == admit:
+            break
+
+    # ---- no-admission baseline: same plans, but every job starts the
+    # moment it is submitted — reservations ignored, capacity busted
+    hub0 = TelemetryHub(clock="virtual")
+    eng0 = MemoryEngine(PROFILE, capacity_bytes=capacity)
+    sim0 = simulate(seqs, {j: res.plans[j].copy() for j in order},
+                    PROFILE, iterations=iters, offsets=submit,
+                    job_lifecycle=True, engine=eng0, telemetry=hub0)
+
+    waits = {j: admit[j] - submit[j] for j in order}
+    wait_iters = {j: waits[j] / T[j] for j in order}
+    # fairness over per-job slowdowns (wait+run)/run — 1.0 = every job
+    # delayed in equal proportion
+    slowdown = {j: (waits[j] + durations[j]) / max(durations[j], 1e-12)
+                for j in order}
+    warm = [j for j in order if sources[j].startswith("experience")]
+    cold = [j for j in order if not sources[j].startswith("experience")]
+    prec = {j: abs(predicted[j] - measured[j]) / max(measured[j], 1)
+            for j in warm}
+    bound_ratio = {j: predicted[j] / max(measured[j], 1) for j in cold}
+
+    def _row(s, e, h, queue_stats):
+        return {
+            "peak": s.peak_bytes,
+            "within_budget": bool(s.peak_bytes <= capacity),
+            "oom_events": e.ledger.oom_events,
+            "MSR": s.msr(vanilla), "EOR": s.eor(vanilla),
+            "CBR": s.cbr(vanilla),
+            "time": s.total_time,
+            "per_job_peak": dict(s.per_job_peak),
+            "swap_conflicts": s.swap_conflicts,
+            "passive_swap_ins": s.passive_swap_ins,
+            "measured_eor": max((h.measured_eor(j) for j in order),
+                                default=0.0),
+            **queue_stats,
+            **_calibration_metrics(h),
+        }
+
+    rec = {
+        "description": scn.description,
+        "device_budget": capacity,
+        "admission_capacity": adm_capacity,
+        "vanilla_peak": vanilla.peak_bytes,
+        "arbiter_policy": scn.arbiter_policy,
+        "jobs": {j: {"offset": submit[j], "iterations": iters[j],
+                     "priority": prios[j], "budget": budgets[j],
+                     "predicted_peak": predicted[j],
+                     "predicted_source": sources[j],
+                     "admitted_at": admit[j],
+                     "queue_wait_iters": wait_iters[j]}
+                 for j in order},
+        "policies": {},
+    }
+    rec["policies"]["admission"] = _row(sim, eng, hub, {
+        "fairness": jain_fairness(slowdown),
+        "queue_wait_mean_iters": sum(wait_iters.values()) / len(order),
+        "queue_wait_max_iters": max(wait_iters.values()),
+        "admission_max_abs_err": max(prec.values()) if prec else 0.0,
+        "admission_mean_abs_err": (sum(prec.values()) / len(prec))
+        if prec else 0.0,
+        "cold_bound_ratio": max(bound_ratio.values()) if bound_ratio else 0.0,
+        "max_reserved_bytes": q.max_reserved_bytes,
+        "max_reserved_frac": q.max_reserved_bytes / capacity,
+        "admitted_over_capacity": int(q.max_reserved_bytes > adm_capacity),
+        "admitted_jobs": len(admit),
+    })
+    rec["policies"]["no-admission"] = _row(sim0, eng0, hub0, {
+        "fairness": jain_fairness({j: 1.0 for j in order}),
+        "queue_wait_mean_iters": 0.0,
+        "queue_wait_max_iters": 0.0,
+        "admission_max_abs_err": None,
+        "admission_mean_abs_err": None,
+        "cold_bound_ratio": None,
+        "max_reserved_bytes": 0,
+        "max_reserved_frac": 0.0,
+        "admitted_over_capacity": 0,
+        "admitted_jobs": len(order),
+    })
+    return rec
+
+
 def _json_safe(obj):
     """Replace non-finite floats (ttwb=inf == "never recovered") with
     None: `Infinity` is not valid RFC-8259 JSON and would break strict
@@ -813,7 +1125,7 @@ def _json_safe(obj):
 
 def run(out_json: Optional[str] = None, smoke: bool = False,
         policies=POLICIES, preemption: bool = True,
-        cold_warm: bool = True,
+        cold_warm: bool = True, overload: bool = True,
         experience_dir: Optional[str] = None) -> Dict[str, Dict]:
     table = {scn.name: run_scenario(scn, smoke=smoke, policies=policies)
              for scn in SCENARIOS}
@@ -823,6 +1135,8 @@ def run(out_json: Optional[str] = None, smoke: bool = False,
     if cold_warm:
         table[COLD_WARM.name] = run_cold_warm_scenario(
             COLD_WARM, smoke=smoke, experience_dir=experience_dir)
+    if overload:
+        table[OVERLOAD.name] = run_overload_scenario(OVERLOAD, smoke=smoke)
     if out_json:
         with open(out_json, "w") as f:
             json.dump(_json_safe(table), f, indent=1)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import (GlobalController, MachineProfile, SchedulerConfig,
                         format_bytes)
 from repro.optim.adam import adamw_init, adamw_update
+from repro.service import JobSpec
 
 
 def make_mlp_job(key, sizes, batch):
@@ -62,7 +63,8 @@ def main():
               ([64, 1024, 4], 16)]            # job 2: squat
     for j, (sizes, batch) in enumerate(shapes):
         p, o, d = make_mlp_job(jax.random.PRNGKey(j), sizes, batch)
-        h = gc.launch(train_step, p, o, d, job_id=f"job{j}", iterations=3)
+        h = gc.submit(JobSpec(f"job{j}", iterations=3,
+                              payload=(train_step, p, o, d)))
         print(f"launched {h.job_id}: {len(h.seq.operators)} ops, "
               f"{format_bytes(h.seq.total_tensor_bytes())} tensors")
 

@@ -44,7 +44,8 @@ from .jax_integration import (TensileDecisions, backend_supports_memory_kinds,
                               checkpoint_name, make_remat_policy,
                               plan_decisions, schedule_for_budget)
 from .multiplexer import (ARBITER_MODES, ARBITER_POLICIES, BudgetArbiter,
-                          GlobalController, JobFailedError, JobHandle)
+                          CapturedJob, GlobalController, JobFailedError,
+                          JobHandle)
 from .passes import (PIPELINES, BudgetAutoscalePass, CompressedOffloadPass,
                      PassiveProfilePass, Pipeline, PlanningPass,
                      PreemptiveReplanPass, PriorityPass, RecomputePass,

@@ -685,6 +685,28 @@ class ExperienceStore:
         entry = self.get(self.fingerprint(seq))
         return entry.telemetry if entry is not None else None
 
+    def predicted_peak(self, seq: AccessSequence
+                       ) -> Optional[Tuple[int, str]]:
+        """Peak-prediction query for admission control: the best stored
+        estimate of this job's peak bytes, with its provenance.
+
+        Preference order: the *measured* peak a prior run's telemetry
+        distilled (``"experience"``), else the smallest *certified* peak
+        among stored verified plans (``"experience-plan"``).  Returns None
+        for an unknown fingerprint — admission then falls back to the cost
+        model's conservative bound (``GlobalController.predict_peak``)."""
+        entry = self.get(self.fingerprint(seq))
+        if entry is None:
+            return None
+        ts = entry.telemetry
+        if ts is not None and ts.peak_bytes > 0:
+            return int(ts.peak_bytes), "experience"
+        certified = [r.peak_bytes for r in entry.plans.values()
+                     if r.peak_bytes > 0]
+        if certified:
+            return int(min(certified)), "experience-plan"
+        return None
+
     # -- recording (in-memory until flush) -----------------------------
     def record_job(self, fp: str, *, seq: AccessSequence, hub, job_id: str,
                    plan: Optional[SchedulingPlan] = None,

@@ -39,7 +39,8 @@ import dataclasses
 import threading
 import time as _time
 import traceback
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .access import AccessSequence
 from .cost_model import CostModel, EWMATracker
@@ -98,10 +99,27 @@ class JobHandle:
     executor: Optional[Any] = None
     # (plan_version, safe_op) of every preemptive hot-swap requested
     preemptions: List[Any] = dataclasses.field(default_factory=list)
+    # the JobSpec this handle was submitted with (None only for handles
+    # built outside the submit() path)
+    spec: Optional[Any] = None
 
     @property
     def budget_bytes(self) -> Optional[int]:
         return self.ledger_view.budget_bytes if self.ledger_view else None
+
+
+@dataclasses.dataclass
+class CapturedJob:
+    """A JobSpec resolved and captured: everything admission + submit need.
+
+    Produced by ``GlobalController.capture_spec`` so the service daemon can
+    predict a job's peak (``predict_peak``) *before* committing to
+    ``submit`` — capture once, admit, then run from the same capture."""
+
+    seq: AccessSequence
+    closed_jaxpr: Any
+    args: Tuple[Any, Any, Any]
+    fingerprint: Optional[str] = None
 
 
 # ----------------------------------------------------------------------
@@ -386,52 +404,122 @@ class GlobalController:
         self.preempt_failures: List[tuple] = []
 
     # ------------------------------------------------------------------
-    def launch(self, step_fn: Callable, params, opt_state, batch,
-               job_id: str, iterations: int = 3,
-               schedule: bool = True,
-               priority: Optional[float] = None) -> JobHandle:
-        """Register + start a training job (async, like the paper's
-        sub-process per Executor).  `priority` feeds the BudgetArbiter's
-        priority-weighted policy and PriorityPass victim ordering; when
-        omitted, a priority configured in SchedulerConfig.job_priorities
-        (else 1.0) applies."""
+    def capture_spec(self, spec) -> CapturedJob:
+        """Admission hook #1: resolve a ``JobSpec`` and capture its graph.
+
+        Resolution goes through ``repro.service.workloads`` (in-process
+        ``spec.payload`` wins; otherwise the registered / importable
+        workload factory named by ``spec.workload``).  The capture is
+        reusable: the daemon captures once, predicts the peak, and hands
+        the same ``CapturedJob`` to ``submit`` after admission."""
+        from ..service.workloads import resolve_workload
+        step_fn, params, opt_state, batch = resolve_workload(spec)
         # reflect current device contention into cold-start predictions
         self.cost_model.utilization = min(
             0.9, 0.3 * sum(1 for j in self.jobs.values() if not j.done))
         seq, closed = capture_train_step(
-            step_fn, params, opt_state, batch, job_id=job_id,
+            step_fn, params, opt_state, batch, job_id=spec.job_id,
             cost_model=self.cost_model)
+        fp = spec.fingerprint
+        if self.experience is not None:
+            try:
+                fp = self.experience.fingerprint(seq)
+            except Exception as e:  # noqa: BLE001 - cold boot instead
+                self.experience_failures.append((spec.job_id, e))
+        return CapturedJob(seq=seq, closed_jaxpr=closed,
+                           args=(params, opt_state, batch), fingerprint=fp)
+
+    # ------------------------------------------------------------------
+    def predict_peak(self, seq: AccessSequence,
+                     budget_hint_bytes: Optional[int] = None
+                     ) -> Tuple[int, str]:
+        """Admission hook #2: predicted peak bytes for a captured job,
+        with its provenance (``"experience"`` or ``"cost-model"``).
+
+        A warm fingerprint returns the measured peak a prior run distilled
+        into the ``ExperienceStore``.  Unknown fingerprints get the
+        conservative no-free bound from the analyzer (every tensor held to
+        its last use), optionally raised to the caller's budget hint — an
+        upper bound the admission queue refines from the first profiled
+        iteration's measured peak."""
+        if self.experience is not None:
+            try:
+                prior = self.experience.predicted_peak(seq)
+                if prior is not None:
+                    return prior
+            except Exception:  # noqa: BLE001 - fall through to cost model
+                pass
+        bound = int(analyze([seq], free_at_last_use=False).peak_bytes)
+        if budget_hint_bytes:
+            bound = max(bound, int(budget_hint_bytes))
+        return bound, "cost-model"
+
+    # ------------------------------------------------------------------
+    def submit(self, spec, captured: Optional[CapturedJob] = None
+               ) -> JobHandle:
+        """Register + start a job from a ``JobSpec`` (async, like the
+        paper's sub-process per Executor).  The single submission entry
+        point shared by in-process callers, the scheduler daemon, and the
+        benchmark suite.  ``spec.priority`` feeds the BudgetArbiter's
+        priority-weighted policy and PriorityPass victim ordering; when
+        None, a priority configured in SchedulerConfig.job_priorities
+        (else 1.0) applies.  Pass ``captured`` to reuse a
+        ``capture_spec`` result (the daemon captures before admission)."""
+        if captured is None:
+            captured = self.capture_spec(spec)
+        seq, closed = captured.seq, captured.closed_jaxpr
         with self._lock:
-            self.scheduler.register_job(seq, priority=priority)
-            eff_priority = self.scheduler.priority_of(job_id)
-            handle = JobHandle(job_id=job_id, seq=seq, closed_jaxpr=closed,
-                               args=(params, opt_state, batch),
-                               iterations=iterations, priority=eff_priority)
-            self.jobs[job_id] = handle
-            self.ewma[job_id] = EWMATracker(
+            if spec.job_id in self.jobs and not self.jobs[spec.job_id].done:
+                raise ValueError(f"job {spec.job_id!r} is already live")
+            self.scheduler.register_job(seq, priority=spec.priority)
+            eff_priority = self.scheduler.priority_of(spec.job_id)
+            handle = JobHandle(job_id=spec.job_id, seq=seq,
+                               closed_jaxpr=closed, args=captured.args,
+                               iterations=spec.iterations,
+                               priority=eff_priority, spec=spec,
+                               fingerprint=captured.fingerprint)
+            self.jobs[spec.job_id] = handle
+            self.ewma[spec.job_id] = EWMATracker(
                 alpha=self.scheduler.config.ewma_alpha)
             if self.arbiter is not None:
                 # peak demand: predicted vanilla peak until measurements land
                 demand = analyze([seq], free_at_last_use=False).peak_bytes
-                self.arbiter.register(job_id, priority=eff_priority,
+                self.arbiter.register(spec.job_id, priority=eff_priority,
                                       demand_bytes=demand)
             if self.experience is not None:
                 # experience priors: a prior run's distilled telemetry
                 # for this fingerprint stands in for live samples the
                 # job has not produced yet (eor-learned / peak policies)
                 try:
-                    handle.fingerprint = self.experience.fingerprint(seq)
                     prior = self.experience.prior(seq)
                     if prior is not None and self.arbiter is not None:
-                        self.arbiter.set_prior(job_id, prior)
+                        self.arbiter.set_prior(spec.job_id, prior)
                 except Exception as e:  # noqa: BLE001 - cold boot instead
-                    self.experience_failures.append((job_id, e))
-            if schedule:
+                    self.experience_failures.append((spec.job_id, e))
+            if spec.schedule:
                 self._replan()
         t = threading.Thread(target=self._run_job, args=(handle,), daemon=True)
         handle.thread = t
         t.start()
         return handle
+
+    # ------------------------------------------------------------------
+    def launch(self, step_fn: Callable, params, opt_state, batch,
+               job_id: str, iterations: int = 3,
+               schedule: bool = True,
+               priority: Optional[float] = None) -> JobHandle:
+        """Deprecated shim over :meth:`submit` — build a ``JobSpec`` with
+        an in-process payload and submit it.  Kept one release for
+        out-of-repo callers; everything in-repo uses ``submit``."""
+        warnings.warn(
+            "GlobalController.launch(step_fn, ...) is deprecated; build a "
+            "repro.service.JobSpec and call GlobalController.submit(spec)",
+            DeprecationWarning, stacklevel=2)
+        from ..service.jobspec import JobSpec
+        spec = JobSpec(job_id=job_id, iterations=iterations,
+                       schedule=schedule, priority=priority,
+                       payload=(step_fn, params, opt_state, batch))
+        return self.submit(spec)
 
     # ------------------------------------------------------------------
     def _replan(self) -> None:

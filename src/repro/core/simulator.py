@@ -121,6 +121,7 @@ class _JobClock:
         self.canceled_tokens: set = set()
         # async swap-outs still in flight (a safe-point splice must wait)
         self.inflight_out = 0
+        self.arrived = False    # job_lifecycle: initial residents landed
         self.updates = sorted(updates or [], key=lambda u: u.at_time)
 
 
@@ -130,6 +131,7 @@ def simulate(seqs: Sequence[AccessSequence],
              iterations: Union[int, Dict[str, int]] = 2,
              offsets: Optional[Dict[str, float]] = None,
              free_at_last_use: bool = True,
+             job_lifecycle: bool = False,
              transfer_mode: str = "async",
              engine: Optional[MemoryEngine] = None,
              plan_updates: Optional[Dict[str, List[PlanUpdate]]] = None,
@@ -150,7 +152,19 @@ def simulate(seqs: Sequence[AccessSequence],
     can be exercised against the simulator.
 
     `free_at_last_use=False` reproduces the vanilla platform (nothing is
-    released before iteration end — paper §V-A normalizer)."""
+    released before iteration end — paper §V-A normalizer).
+
+    `job_lifecycle=True` models each job as a process with a lifetime:
+    its initial residents are allocated when it ARRIVES (at its offset, in
+    event order — not eagerly at sim construction, which would count a
+    late-admitted job's parameters against the device from t=0), and when
+    it completes its final iteration every byte it still holds is
+    returned, with in-flight transfers landing as no-ops.  Service-plane
+    scenarios need this — admission takes a job's reservation at admit
+    time and releases it at exit, so the modeled device must do the same.
+    Default off: the legacy accounting (eager initial residency, residual
+    bytes after finish) is what every pre-existing benchmark row was
+    recorded under."""
     plans = plans or {}
     offsets = offsets or {}
     plan_updates = plan_updates or {}
@@ -174,13 +188,16 @@ def simulate(seqs: Sequence[AccessSequence],
     passive = 0
     canceled_swap_ins = 0
 
-    # initial residency (paper Alg 2 line 1)
-    for job in jobs.values():
-        ctx = job.ctx
-        for tid in ctx.seq.initial_resident:
-            if tid in ctx.seq.tensors:
-                eng.ledger.alloc(ctx.job_id, ctx.st(tid), ctx.size_of(tid),
-                                 ctx.offset)
+    # initial residency (paper Alg 2 line 1) — under job_lifecycle it is
+    # deferred to each job's arrival event so the ledger's running total
+    # stays ordered in virtual time
+    if not job_lifecycle:
+        for job in jobs.values():
+            ctx = job.ctx
+            for tid in ctx.seq.initial_resident:
+                if tid in ctx.seq.tensors:
+                    eng.ledger.alloc(ctx.job_id, ctx.st(tid),
+                                     ctx.size_of(tid), ctx.offset)
 
     # event queue: (time, seqno, kind, job_id, payload)
     q: List[Tuple[float, int, str, str, object]] = []
@@ -207,6 +224,13 @@ def simulate(seqs: Sequence[AccessSequence],
                 # the transfer started: the completion is a no-op
                 job.canceled_tokens.discard(token)
                 continue
+            if job_lifecycle and job.done:
+                # the job exited while this prefetch was on the wire: the
+                # landing bytes have nowhere to go — drop the completion
+                job.swap_in_at.pop(st, None)
+                job.swap_in_start.pop(st, None)
+                job.swap_in_token.pop(st, None)
+                continue
             if hub is not None:
                 hub.record_transfer(job_id, st, "in", nbytes, dur,
                                     compressed=compressed, t=s0)
@@ -217,6 +241,10 @@ def simulate(seqs: Sequence[AccessSequence],
             continue
         if kind == "swap_out_done":
             st, compressed = payload  # type: ignore[misc]
+            if job_lifecycle and job.done:
+                # device side already freed wholesale at exit
+                job.inflight_out -= 1
+                continue
             eng.complete_swap_out(ctx, st, t, compressed=compressed)
             job.inflight_out -= 1
             continue
@@ -225,6 +253,14 @@ def simulate(seqs: Sequence[AccessSequence],
 
         op_idx = payload  # type: ignore[assignment]
         op = seq.operators[op_idx]
+
+        if job_lifecycle and not job.arrived:
+            # process arrival: the job's parameters land on device now
+            job.arrived = True
+            for tid in seq.initial_resident:
+                if tid in seq.tensors:
+                    eng.ledger.alloc(ctx.job_id, ctx.st(tid),
+                                     ctx.size_of(tid), t)
 
         # ---- ensure inputs resident (engine decision; paper Executor) --
         start = t
@@ -424,6 +460,10 @@ def simulate(seqs: Sequence[AccessSequence],
             else:
                 job.done = True
                 job.finish_time = end
+                if job_lifecycle:
+                    # process exit: return every byte the job still holds
+                    for st in eng.ledger.resident_storages(ctx.job_id):
+                        eng.ledger.free(ctx.job_id, st, end)
 
     per_job_time = {j: (job.finish_time - job.ctx.offset)
                     / max(job.iterations, 1)

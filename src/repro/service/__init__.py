@@ -1,0 +1,30 @@
+"""Scheduler-as-a-service: daemon, admission queue, durable store, client.
+
+The service plane turns the in-process ``GlobalController`` into a
+long-lived device owner that independent clients submit jobs to:
+
+    ``jobspec``   — the frozen, serializable ``JobSpec`` wire format and the
+                    ``JobState`` lifecycle vocabulary
+    ``workloads`` — registry resolving ``spec.workload`` references to
+                    ``(step_fn, params, opt_state, batch)`` payloads
+    ``queue``     — priority admission by predicted peak vs device capacity
+    ``store``     — durable JSON-lines job store with crash recovery
+    ``daemon``    — the event loop wrapping ``GlobalController``
+    ``client``    — filesystem-inbox submission + status from another process
+
+See docs/architecture.md, "Scheduler as a service".
+"""
+
+from .client import ServiceClient
+from .daemon import SchedulerDaemon
+from .jobspec import JobSpec, JobState, SPEC_SCHEMA_VERSION
+from .queue import AdmissionQueue, QueuedJob
+from .store import JobRecord, JobStore, STORE_SCHEMA_VERSION
+from .workloads import register_workload, registered_workloads, resolve_workload
+
+__all__ = [
+    "AdmissionQueue", "JobRecord", "JobSpec", "JobState", "JobStore",
+    "QueuedJob", "SchedulerDaemon", "ServiceClient",
+    "SPEC_SCHEMA_VERSION", "STORE_SCHEMA_VERSION",
+    "register_workload", "registered_workloads", "resolve_workload",
+]

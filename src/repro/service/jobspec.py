@@ -1,0 +1,151 @@
+"""The redesigned job-submission surface: a frozen, serializable ``JobSpec``.
+
+``JobSpec`` is the single wire format shared by every submission path in the
+repo — in-process ``GlobalController.submit(spec)``, the scheduler daemon's
+filesystem inbox (``service.client`` / ``service.daemon``), and the scenario
+suite (``benchmarks/scenarios.py``).  A spec names *what* to run (a workload
+reference resolvable on the daemon side, or an in-process payload), *how much*
+(iterations), and the admission-relevant hints (priority, budget hint,
+fingerprint).  It deliberately does NOT carry live JAX objects on the wire:
+``payload`` is an in-process escape hatch excluded from serialization.
+
+Lifecycle states live here too so the store, queue, daemon and client all
+share one vocabulary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Optional, Tuple
+
+# Wire-format schema version.  Bump on breaking field changes; readers treat a
+# mismatched schema as absent (same tolerance rule as core/experience.py).
+SPEC_SCHEMA_VERSION = 1
+
+
+class JobState(str, enum.Enum):
+    """Lifecycle of a job inside the scheduler service.
+
+    QUEUED -> ADMITTED -> RUNNING -> DONE | FAILED
+                   \\-> (REJECTED when it can never fit)
+    """
+
+    QUEUED = "QUEUED"
+    ADMITTED = "ADMITTED"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    REJECTED = "REJECTED"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (JobState.DONE, JobState.FAILED, JobState.REJECTED)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """Frozen, serializable description of one schedulable job.
+
+    Fields
+    ------
+    job_id:
+        Unique id; also the idempotency key at the daemon inbox (a duplicate
+        submission of a known non-terminal job_id is ignored).
+    workload:
+        Reference the daemon can resolve to ``(step_fn, params, opt_state,
+        batch)``: either a name registered via
+        :func:`repro.service.workloads.register_workload` (e.g. ``"mlp"``) or
+        a ``"module:attr"`` import path to a zero-side-effect factory.
+    workload_params:
+        Keyword arguments forwarded to the workload factory (sizes, batch,
+        seed ...).  Must be JSON-serializable.
+    priority:
+        Arbiter share weight.  ``None`` defers to the scheduler config
+        (``SchedulerConfig.job_priorities`` or 1.0), matching the semantics
+        of the deprecated ``launch(..., priority=None)``.
+    iterations:
+        Training iterations to run once admitted.
+    budget_hint_bytes:
+        Optional caller-supplied upper bound on peak memory; used by
+        admission when no experience fingerprint matches.
+    offset_frac:
+        Arrival offset in mean-iteration units — used by the scenario suite's
+        virtual-time replays; the live daemon ignores it (arrival is when the
+        inbox file lands).
+    fingerprint:
+        Optional precomputed structural fingerprint (``ExperienceStore``
+        key).  Normally the controller computes it from the captured
+        sequence; a client that already knows it can pin it here.
+    schedule:
+        When False the job runs unscheduled (vanilla baseline) — used by
+        benchmarks.
+    payload:
+        In-process only: a ``(step_fn, params, opt_state, batch)`` tuple that
+        bypasses workload resolution.  Excluded from ``to_dict``; a spec that
+        crossed the wire never has one.
+    """
+
+    job_id: str
+    workload: Optional[str] = None
+    workload_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    priority: Optional[float] = None
+    iterations: int = 1
+    budget_hint_bytes: Optional[int] = None
+    offset_frac: float = 0.0
+    fingerprint: Optional[str] = None
+    schedule: bool = True
+    payload: Optional[Tuple[Any, ...]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    def __post_init__(self) -> None:
+        if not self.job_id or not isinstance(self.job_id, str):
+            raise ValueError("JobSpec.job_id must be a non-empty string")
+        if self.iterations < 1:
+            raise ValueError(f"JobSpec.iterations must be >= 1, got {self.iterations}")
+        if self.priority is not None and self.priority <= 0:
+            raise ValueError(f"JobSpec.priority must be > 0, got {self.priority}")
+        if self.budget_hint_bytes is not None and self.budget_hint_bytes <= 0:
+            raise ValueError("JobSpec.budget_hint_bytes must be > 0 when given")
+        if self.payload is not None and len(self.payload) != 4:
+            raise ValueError(
+                "JobSpec.payload must be (step_fn, params, opt_state, batch)"
+            )
+
+    # -- wire format ---------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe wire form.  ``payload`` never crosses the wire."""
+        return {
+            "schema": SPEC_SCHEMA_VERSION,
+            "job_id": self.job_id,
+            "workload": self.workload,
+            "workload_params": dict(self.workload_params),
+            "priority": self.priority,
+            "iterations": self.iterations,
+            "budget_hint_bytes": self.budget_hint_bytes,
+            "offset_frac": self.offset_frac,
+            "fingerprint": self.fingerprint,
+            "schedule": self.schedule,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "JobSpec":
+        """Inverse of :meth:`to_dict`.
+
+        Unknown keys are ignored (forward compatibility); a schema mismatch
+        or a malformed field raises ``ValueError`` so callers can apply the
+        skip-not-crash tolerance rule.
+        """
+        if not isinstance(data, dict):
+            raise ValueError("JobSpec wire form must be a JSON object")
+        schema = data.get("schema", SPEC_SCHEMA_VERSION)
+        if schema != SPEC_SCHEMA_VERSION:
+            raise ValueError(f"unsupported JobSpec schema {schema!r}")
+        known = {f.name for f in dataclasses.fields(cls)} - {"payload"}
+        kwargs = {k: v for k, v in data.items() if k in known}
+        try:
+            return cls(**kwargs)
+        except TypeError as exc:  # e.g. job_id missing entirely
+            raise ValueError(f"malformed JobSpec: {exc}") from exc

@@ -1,0 +1,136 @@
+"""Workload registry: resolve a ``JobSpec.workload`` reference to a payload.
+
+A *payload* is the tuple ``(step_fn, params, opt_state, batch)`` that
+``GlobalController`` captures and runs.  Clients submit specs naming a
+workload instead of shipping live JAX objects, so a daemon in another
+process can rebuild the job from the wire form.
+
+Resolution order:
+
+1. ``spec.payload`` — in-process escape hatch, wins outright.
+2. A name registered with :func:`register_workload`.
+3. A ``"module:attr"`` import path to a factory with the same signature.
+
+Factories take ``**spec.workload_params`` and return the payload tuple.
+The builtin ``"mlp"`` workload builds the same tiny MLP train step the test
+suite and scenario suite use.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, Dict, Tuple
+
+from .jobspec import JobSpec
+
+Payload = Tuple[Any, Any, Any, Any]
+WorkloadFactory = Callable[..., Payload]
+
+_REGISTRY: Dict[str, WorkloadFactory] = {}
+
+
+def register_workload(name: str, factory: WorkloadFactory) -> None:
+    """Register ``factory`` under ``name`` (overwrites an existing entry)."""
+    if not name or ":" in name:
+        raise ValueError(f"invalid workload name {name!r}")
+    _REGISTRY[name] = factory
+
+
+def registered_workloads() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_workload(spec: JobSpec) -> Payload:
+    """Resolve ``spec`` to ``(step_fn, params, opt_state, batch)``.
+
+    Raises ``ValueError`` when the spec names nothing resolvable — the daemon
+    turns that into a REJECTED job rather than crashing.
+    """
+    if spec.payload is not None:
+        return spec.payload  # type: ignore[return-value]
+    if not spec.workload:
+        raise ValueError(
+            f"job {spec.job_id!r}: spec has neither payload nor workload"
+        )
+    factory = _REGISTRY.get(spec.workload)
+    if factory is None and ":" in spec.workload:
+        mod_name, _, attr = spec.workload.partition(":")
+        try:
+            factory = getattr(importlib.import_module(mod_name), attr)
+        except (ImportError, AttributeError) as exc:
+            raise ValueError(
+                f"job {spec.job_id!r}: cannot import workload "
+                f"{spec.workload!r}: {exc}"
+            ) from exc
+    if factory is None:
+        raise ValueError(
+            f"job {spec.job_id!r}: unknown workload {spec.workload!r} "
+            f"(registered: {', '.join(registered_workloads()) or 'none'})"
+        )
+    return factory(**dict(spec.workload_params))
+
+
+# -- builtin workloads -------------------------------------------------------
+
+
+# size-class presets shared with the scenario suite's smoke shapes, so a
+# wire submission can say {"size": "medium"} instead of raw layer sizes
+MLP_SIZE_PRESETS = {
+    "small": ((32, 64, 64, 8), 8),
+    "medium": ((64, 128, 128, 8), 16),
+    "large": ((64, 256, 256, 8), 16),
+}
+
+
+def make_mlp(sizes=None, batch=None, seed=0, size=None) -> Payload:
+    """Tiny MLP + AdamW train step — the repo's canonical smoke workload.
+
+    Either pass explicit ``sizes``/``batch`` or a ``size`` class name from
+    :data:`MLP_SIZE_PRESETS`."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..optim.adam import adamw_init, adamw_update
+
+    if size is not None:
+        if size not in MLP_SIZE_PRESETS:
+            raise ValueError(f"unknown mlp size class {size!r}")
+        preset_sizes, preset_batch = MLP_SIZE_PRESETS[size]
+        sizes = sizes or preset_sizes
+        batch = batch or preset_batch
+    sizes = list(sizes or (32, 64, 64, 8))
+    batch = batch or 8
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        params.append(
+            {"w": jax.random.normal(k, (sizes[i], sizes[i + 1])) * 0.02,
+             "b": jnp.zeros(sizes[i + 1])}
+        )
+    opt_state = adamw_init(params)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, sizes[0]))
+    y = jax.random.normal(jax.random.PRNGKey(seed + 2), (batch, sizes[-1]))
+
+    def forward(ps, inp):
+        h = inp
+        for i, p in enumerate(ps):
+            h = h @ p["w"] + p["b"]
+            if i < len(ps) - 1:
+                h = jnp.tanh(h)
+        return h
+
+    def train_step(ps, opt, data):
+        xb, yb = data
+
+        def loss_fn(p):
+            return jnp.mean((forward(p, xb) - yb) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(ps)
+        ps, opt = adamw_update(ps, grads, opt, lr=1e-3)
+        return ps, opt, loss
+
+    return train_step, params, opt_state, (x, y)
+
+
+register_workload("mlp", make_mlp)

@@ -10,6 +10,8 @@ from repro.core import (ARBITER_POLICIES, BudgetArbiter, GlobalController,
                         MemoryEngine, SchedulerConfig, analyze,
                         build_pipeline, simulate)
 
+from repro.service import JobSpec
+
 from helpers import capture_mlp, mlp_train_step, synthetic_chain
 
 PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
@@ -178,10 +180,11 @@ def test_controller_arbitrated_staggered_jobs():
                           pipeline_name="tensile+autoscale",
                           arbiter_policy="equal")
     p, o, b = _make_job(0)
-    gc.launch(mlp_train_step, p, o, b, job_id="j0", iterations=2)
+    gc.submit(JobSpec("j0", iterations=2,
+                      payload=(mlp_train_step, p, o, b)))
     p, o, b = _make_job(1)
-    gc.launch(mlp_train_step, p, o, b, job_id="j1", iterations=2,
-              priority=2.0)
+    gc.submit(JobSpec("j1", iterations=2, priority=2.0,
+                      payload=(mlp_train_step, p, o, b)))
     gc.wait(timeout=300)
     assert all(h.done and h.error is None for h in gc.jobs.values())
     # the launch of j1 re-split over {j0, j1}; each finish re-split again
@@ -242,7 +245,8 @@ def test_job_thread_failure_surfaces_loudly(monkeypatch):
     monkeypatch.setattr(JaxprExecutor, "run", boom)
     gc = GlobalController(profile=PROFILE, async_swap=False)
     p, o, b = _make_job(0)
-    gc.launch(mlp_train_step, p, o, b, job_id="doomed", iterations=1)
+    gc.submit(JobSpec("doomed", iterations=1,
+                      payload=(mlp_train_step, p, o, b)))
     with pytest.raises(JobFailedError) as ei:
         gc.wait(timeout=120)
     err = ei.value

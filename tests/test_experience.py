@@ -13,6 +13,8 @@ from repro.core import (CostModel, DeviceCalibration, ExperienceStore,
                         MachineProfile, SchedulerConfig, TelemetryHub,
                         build_pipeline, fingerprint, simulate)
 
+from repro.service import JobSpec
+
 from helpers import capture_mlp, synthetic_chain
 
 PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
@@ -323,8 +325,8 @@ def test_controller_flushes_and_warm_boots(tmp_path):
 
     ctl1 = GlobalController(profile=PROFILE, experience_dir=root,
                             async_swap=False)
-    ctl1.launch(mlp_train_step, params, opt, (x, y), job_id="run1",
-                iterations=2)
+    ctl1.submit(JobSpec("run1", iterations=2,
+                        payload=(mlp_train_step, params, opt, (x, y))))
     ctl1.wait(timeout=120)
     assert not ctl1.experience_failures
     fps = ctl1.experience.fingerprints()
@@ -337,8 +339,8 @@ def test_controller_flushes_and_warm_boots(tmp_path):
                             arbiter_policy="eor-learned", async_swap=False)
     stored = ctl2.experience.device_calibration()
     assert ctl2.cost_model.calib.flops == stored.flops
-    h = ctl2.launch(mlp_train_step, params, opt, (x, y), job_id="run2",
-                    iterations=1)
+    h = ctl2.submit(JobSpec("run2", iterations=1,
+                            payload=(mlp_train_step, params, opt, (x, y))))
     assert h.fingerprint == fps[0]          # same structure, same entry
     assert "run2" in ctl2.arbiter.priors    # prior attached at launch
     ctl2.wait(timeout=120)

@@ -17,6 +17,8 @@ from repro.core import (GlobalController, JaxprExecutor, MachineProfile,
                         SchedulingPlan, analyze, build_pipeline,
                         find_safe_points, reference_outputs, simulate)
 
+from repro.service import JobSpec
+
 from helpers import capture_mlp, mlp_train_step, synthetic_chain
 
 given, settings, st = hypothesis_or_stub()
@@ -319,9 +321,11 @@ def test_boundary_and_preempt_controllers_agree_on_results():
                               pipeline_name="tensile+autoscale",
                               arbiter_policy="equal", arbiter_mode=mode)
         p, o, b = job_args(0)
-        h0 = gc.launch(mlp_train_step, p, o, b, job_id="j0", iterations=3)
+        h0 = gc.submit(JobSpec("j0", iterations=3,
+                               payload=(mlp_train_step, p, o, b)))
         p, o, b = job_args(1)
-        h1 = gc.launch(mlp_train_step, p, o, b, job_id="j1", iterations=2)
+        h1 = gc.submit(JobSpec("j1", iterations=2,
+                               payload=(mlp_train_step, p, o, b)))
         gc.wait(timeout=300)
         assert all(h.done and h.error is None for h in gc.jobs.values()), mode
         assert not gc.preempt_failures, mode

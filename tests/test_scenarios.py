@@ -188,6 +188,54 @@ def test_warm_dominates_cold_on_all_three(coldwarm):
     assert cold["plan_iterations"] > 0
 
 
+# ------------------------------------------------------------- overload
+@pytest.fixture(scope="module")
+def overload(table):
+    """The service plane's admission-control scenario."""
+    return table["overload"]
+
+
+def test_overload_admission_protects_the_device(overload):
+    """THE service-plane acceptance criterion: with the AdmissionQueue
+    gating starts, demand beyond capacity produces queue wait — never
+    OOMs — while the same job mix started at submit time busts the
+    device."""
+    adm = overload["policies"]["admission"]
+    none = overload["policies"]["no-admission"]
+    assert adm["oom_events"] == 0
+    assert adm["within_budget"]
+    assert adm["peak"] <= overload["device_budget"]
+    # the scenario is genuinely overloaded: the ungated run cannot fit
+    assert none["oom_events"] > 0
+    assert not none["within_budget"]
+
+
+def test_overload_admission_precision(overload):
+    """Warm-fingerprint predictions (experience-store priors measured
+    under contention) stay within +-15 % of the measured per-job peaks;
+    the cold class's cost-model bound is conservative (>= 1x)."""
+    adm = overload["policies"]["admission"]
+    assert adm["admission_max_abs_err"] <= 0.15
+    assert adm["cold_bound_ratio"] >= 1.0
+    srcs = {j["predicted_source"] for j in overload["jobs"].values()}
+    assert "experience" in srcs and "cost-model" in srcs
+
+
+def test_overload_reservations_never_exceed_capacity(overload):
+    """The reservation-ledger invariant: at no instant does the admitted
+    set's reserved total exceed the admission capacity, yet every job is
+    eventually admitted and some genuinely wait."""
+    adm = overload["policies"]["admission"]
+    assert adm["admitted_over_capacity"] == 0
+    assert adm["max_reserved_bytes"] <= overload["admission_capacity"]
+    assert adm["admitted_jobs"] == len(overload["jobs"])
+    waits = [j["queue_wait_iters"] for j in overload["jobs"].values()]
+    assert any(w > 0.5 for w in waits)      # sustained overload queues
+    assert any(w == 0.0 for w in waits)     # early arrivals run at once
+    assert adm["queue_wait_mean_iters"] > 0
+    assert 0.0 < adm["fairness"] <= 1.0
+
+
 def test_preempt_scenarios_record_the_splice(preempt_table):
     """The hot-swap must actually land: the victim's plan_swaps records a
     safe-point splice (op >= 0) in preempt mode, and only the boundary

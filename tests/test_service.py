@@ -1,0 +1,391 @@
+"""Scheduler-as-a-service acceptance: JobSpec wire format, admission
+queue, durable job store, daemon lifecycle, crash recovery, and the
+filesystem client.
+
+The daemon tests run against a FakeController (admission logic is
+transport- and JAX-free by design); one end-to-end test runs the real
+``GlobalController`` with the registered ``"mlp"`` workload.
+"""
+import json
+import os
+import types
+
+import pytest
+
+from repro.service import (AdmissionQueue, JobRecord, JobSpec, JobState,
+                           JobStore, SchedulerDaemon, ServiceClient,
+                           SPEC_SCHEMA_VERSION, register_workload,
+                           resolve_workload)
+
+
+# ------------------------------------------------------------- JobSpec
+def test_jobspec_wire_roundtrip():
+    spec = JobSpec("j1", workload="mlp", workload_params={"size": "small"},
+                   priority=2.0, iterations=3, budget_hint_bytes=123,
+                   offset_frac=0.5, fingerprint="abc")
+    wire = spec.to_dict()
+    assert wire["schema"] == SPEC_SCHEMA_VERSION
+    assert "payload" not in wire
+    assert json.loads(json.dumps(wire)) == wire       # JSON-safe
+    assert JobSpec.from_dict(wire) == spec
+
+
+def test_jobspec_is_frozen_and_validates():
+    spec = JobSpec("j1", workload="mlp")
+    with pytest.raises(Exception):
+        spec.job_id = "other"                         # frozen dataclass
+    with pytest.raises(ValueError):
+        JobSpec("")
+    with pytest.raises(ValueError):
+        JobSpec("j", iterations=0)
+    with pytest.raises(ValueError):
+        JobSpec("j", priority=0.0)
+    with pytest.raises(ValueError):
+        JobSpec("j", budget_hint_bytes=-1)
+    with pytest.raises(ValueError):
+        JobSpec("j", payload=(1, 2))                  # not a 4-tuple
+
+
+def test_jobspec_payload_never_crosses_the_wire():
+    spec = JobSpec("j1", payload=(lambda *a: None, 1, 2, 3))
+    wire = spec.to_dict()
+    assert "payload" not in wire
+    back = JobSpec.from_dict({**wire, "payload": "smuggled"})
+    assert back.payload is None
+
+
+def test_jobspec_from_dict_tolerance():
+    # unknown keys ignored (forward compatibility)
+    spec = JobSpec.from_dict({"job_id": "j", "future_field": 1})
+    assert spec.job_id == "j"
+    with pytest.raises(ValueError):
+        JobSpec.from_dict({"job_id": "j", "schema": 99})
+    with pytest.raises(ValueError):
+        JobSpec.from_dict({"workload": "mlp"})        # job_id missing
+    with pytest.raises(ValueError):
+        JobSpec.from_dict("not a dict")
+
+
+def test_jobstate_terminal():
+    assert JobState.DONE.terminal and JobState.FAILED.terminal \
+        and JobState.REJECTED.terminal
+    assert not (JobState.QUEUED.terminal or JobState.ADMITTED.terminal
+                or JobState.RUNNING.terminal)
+
+
+# ----------------------------------------------------------- workloads
+def test_workload_registry_and_import_path():
+    register_workload("svc-test", lambda x=1: ("fn", "p", "o", x))
+    spec = JobSpec("j", workload="svc-test", workload_params={"x": 7})
+    assert resolve_workload(spec) == ("fn", "p", "o", 7)
+    with pytest.raises(ValueError):
+        register_workload("bad:name", lambda: None)
+    with pytest.raises(ValueError):
+        resolve_workload(JobSpec("j", workload="no-such-workload"))
+    with pytest.raises(ValueError):
+        resolve_workload(JobSpec("j", workload="no.such.module:attr"))
+    with pytest.raises(ValueError):
+        resolve_workload(JobSpec("j"))                # neither ref nor payload
+    # payload wins outright
+    payload = ("f", "p", "o", "b")
+    assert resolve_workload(JobSpec("j", workload="svc-test",
+                                    payload=payload)) == payload
+
+
+# ------------------------------------------------------ AdmissionQueue
+def test_admission_queue_priority_and_backfill():
+    q = AdmissionQueue(100)
+    q.push("big", 80, priority=1.0)
+    assert [j.job_id for j in q.pop_admissible()] == ["big"]
+    assert q.reserved_bytes == 80
+    q.push("blocked", 50, priority=9.0)
+    q.push("small", 15, priority=1.0)
+    # high-priority job is blocked (50 > 20 free) but keeps its place;
+    # the small job backfills
+    assert [j.job_id for j in q.pop_admissible()] == ["small"]
+    assert [j.job_id for j in q.waiting] == ["blocked"]
+    q.release("big")
+    assert [j.job_id for j in q.pop_admissible()] == ["blocked"]
+    assert q.reserved_bytes == 65
+    assert q.max_reserved_bytes <= q.capacity_bytes
+
+
+def test_admission_queue_rejects_never_admissible_and_duplicates():
+    q = AdmissionQueue(100)
+    with pytest.raises(ValueError):
+        q.push("huge", 101)
+    q.push("a", 10)
+    with pytest.raises(ValueError):
+        q.push("a", 10)                               # still waiting
+    q.pop_admissible()
+    with pytest.raises(ValueError):
+        q.push("a", 10)                               # already admitted
+
+
+def test_admission_queue_refine_shrinks_and_clamps():
+    q = AdmissionQueue(100)
+    q.push("a", 90)
+    q.pop_admissible()
+    assert q.refine("a", 40) == 40                    # measured shrink
+    assert q.free_bytes == 60
+    # growth past capacity is clamped to keep the ledger invariant
+    assert q.refine("a", 500) == 100
+    assert q.reserved_bytes == 100
+    assert q.refine("ghost", 10) is None
+    assert q.release("a") == 100
+    assert q.reserved_bytes == 0
+
+
+# ------------------------------------------------------------ JobStore
+def test_jobstore_roundtrip_and_transitions(tmp_path):
+    store = JobStore(str(tmp_path))
+    rec = JobRecord(spec=JobSpec("j1", workload="mlp", iterations=2),
+                    state=JobState.QUEUED, submitted_at=1.0)
+    store.put(rec, now=1.0)
+    store.transition("j1", JobState.ADMITTED, now=2.0,
+                     predicted_peak_bytes=123, predicted_source="cost-model")
+    store.transition("j1", JobState.RUNNING, now=3.0)
+    store.transition("j1", JobState.DONE, now=4.0, measured_peak_bytes=99)
+    # a FRESH instance reads the durable file
+    again = JobStore(str(tmp_path)).get("j1")
+    assert again.state is JobState.DONE
+    assert again.admitted_at == 2.0 and again.started_at == 3.0 \
+        and again.finished_at == 4.0
+    assert again.predicted_peak_bytes == 123
+    assert again.measured_peak_bytes == 99
+    assert again.spec == rec.spec
+
+
+def test_jobstore_corrupt_lines_skip_not_crash(tmp_path):
+    path = tmp_path / "jobs.jsonl"
+    good = JobRecord(spec=JobSpec("ok", workload="mlp")).to_dict()
+    lines = [
+        json.dumps({"kind": "header", "schema": JobStore.SCHEMA}),
+        json.dumps(good),
+        "{ not json at all",
+        json.dumps({"kind": "job", "spec": {"schema": 99, "job_id": "bad"},
+                    "state": "QUEUED"}),              # bad spec schema
+        json.dumps({"kind": "job", "state": "QUEUED"}),   # no spec
+        json.dumps(["not", "a", "dict"]),
+    ]
+    path.write_text("\n".join(lines) + "\n")
+    store = JobStore(str(tmp_path))
+    assert set(store.all()) == {"ok"}
+
+
+def test_jobstore_header_mismatch_degrades_to_empty(tmp_path):
+    path = tmp_path / "jobs.jsonl"
+    rec = JobRecord(spec=JobSpec("j", workload="mlp")).to_dict()
+    path.write_text(json.dumps({"kind": "header", "schema": 999}) + "\n"
+                    + json.dumps(rec) + "\n")
+    assert len(JobStore(str(tmp_path))) == 0
+    path.write_text(json.dumps(rec) + "\n")           # no header at all
+    assert len(JobStore(str(tmp_path))) == 0
+
+
+def test_jobstore_recover_rules(tmp_path):
+    store = JobStore(str(tmp_path))
+    for jid, state, requeues in [("q", JobState.QUEUED, 0),
+                                 ("a", JobState.ADMITTED, 0),
+                                 ("r", JobState.RUNNING, 0),
+                                 ("r2", JobState.RUNNING, 1),
+                                 ("d", JobState.DONE, 0)]:
+        store.put(JobRecord(spec=JobSpec(jid, workload="mlp"), state=state,
+                            requeues=requeues), now=1.0)
+    replayed, requeued, failed = store.recover(now=2.0)
+    assert set(replayed) == {"q", "a"}
+    assert requeued == ["r"] and store.get("r").requeues == 1
+    assert store.get("r").state is JobState.QUEUED
+    # a second orphaning burns the job instead of looping forever
+    assert failed == ["r2"]
+    assert store.get("r2").state is JobState.FAILED
+    assert "orphaned" in store.get("r2").error
+    assert store.get("d").state is JobState.DONE      # terminal untouched
+    # durable: a fresh instance sees the recovered states
+    assert JobStore(str(tmp_path)).get("r2").state is JobState.FAILED
+
+
+# ---------------------------------------------------- daemon (faked)
+class FakeHandle:
+    def __init__(self, peak=0):
+        self.done = False
+        self.error = None
+        self.stats = []
+        self.peak_bytes = peak
+
+
+class FakeController:
+    """Admission-API double: capture_spec / predict_peak / submit."""
+
+    def __init__(self, peaks):
+        self.peaks = dict(peaks)      # job_id -> (predicted, source)
+        self.handles = {}
+
+    def capture_spec(self, spec):
+        if spec.workload == "unresolvable":
+            raise ValueError(f"job {spec.job_id!r}: unknown workload")
+        return types.SimpleNamespace(
+            seq=types.SimpleNamespace(job_id=spec.job_id))
+
+    def predict_peak(self, seq, budget_hint_bytes=None):
+        return self.peaks[seq.job_id]
+
+    def submit(self, spec, captured=None):
+        h = FakeHandle()
+        self.handles[spec.job_id] = h
+        return h
+
+
+def _daemon(tmp_path, peaks, capacity):
+    return SchedulerDaemon(str(tmp_path), controller=FakeController(peaks),
+                           capacity_bytes=capacity, poll_interval=0.01)
+
+
+def test_daemon_holds_then_admits_when_capacity_frees(tmp_path):
+    d = _daemon(tmp_path, {"a": (800, "experience"),
+                           "b": (300, "experience")}, capacity=1000)
+    d.submit(JobSpec("a", workload="w"))
+    d.submit(JobSpec("b", workload="w"))
+    d.step(now=1.0)
+    assert d.store.get("a").state is JobState.RUNNING
+    assert d.store.get("b").state is JobState.QUEUED   # 300 > 200 free
+    # a finishes -> reservation released -> b admitted
+    d.controller.handles["a"].done = True
+    d.controller.handles["a"].peak_bytes = 750
+    d.step(now=2.0)
+    assert d.store.get("a").state is JobState.DONE
+    assert d.store.get("a").measured_peak_bytes == 750
+    assert d.store.get("b").state is JobState.RUNNING
+    assert d.store.get("b").started_at == 2.0
+
+
+def test_daemon_refines_conservative_bound_after_profiled_iteration(tmp_path):
+    d = _daemon(tmp_path, {"a": (900, "cost-model"),
+                           "b": (300, "experience")}, capacity=1000)
+    d.submit(JobSpec("a", workload="w"))
+    d.submit(JobSpec("b", workload="w"))
+    d.step(now=1.0)
+    assert d.store.get("b").state is JobState.QUEUED
+    # first profiled iteration: measured 400 << the 900 bound
+    h = d.controller.handles["a"]
+    h.stats.append(object())
+    h.peak_bytes = 400
+    d.step(now=2.0)
+    assert d.store.get("a").measured_peak_bytes == 400
+    assert d.store.get("b").state is JobState.RUNNING  # freed headroom admits
+    assert d.queue.reserved_bytes == 700
+
+
+def test_daemon_rejects_never_fitting_and_unresolvable(tmp_path):
+    d = _daemon(tmp_path, {"huge": (2000, "cost-model")}, capacity=1000)
+    d.submit(JobSpec("huge", workload="w"))
+    assert d.store.get("huge").state is JobState.REJECTED
+    assert "never admissible" in d.store.get("huge").error
+    d.submit(JobSpec("nope", workload="unresolvable"))
+    assert d.store.get("nope").state is JobState.REJECTED
+
+
+def test_daemon_submit_is_idempotent(tmp_path):
+    d = _daemon(tmp_path, {"a": (10, "experience")}, capacity=1000)
+    r1 = d.submit(JobSpec("a", workload="w"))
+    r2 = d.submit(JobSpec("a", workload="w", iterations=5))
+    assert r2 is r1                                   # duplicate ignored
+    d.step(now=1.0)
+    assert d.store.get("a").state is JobState.RUNNING
+
+
+def test_daemon_crash_recovery_requeues_orphan_exactly_once(tmp_path):
+    # a "crashed daemon" left one of each non-terminal state behind
+    store = JobStore(str(tmp_path))
+    for jid, state in [("q", JobState.QUEUED), ("a", JobState.ADMITTED),
+                       ("r", JobState.RUNNING)]:
+        store.put(JobRecord(spec=JobSpec(jid, workload="w"), state=state,
+                            submitted_at=1.0), now=1.0)
+    peaks = {j: (10, "experience") for j in ("q", "a", "r")}
+    d = _daemon(tmp_path, peaks, capacity=1000)
+    assert set(d.recovered["replayed"]) == {"q", "a"}
+    assert d.recovered["requeued_orphans"] == ["r"]
+    assert d.store.get("r").requeues == 1
+    d.step(now=2.0)
+    assert all(d.store.get(j).state is JobState.RUNNING
+               for j in ("q", "a", "r"))
+    # crash AGAIN mid-run: everything was RUNNING, so q/a spend their one
+    # re-queue and r — already re-queued once — is failed for good
+    d2 = _daemon(tmp_path, peaks, capacity=1000)
+    assert d2.recovered["failed_orphans"] == ["r"]
+    assert d2.store.get("r").state is JobState.FAILED
+    assert "orphaned" in d2.store.get("r").error
+    assert set(d2.recovered["requeued_orphans"]) == {"q", "a"}
+
+
+def test_daemon_drain_inbox_skips_corrupt_submissions(tmp_path):
+    d = _daemon(tmp_path, {"ok": (10, "experience")}, capacity=1000)
+    ok = JobSpec("ok", workload="w").to_dict()
+    (tmp_path / "inbox" / "ok.json").write_text(json.dumps(ok))
+    (tmp_path / "inbox" / "garbage.json").write_text("{ nope")
+    (tmp_path / "inbox" / "badspec.json").write_text(
+        json.dumps({"schema": 99, "job_id": "x"}))
+    d.step(now=1.0)
+    assert d.store.get("ok").state is JobState.RUNNING
+    assert d.store.get("x") is None
+    assert os.listdir(tmp_path / "inbox") == []       # nothing wedges
+
+
+# ------------------------------------------------------------- client
+def test_client_wire_submission_and_drain(tmp_path):
+    d = _daemon(tmp_path, {"w1": (10, "experience")}, capacity=1000)
+    client = ServiceClient(str(tmp_path))
+    client.submit(JobSpec("w1", workload="w", iterations=2))
+    client.drain()
+    d.step(now=1.0)
+    assert d.store.get("w1").state is JobState.RUNNING
+    assert d._draining                                 # control file honored
+    assert client.states()["w1"] == "RUNNING"
+    d.controller.handles["w1"].done = True
+    d.step(now=2.0)
+    recs = client.wait(["w1"], timeout=5.0)
+    assert recs["w1"].state is JobState.DONE
+
+
+def test_client_refuses_payload_specs(tmp_path):
+    client = ServiceClient(str(tmp_path))
+    with pytest.raises(ValueError):
+        client.submit(JobSpec("p", payload=("f", 1, 2, 3)))
+    with pytest.raises(ValueError):
+        client.submit(JobSpec("p"))                   # no workload either
+
+
+# ------------------------------------------- deprecated launch() shim
+def test_launch_shim_warns_and_still_runs():
+    jax = pytest.importorskip("jax")
+    from helpers import mlp_params, mlp_train_step
+
+    from repro.core import GlobalController
+    from repro.optim.adam import adamw_init
+    p = mlp_params(jax.random.PRNGKey(0), [32, 64, 64, 4])
+    o = adamw_init(p)
+    batch = (jax.random.normal(jax.random.PRNGKey(1), (8, 32)),
+             jax.random.normal(jax.random.PRNGKey(2), (8, 4)))
+    gc = GlobalController()
+    with pytest.warns(DeprecationWarning, match="submit"):
+        h = gc.launch(mlp_train_step, p, o, batch, job_id="shim-job",
+                      iterations=1)
+    gc.wait(timeout=300)
+    assert h.done and h.error is None
+    assert h.spec is not None and h.spec.job_id == "shim-job"
+
+
+# ------------------------------------------------- real controller e2e
+def test_daemon_real_controller_end_to_end(tmp_path):
+    pytest.importorskip("jax")
+    d = SchedulerDaemon(str(tmp_path), poll_interval=0.01)
+    d.submit(JobSpec("e2e", workload="mlp",
+                     workload_params={"size": "small"}, iterations=2))
+    assert d.drain(timeout=300)
+    rec = d.store.get("e2e")
+    assert rec.state is JobState.DONE
+    assert rec.predicted_peak_bytes > 0 and rec.predicted_source
+    assert rec.measured_peak_bytes > 0
+    # the wire-format record survives a fresh read
+    again = JobStore(str(tmp_path)).get("e2e")
+    assert again.state is JobState.DONE

@@ -9,6 +9,8 @@ from repro.core import (GlobalController, JaxprExecutor, MachineProfile,
                         MemoryScheduler, SchedulerConfig, evaluate,
                         reference_outputs, schedule_single)
 
+from repro.service import JobSpec
+
 from helpers import capture_mlp, mlp_train_step
 
 PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
@@ -98,7 +100,8 @@ def test_global_controller_multi_job():
     gc = GlobalController(profile=PROFILE, async_swap=True)
     for j in range(2):
         p, o, b = make_job(j)
-        gc.launch(mlp_train_step, p, o, b, job_id=f"j{j}", iterations=2)
+        gc.submit(JobSpec(f"j{j}", iterations=2,
+                          payload=(mlp_train_step, p, o, b)))
     gc.wait(timeout=180)
     assert all(h.done and h.error is None for h in gc.jobs.values())
     assert gc.global_peak_bytes > 0

@@ -16,7 +16,13 @@ tool compares that file against the committed baseline
   * the cold-vs-warm dominance contract breaks on the CURRENT run (warm
     boot must hit the plan cache, stay within budget with zero OOMs from
     its first iteration, and start at or below the cold run's converged
-    calibration error — see ``cold_warm_contract``).
+    calibration error — see ``cold_warm_contract``), or
+  * the service plane's admission contract breaks on the CURRENT run
+    (under overload the admitted set's reservations never exceed
+    capacity, the admission-gated run stays OOM-free and within budget,
+    and warm-fingerprint peak predictions stay within +-15 % of the
+    measured per-job peaks — see ``admission_contract``; queue-wait
+    growth >25 % is gated like the other overhead metrics).
 
 The tool also gates the planner latency trajectory: ``python -m
 benchmarks.run --only planner --smoke`` writes
@@ -108,7 +114,11 @@ def compare(baseline: dict, current: dict) -> list:
         # calib_err is the measured-telemetry plane's post-recalibration
         # cost-model error: a >25 % regression means the hub→calibration
         # feedback loop degraded
-        for metric in ("EOR", "ttwb_burst_iters", "calib_err"):
+        # queue_wait_mean_iters is the overload scenario's admission-delay
+        # trajectory: jobs waiting >25 % longer than the baseline means
+        # the admission policy (or the predictions feeding it) regressed
+        for metric in ("EOR", "ttwb_burst_iters", "calib_err",
+                       "queue_wait_mean_iters"):
             b, c = base.get(metric), cur.get(metric)
             if b is None or c is None:
                 continue
@@ -160,6 +170,47 @@ def cold_warm_contract(current: dict) -> list:
         failures.append(f"cold-vs-warm: warm run produced "
                         f"{warm['oom_events']} ledger OOM events")
     return failures
+
+
+# warm-fingerprint admission predictions must stay within this relative
+# error of the measured per-job peak (the ISSUE-7 precision contract)
+ADMISSION_PRECISION = 0.15
+
+
+def admission_contract(current: dict) -> list:
+    """The service plane's admission contract, enforced on the CURRENT
+    run: under the overload scenario the admitted set's reservations
+    never exceed the device capacity, the admission-gated run is
+    OOM-free and within budget (while demand exceeds capacity by
+    construction), and warm-fingerprint predictions stay within
+    +-15 % of the measured per-job peaks.  Absent rows check nothing
+    (pre-service baselines)."""
+    adm = current.get("overload/admission")
+    if not adm:
+        return []
+    failures = []
+    if (adm.get("oom_events") or 0) > 0:
+        failures.append(f"overload/admission: {adm['oom_events']} ledger "
+                        "OOM events — admission control no longer "
+                        "protects the device")
+    if adm.get("within_budget") is False:
+        failures.append("overload/admission: global peak exceeded the "
+                        "device capacity despite admission control")
+    if (adm.get("admitted_over_capacity") or 0) > 0:
+        failures.append("overload/admission: the admitted set's "
+                        "reservations exceeded the admission capacity "
+                        "(the reservation-ledger invariant broke)")
+    err = adm.get("admission_max_abs_err")
+    if err is not None and err > ADMISSION_PRECISION:
+        failures.append(
+            f"overload/admission: warm-fingerprint peak prediction off by "
+            f"{err:.1%} (limit {ADMISSION_PRECISION:.0%}) — the "
+            "experience-store prior degraded")
+    return failures
+
+
+def scenario_contracts(current: dict) -> list:
+    return cold_warm_contract(current) + admission_contract(current)
 
 
 def compare_planner(baseline: dict, current: dict) -> list:
@@ -261,7 +312,7 @@ def main() -> int:
     # (baseline, current, bench name, compare fn, contract fn, run hint)
     gates = [
         (args.baseline, args.current, "scenarios", compare,
-         cold_warm_contract, "--only scenarios --smoke"),
+         scenario_contracts, "--only scenarios --smoke"),
         (args.planner_baseline, args.planner_current, "planner",
          compare_planner, planner_contract, "--only planner --smoke"),
     ]

@@ -1,0 +1,236 @@
+"""tensile-svc — operate the scheduler-as-a-service daemon.
+
+    PYTHONPATH=src python tools/tensile_svc.py start  --root <dir> \
+        [--capacity-bytes N] [--poll-interval S]
+    PYTHONPATH=src python tools/tensile_svc.py submit --root <dir> \
+        --job-id j1 --workload mlp [--params '{"size": "small"}'] \
+        [--iterations N] [--priority P] [--budget-hint-bytes N] [--wait]
+    PYTHONPATH=src python tools/tensile_svc.py status --root <dir>
+    PYTHONPATH=src python tools/tensile_svc.py drain  --root <dir> [--wait]
+    PYTHONPATH=src python tools/tensile_svc.py smoke  --root <dir>
+
+`start` runs the ``SchedulerDaemon`` event loop in the foreground until
+stopped or drained.  `submit`/`status`/`drain` are thin wrappers over
+``ServiceClient`` — they share only the service root directory with the
+daemon (filesystem inbox + durable job store), so they work from any
+process.  `smoke` is the CI end-to-end self-check: it starts a daemon
+subprocess, submits three jobs over the wire, drains, then simulates a
+daemon crash mid-run and asserts the restarted daemon recovers the full
+queue state (QUEUED/ADMITTED replayed, the RUNNING orphan re-queued
+exactly once) and runs it to completion.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.service import (JobRecord, JobSpec, JobState,  # noqa: E402
+                           JobStore, SchedulerDaemon, ServiceClient)
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}GiB"
+
+
+def cmd_start(args: argparse.Namespace) -> int:
+    daemon = SchedulerDaemon(args.root,
+                             capacity_bytes=args.capacity_bytes,
+                             poll_interval=args.poll_interval)
+    rec = daemon.recovered
+    print(f"daemon up at {args.root} (pid {os.getpid()}, capacity "
+          f"{_fmt_bytes(daemon.capacity_bytes)}); recovered "
+          f"{len(rec['replayed'])} queued, "
+          f"{len(rec['requeued_orphans'])} re-queued orphan(s), "
+          f"{len(rec['failed_orphans'])} failed orphan(s)", flush=True)
+    try:
+        daemon.serve_forever()
+    except KeyboardInterrupt:
+        daemon.stop()
+    print("daemon stopped", flush=True)
+    return 0
+
+
+def cmd_submit(args: argparse.Namespace) -> int:
+    spec = JobSpec(args.job_id, workload=args.workload,
+                   workload_params=json.loads(args.params),
+                   iterations=args.iterations, priority=args.priority,
+                   budget_hint_bytes=args.budget_hint_bytes)
+    client = ServiceClient(args.root)
+    client.submit(spec)
+    print(f"submitted {spec.job_id} -> {client.inbox}")
+    if args.wait:
+        records = client.wait([spec.job_id], timeout=args.timeout)
+        rec = records[spec.job_id]
+        print(f"{rec.job_id}: {rec.state.value}"
+              + (f" ({rec.error})" if rec.error else ""))
+        return 0 if rec.state is JobState.DONE else 1
+    return 0
+
+
+def cmd_status(args: argparse.Namespace) -> int:
+    client = ServiceClient(args.root)
+    hb = client.heartbeat()
+    if hb:
+        alive = "alive" if client.daemon_alive() else "stale"
+        print(f"daemon: {hb.get('state')} ({alive}, pid {hb.get('pid')}), "
+              f"reserved {_fmt_bytes(hb.get('reserved_bytes', 0))} / "
+              f"{_fmt_bytes(hb.get('capacity_bytes', 0))}, "
+              f"{hb.get('waiting', 0)} waiting")
+    else:
+        print("daemon: no heartbeat")
+    records = client.status()
+    if not records:
+        print("no jobs")
+        return 0
+    for jid, rec in sorted(records.items()):
+        peak = (f" measured={_fmt_bytes(rec.measured_peak_bytes)}"
+                if rec.measured_peak_bytes else "")
+        pred = (f" predicted={_fmt_bytes(rec.predicted_peak_bytes)}"
+                f"[{rec.predicted_source}]"
+                if rec.predicted_peak_bytes else "")
+        err = f" error={rec.error}" if rec.error else ""
+        print(f"  {jid}: {rec.state.value}{pred}{peak}"
+              f" requeues={rec.requeues}{err}")
+    return 0
+
+
+def cmd_drain(args: argparse.Namespace) -> int:
+    client = ServiceClient(args.root)
+    client.drain()
+    print("drain requested")
+    if args.wait:
+        deadline = time.time() + args.timeout
+        while client.daemon_alive() and time.time() < deadline:
+            time.sleep(0.1)
+        if client.daemon_alive():
+            print(f"daemon still running after {args.timeout}s")
+            return 1
+        print("daemon drained and stopped")
+    return 0
+
+
+# ---------------------------------------------------------------- smoke
+def _check(ok: bool, what: str) -> None:
+    print(("  ok  " if ok else "  FAIL") + f" {what}")
+    if not ok:
+        raise SystemExit(f"service smoke failed: {what}")
+
+
+def cmd_smoke(args: argparse.Namespace) -> int:
+    """CI end-to-end: wire submission + drain, then crash recovery."""
+    root = args.root
+    os.makedirs(root, exist_ok=True)
+
+    # -- phase A: daemon subprocess, 3 wire submissions, drain ---------
+    print("phase A: daemon subprocess, 3 wire jobs, drain")
+    proc = subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__), "start", "--root", root,
+         "--poll-interval", "0.02"],
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    client = ServiceClient(root)
+    try:
+        deadline = time.time() + 120
+        while not client.daemon_alive() and time.time() < deadline:
+            time.sleep(0.1)
+        _check(client.daemon_alive(), "daemon heartbeat appears")
+        jobs = []
+        for i in range(3):
+            spec = JobSpec(f"smoke-{i}", workload="mlp",
+                           workload_params={"size": "small", "seed": i},
+                           iterations=2)
+            jobs.append(client.submit(spec))
+        client.drain()
+        records = client.wait(jobs, timeout=300)
+        _check(all(r.state is JobState.DONE for r in records.values()),
+               "all 3 wire jobs ran to DONE "
+               f"({ {j: r.state.value for j, r in records.items()} })")
+        proc.wait(timeout=60)
+        _check(proc.returncode == 0, "daemon exited cleanly after drain")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    # -- phase B: simulated crash mid-run, restart, recover ------------
+    # seed the SAME durable store as a crashed daemon would leave it:
+    # one QUEUED, one ADMITTED, one RUNNING orphan
+    print("phase B: crash recovery on the same root")
+    now = time.time()
+    store = JobStore(root)
+    seeded = {"crash-q": JobState.QUEUED, "crash-a": JobState.ADMITTED,
+              "crash-r": JobState.RUNNING}
+    for jid, state in seeded.items():
+        spec = JobSpec(jid, workload="mlp",
+                       workload_params={"size": "small"}, iterations=1)
+        store.put(JobRecord(spec=spec, state=state, submitted_at=now), now)
+    daemon = SchedulerDaemon(root, poll_interval=0.02)
+    rec = daemon.recovered
+    _check(set(rec["replayed"]) >= {"crash-q", "crash-a"},
+           f"QUEUED/ADMITTED replayed ({sorted(rec['replayed'])})")
+    _check(rec["requeued_orphans"] == ["crash-r"],
+           "RUNNING orphan re-queued exactly once")
+    _check(daemon.store.get("crash-r").requeues == 1,
+           "orphan requeue recorded")
+    ok = daemon.drain(timeout=300)
+    _check(ok, "restarted daemon drained the recovered queue")
+    states = {jid: daemon.store.get(jid).state for jid in seeded}
+    _check(all(s is JobState.DONE for s in states.values()),
+           f"recovered jobs ran to DONE ({ {j: s.value for j, s in states.items()} })")
+    print("service smoke OK")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(prog="tensile-svc", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("start", help="run the daemon event loop")
+    p.add_argument("--root", required=True)
+    p.add_argument("--capacity-bytes", type=int, default=None)
+    p.add_argument("--poll-interval", type=float, default=0.05)
+    p.set_defaults(fn=cmd_start)
+
+    p = sub.add_parser("submit", help="submit a JobSpec over the inbox")
+    p.add_argument("--root", required=True)
+    p.add_argument("--job-id", required=True)
+    p.add_argument("--workload", required=True,
+                   help='registered name (e.g. "mlp") or "module:attr"')
+    p.add_argument("--params", default="{}",
+                   help="JSON dict of workload factory kwargs")
+    p.add_argument("--iterations", type=int, default=1)
+    p.add_argument("--priority", type=float, default=None)
+    p.add_argument("--budget-hint-bytes", type=int, default=None)
+    p.add_argument("--wait", action="store_true")
+    p.add_argument("--timeout", type=float, default=300.0)
+    p.set_defaults(fn=cmd_submit)
+
+    p = sub.add_parser("status", help="daemon heartbeat + job table")
+    p.add_argument("--root", required=True)
+    p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("drain", help="finish queued work, then stop")
+    p.add_argument("--root", required=True)
+    p.add_argument("--wait", action="store_true")
+    p.add_argument("--timeout", type=float, default=300.0)
+    p.set_defaults(fn=cmd_drain)
+
+    p = sub.add_parser("smoke", help="CI end-to-end self-check")
+    p.add_argument("--root", required=True)
+    p.set_defaults(fn=cmd_smoke)
+
+    args = ap.parse_args()
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
