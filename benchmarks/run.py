@@ -124,9 +124,11 @@ def bench_scenarios(smoke: bool = False,
                     experience_dir: str = None) -> None:
     """Multi-workload dynamic scenario suite: staggered launches, job
     churn, priority inversion, bursty interference, the two preemption
-    scenarios (flash-crowd, preempt-vs-boundary), and the experience
-    plane's cold-vs-warm boot scenario — every cross-job policy vs the
-    arbiter-assigned device budget (see benchmarks/scenarios.py).
+    scenarios (flash-crowd, preempt-vs-boundary), the experience
+    plane's cold-vs-warm boot scenario, and the serving plane's
+    serving-pressure scenario (real continuous-batching decode under a
+    KV-cache budget) — every cross-job policy vs the arbiter-assigned
+    device budget (see benchmarks/scenarios.py).
 
     ``experience_dir`` persists the cold-vs-warm scenario's experience
     store across invocations (CI keys it on the store schema version via
@@ -169,6 +171,23 @@ def bench_scenarios(smoke: bool = False,
                 "calib_err": (round(m["calib_err"], 6)
                               if "calib_err" in m else None),
             }
+            # serving-plane rows: throughput/TTFT trajectory plus the
+            # serving contract fields (0 OOMs under pressure, decode
+            # bit-identity vs the unpressured golden run, finite p99
+            # TTFT) tools/check_bench_regression.py enforces
+            if "tokens_per_s" in m:
+                p99 = m.get("ttft_p99")
+                gate[f"{scn}/{pol}"].update({
+                    "within_budget": m["within_budget"],
+                    "tokens_per_s": round(m["tokens_per_s"], 6),
+                    "ttft_p99": (round(p99, 6) if p99 is not None
+                                 else None),
+                    "decode_bit_identical": m["decode_bit_identical"],
+                    "served": m["served"],
+                    "rejected": m["rejected"],
+                    "evictions": m["evictions"],
+                    "prefetches": m["prefetches"],
+                })
             # service-plane overload rows: queue-wait trajectory plus the
             # admission contract fields (reservations never over capacity,
             # warm-fingerprint prediction precision) the gate enforces

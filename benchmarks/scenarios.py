@@ -32,6 +32,12 @@ Scenarios (all ≥ 2 concurrent jobs, all dynamic):
                        capacity — measuring queue wait, admission precision
                        (predicted vs measured peak), fairness over
                        slowdowns, and zero OOMs
+    serving-pressure   continuous-batching LM decode (the real
+                       ServingEngine) whose aggregate KV cache exceeds the
+                       device budget: the KvResidencyPass swaps cold
+                       sequences' blocks to host and prefetches them ahead
+                       of their decode turn — zero OOMs and bit-identical
+                       decode outputs where the unscheduled baseline OOMs
 
 Preemption scenarios (arbiter mode "boundary" vs "preempt", measuring
 **time-to-within-budget** — how long after a burst the device budget is
@@ -1110,6 +1116,125 @@ def run_overload_scenario(scn: OverloadScenario, smoke: bool = False) -> Dict:
     return rec
 
 
+# ----------------------------------------------------------------------
+# Serving pressure: continuous-batching decode under a KV-cache budget
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class ServingScenario:
+    """An LM decode mix whose full KV footprint exceeds the device budget.
+
+    The real :class:`~repro.serving.engine.ServingEngine` serves the same
+    arrival trace three ways: ``unpressured`` (no budget — the reference
+    run whose outputs are golden), ``kv-schedule`` (the KvResidencyPass
+    swaps cold sequences' cache blocks to host and prefetches them ahead
+    of their decode turn; prefills admitted through the AdmissionQueue),
+    and ``no-schedule`` (same capacity, residency scheduling off — the
+    ledger counts every capacity crossing as an OOM event).  The contract
+    row: under pressure the scheduled run stays OOM-free with decode
+    outputs bit-identical to the unpressured run, at tokens/sec within a
+    fixed band of it; the unscheduled baseline OOMs by construction."""
+
+    name: str
+    description: str
+    arch: str = "tinyllama-1.1b"
+    max_sequences: int = 4
+    trace: str = "poisson"         # staggered arrivals, bursty in bulk
+    mean_gap: float = 0.002
+    block_tokens: int = 4
+    resident_slots: int = 2        # budget ~= this many full sequences
+    # (prompt_len, gen_len, n_requests) per variant
+    shape: Dict[bool, Tuple[int, int, int]] = dataclasses.field(
+        default_factory=lambda: {True: (4, 8, 6), False: (8, 16, 10)})
+
+
+SERVING = ServingScenario(
+    name="serving-pressure",
+    description="continuous-batching LM decode whose aggregate KV cache "
+                "exceeds the device budget: cold sequences' cache blocks "
+                "swap to host between decode turns and are prefetched "
+                "ahead of their next turn; the same trace without "
+                "residency scheduling busts the capacity",
+)
+
+
+def run_serving_scenario(scn: ServingScenario, smoke: bool = False) -> Dict:
+    from repro.serving import ServingEngine, make_trace
+
+    prompt_len, gen_len, n_requests = scn.shape[bool(smoke)]
+    max_len = prompt_len + gen_len
+    eng = ServingEngine(scn.arch, max_sequences=scn.max_sequences,
+                        max_len=max_len, seed=0)
+    requests = make_trace(scn.trace, n_requests, seed=0,
+                          prompt_len=prompt_len, gen_len=gen_len,
+                          mean_gap=scn.mean_gap)
+    # the budget holds `resident_slots` full sequences plus a little slack
+    # — strictly less than the mix's full footprint, so the unscheduled
+    # baseline cannot fit
+    bpt = eng.bytes_per_token
+    budget = bpt * (max_len * scn.resident_slots + 2)
+    full_footprint = bpt * max_len * scn.max_sequences
+    assert budget < full_footprint
+
+    def _serve(capacity, serve_budget, schedule):
+        mem = MemoryEngine(PROFILE, capacity_bytes=capacity, trace=True)
+        report, outputs = eng.serve(
+            requests, budget_bytes=serve_budget, schedule=schedule,
+            block_tokens=scn.block_tokens, engine=mem, job_id="serve")
+        return report, outputs
+
+    # golden reference: no budget, no scheduling
+    ref, golden = _serve(None, None, False)
+    sched, out_s = _serve(budget, budget, True)
+    base, out_b = _serve(budget, budget, False)
+
+    def _srow(report, outputs):
+        eor = max(report.total_time - ref.total_time, 0.0) \
+            / max(ref.total_time, 1e-12)
+        msr = 1.0 - report.peak_bytes / max(ref.peak_bytes, 1)
+        p99 = report.ttft_p99
+        return {
+            "time": report.total_time,
+            "peak": report.peak_bytes,
+            "within_budget": bool(report.peak_bytes <= budget),
+            "oom_events": report.oom_events,
+            "MSR": msr, "EOR": eor,
+            "CBR": msr / eor if eor > 0 else 0.0,
+            "fairness": jain_fairness(report.ttft),
+            "tokens_per_s": report.tokens_per_s,
+            "ttft_mean": report.ttft_mean,
+            "ttft_p99": p99 if math.isfinite(p99) else None,
+            "decode_bit_identical": bool(outputs == golden),
+            "served": report.served,
+            "rejected": len(report.rejected),
+            "evictions": report.evictions,
+            "prefetches": report.prefetches,
+            "stall_time": report.stall_time,
+            "swapped_out_bytes": report.swapped_out_bytes,
+            "swapped_in_bytes": report.swapped_in_bytes,
+        }
+
+    rec = {
+        "description": scn.description,
+        "device_budget": budget,
+        "full_footprint_bytes": full_footprint,
+        "bytes_per_token": bpt,
+        "arch": scn.arch,
+        "trace": scn.trace,
+        "jobs": {r.rid: {"offset": r.arrival,
+                         "iterations": r.gen_len,
+                         "priority": r.priority,
+                         "budget": bpt * r.total_tokens,
+                         "prompt_len": r.prompt_len}
+                 for r in requests},
+        "policies": {
+            "kv-schedule": _srow(sched, out_s),
+            "no-schedule": _srow(base, out_b),
+            "unpressured": _srow(ref, golden),
+        },
+    }
+    return rec
+
+
 def _json_safe(obj):
     """Replace non-finite floats (ttwb=inf == "never recovered") with
     None: `Infinity` is not valid RFC-8259 JSON and would break strict
@@ -1126,6 +1251,7 @@ def _json_safe(obj):
 def run(out_json: Optional[str] = None, smoke: bool = False,
         policies=POLICIES, preemption: bool = True,
         cold_warm: bool = True, overload: bool = True,
+        serving: bool = True,
         experience_dir: Optional[str] = None) -> Dict[str, Dict]:
     table = {scn.name: run_scenario(scn, smoke=smoke, policies=policies)
              for scn in SCENARIOS}
@@ -1137,6 +1263,8 @@ def run(out_json: Optional[str] = None, smoke: bool = False,
             COLD_WARM, smoke=smoke, experience_dir=experience_dir)
     if overload:
         table[OVERLOAD.name] = run_overload_scenario(OVERLOAD, smoke=smoke)
+    if serving:
+        table[SERVING.name] = run_serving_scenario(SERVING, smoke=smoke)
     if out_json:
         with open(out_json, "w") as f:
             json.dump(_json_safe(table), f, indent=1)

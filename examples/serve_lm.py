@@ -1,15 +1,16 @@
-"""Batched autoregressive serving (deliverable (b)): prefill + KV/SSM-cache
-decode with the same serve_step the decode_* dry-run cells lower.
+"""Continuous-batching LM serving over the ServingEngine (deliverable (b)):
+prefill -> insert -> chunked cohort decode, with KV-cache residency
+scheduling when a budget is given.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m \
-        --batch 4 --prompt-len 32 --gen 64
+    PYTHONPATH=src python examples/serve_lm.py --arch tinyllama-1.1b \
+        --max-sequences 4 --prompt-len 8 --gen 8 --trace burst --budget-kb 24
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.serve import main
+from repro.serving.cli import main
 
 if __name__ == "__main__":
     sys.exit(main())

@@ -108,6 +108,15 @@ class JobHandle:
         return self.ledger_view.budget_bytes if self.ledger_view else None
 
 
+def _is_serve(handle: "JobHandle") -> bool:
+    """Serve handles are discriminated by their spec's ``kind``, NOT by
+    ``closed_jaxpr is None`` — handles built outside submit() (tests,
+    manual registration) legitimately carry no jaxpr but are training
+    jobs as far as the iteration-DAG scheduler is concerned."""
+    return (handle.spec is not None
+            and getattr(handle.spec, "kind", "train") == "serve")
+
+
 @dataclasses.dataclass
 class CapturedJob:
     """A JobSpec resolved and captured: everything admission + submit need.
@@ -411,7 +420,15 @@ class GlobalController:
         ``spec.payload`` wins; otherwise the registered / importable
         workload factory named by ``spec.workload``).  The capture is
         reusable: the daemon captures once, predicts the peak, and hands
-        the same ``CapturedJob`` to ``submit`` after admission."""
+        the same ``CapturedJob`` to ``submit`` after admission.
+
+        Serve specs (``kind="serve"``) have no jaxpr to capture — their
+        timeline is request-driven, not an iteration DAG.  They capture to
+        a *synthetic* access sequence whose tensors are the per-slot KV
+        footprints, so ``predict_peak`` and the arbiter's demand math see
+        a serving job through the same lens as a training one."""
+        if getattr(spec, "kind", "train") == "serve":
+            return self._capture_serve_spec(spec)
         from ..service.workloads import resolve_workload
         step_fn, params, opt_state, batch = resolve_workload(spec)
         # reflect current device contention into cold-start predictions
@@ -428,6 +445,30 @@ class GlobalController:
                 self.experience_failures.append((spec.job_id, e))
         return CapturedJob(seq=seq, closed_jaxpr=closed,
                            args=(params, opt_state, batch), fingerprint=fp)
+
+    # ------------------------------------------------------------------
+    def _capture_serve_spec(self, spec) -> CapturedJob:
+        """Resolve a serve spec to ``(serving_engine, requests)`` and build
+        the synthetic access sequence standing in for its jaxpr: one
+        decode-turn operator touching a full-cache tensor per batch slot.
+        ``analyze(..., free_at_last_use=False)`` over it is exactly the
+        all-slots-resident KV bound admission should reserve against."""
+        from ..service.workloads import resolve_serve_workload
+        from .access import Operator, TensorSpec, TensorKind
+        engine, requests = resolve_serve_workload(spec)
+        sp = spec.serve
+        per_seq = engine.bytes_per_token * (sp.prompt_len + sp.gen_len)
+        tensors = {
+            f"kvslot{i}": TensorSpec(
+                tid=f"kvslot{i}", size_bytes=per_seq,
+                kind=TensorKind.ACTIVATION, job_id=spec.job_id)
+            for i in range(sp.max_sequences)}
+        ops = [Operator(idx=0, name="decode_turn", inputs=tuple(tensors),
+                        outputs=tuple(tensors), latency=1e-3,
+                        job_id=spec.job_id)]
+        seq = AccessSequence(spec.job_id, ops, tensors, initial_resident=[])
+        return CapturedJob(seq=seq, closed_jaxpr=None,
+                           args=(engine, requests), fingerprint=None)
 
     # ------------------------------------------------------------------
     def predict_peak(self, seq: AccessSequence,
@@ -467,6 +508,8 @@ class GlobalController:
         ``capture_spec`` result (the daemon captures before admission)."""
         if captured is None:
             captured = self.capture_spec(spec)
+        if getattr(spec, "kind", "train") == "serve":
+            return self._submit_serve(spec, captured)
         seq, closed = captured.seq, captured.closed_jaxpr
         with self._lock:
             if spec.job_id in self.jobs and not self.jobs[spec.job_id].done:
@@ -502,6 +545,58 @@ class GlobalController:
         handle.thread = t
         t.start()
         return handle
+
+    # ------------------------------------------------------------------
+    def _submit_serve(self, spec, captured: CapturedJob) -> JobHandle:
+        """Register + start a serving job.  It shares the device ledger,
+        DMA channel and arbiter slice with every training job, but its
+        residency is planned per decode turn by the serving plane's
+        ``KvResidencyPass`` — the iteration-DAG MemoryScheduler never sees
+        it (its timeline is a rolling horizon, not a fixed op sequence)."""
+        with self._lock:
+            if spec.job_id in self.jobs and not self.jobs[spec.job_id].done:
+                raise ValueError(f"job {spec.job_id!r} is already live")
+            handle = JobHandle(job_id=spec.job_id, seq=captured.seq,
+                               closed_jaxpr=None, args=captured.args,
+                               iterations=spec.iterations,
+                               priority=spec.priority or 1.0, spec=spec)
+            self.jobs[spec.job_id] = handle
+            if self.arbiter is not None:
+                demand = analyze([captured.seq],
+                                 free_at_last_use=False).peak_bytes
+                self.arbiter.register(spec.job_id,
+                                      priority=spec.priority or 1.0,
+                                      demand_bytes=demand)
+            if spec.schedule:
+                self._replan()
+        t = threading.Thread(target=self._run_serve_job, args=(handle,),
+                             daemon=True)
+        handle.thread = t
+        t.start()
+        return handle
+
+    # ------------------------------------------------------------------
+    def _run_serve_job(self, handle: JobHandle) -> None:
+        """Thread body for a serving job: hand the request trace to the
+        ServingEngine, which drives a ServeSession against OUR ledger and
+        channel — KV blocks and training tensors contend for the same
+        bytes and the same DMA slot, which is the whole point."""
+        try:
+            engine, requests = handle.args
+            sp = handle.spec.serve
+            report, _ = engine.serve(
+                requests, budget_bytes=handle.budget_bytes,
+                schedule=handle.spec.schedule,
+                block_tokens=sp.block_tokens, engine=self.engine,
+                job_id=handle.job_id)
+            handle.stats.append(report)
+            handle.step_times.append(report.total_time)
+            handle.peak_bytes = max(handle.peak_bytes, report.peak_bytes)
+        except BaseException as e:  # noqa: BLE001 - surfaced via wait()
+            handle.error = e
+            handle.error_tb = traceback.format_exc()
+        finally:
+            self._on_job_exit(handle)
 
     # ------------------------------------------------------------------
     def launch(self, step_fn: Callable, params, opt_state, batch,
@@ -544,13 +639,21 @@ class GlobalController:
                     self.arbiter.update_demand(j, measured)
             prev_assignment = dict(self.arbiter.last_assignment)
             budgets = self.arbiter.split(live)
-        result = self.scheduler.schedule(live, budgets=budgets)
+        # serve jobs take part in the budget split but not in iteration-DAG
+        # planning — their per-turn KvResidencyPass plans against the slice
+        planned = [j for j in live if not _is_serve(self.jobs[j])]
+        if planned:
+            plan_budgets = None if budgets is None else {
+                j: budgets[j] for j in planned if j in budgets}
+            result = self.scheduler.schedule(planned, budgets=plan_budgets)
+            for j in planned:
+                h = self.jobs[j]
+                h.plan = result.plans[j]
+                h.plan_version += 1
         for j in live:
-            h = self.jobs[j]
-            h.plan = result.plans[j]
-            h.plan_version += 1
             if budgets is not None:
-                h.ledger_view = self.accountant.view(j, budgets.get(j))
+                self.jobs[j].ledger_view = self.accountant.view(
+                    j, budgets.get(j))
         self._replan_count += 1
         if (self.arbiter is not None and self.arbiter.mode == "preempt"
                 and budgets is not None):
@@ -688,8 +791,9 @@ class GlobalController:
         skipped."""
         handle.done = True
         handle.executor = None
+        is_serve = _is_serve(handle)
         with self._lock:
-            if self.experience is not None:
+            if self.experience is not None and not is_serve:
                 # flush distilled experience BEFORE deregistering: the
                 # hub still holds this job's records, the handle its
                 # final plan.  Failures are recorded, never raised — the
@@ -712,7 +816,8 @@ class GlobalController:
                     self.experience.flush()
                 except Exception as e:  # noqa: BLE001
                     self.experience_failures.append((handle.job_id, e))
-            self.scheduler.remove_job(handle.job_id)
+            if not is_serve:
+                self.scheduler.remove_job(handle.job_id)
             if self.arbiter is not None:
                 reclaimed = self.arbiter.last_assignment.get(
                     handle.job_id, 0)

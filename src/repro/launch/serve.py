@@ -1,86 +1,35 @@
-"""Serving driver: batched autoregressive decoding with a KV/SSM cache.
+"""DEPRECATED serving driver — forwards to ``repro.serving.cli``.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --reduced --batch 4 --prompt-len 32 --gen 32
+The monolithic ``main`` here (model setup + token-by-token prefill + greedy
+decode in one function) was dismantled into the serving plane:
 
-Prefill runs the chunked forward (logits for the last position seed the
-first sampled token... greedy here); decode then steps the cache one token
-at a time.  The same `serve_step` is what the decode_* dry-run cells lower
-on the production mesh.
+* :class:`repro.serving.engine.ServingEngine` — the maxtext-shaped
+  ``prefill(prompt) -> insert(slot) -> generate()`` runtime;
+* :class:`repro.serving.session.ServeSession` — the continuous-batching
+  loop with KV-cache residency scheduling;
+* ``repro.serving.cli`` — the flag-parsing entry point.
+
+Kept one release as a shim (same migration pattern as
+``GlobalController.launch()`` -> ``submit()``): old flags are translated
+where they map (``--batch`` becomes ``--max-sequences``).
 """
 from __future__ import annotations
 
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
-from repro.launch.sharding import MeshRules, use_rules
-from repro.launch.steps import build_serve_step
-from repro.models.registry import get_model
+import sys
+import warnings
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-        if cfg.n_experts:
-            cfg.moe_impl = "dense"
-    api = get_model(cfg)
-    mesh = make_host_mesh()
-    rules = MeshRules(mesh, cfg=cfg)
-    max_len = args.prompt_len + args.gen
-
-    params, _ = api.init(jax.random.PRNGKey(0))
-    cache, _ = api.init_cache(args.batch, max_len)
-    serve_step = build_serve_step(api, rules)
-    with use_rules(rules):
-        jitted = jax.jit(serve_step, donate_argnums=(1,))
-
-    key = jax.random.PRNGKey(7)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                min(cfg.vocab_size, 64))
-    extra = {}
-    if cfg.enc_dec:
-        extra["enc_out"] = jax.random.normal(
-            key, (args.batch, max(args.prompt_len // cfg.enc_seq_ratio, 8),
-                  cfg.d_model)).astype(cfg.dtype)
-
-    # prefill: feed the prompt token-by-token through the cache (simple and
-    # uniform across arch families; chunked prefill is the forward path)
-    tok = prompt[:, :1]
-    t0 = time.time()
-    generated = []
-    for i in range(max_len - 1):
-        batch = {"tokens": tok, **extra}
-        logits, cache = jitted(params, cache, batch, jnp.int32(i))
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        if i + 1 < args.prompt_len:
-            tok = prompt[:, i + 1:i + 2]
-        else:
-            tok = nxt
-            generated.append(np.asarray(nxt)[:, 0])
-    dt = time.time() - t0
-    gen = np.stack(generated, axis=1)
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"steps={max_len - 1} ({(max_len - 1) * args.batch / dt:.1f} tok/s)")
-    print("[serve] sample generations (token ids):")
-    for row in gen[:2]:
-        print("   ", row[:16].tolist())
-    assert np.isfinite(gen).all()
-    return 0
+    warnings.warn(
+        "repro.launch.serve is deprecated; use repro.serving.cli (the "
+        "ServingEngine-based driver) instead",
+        DeprecationWarning, stacklevel=2)
+    from repro.serving.cli import main as serving_main
+    argv = list(argv) if argv is not None else sys.argv[1:]
+    argv = ["--max-sequences" if a == "--batch" else
+            a.replace("--batch=", "--max-sequences=", 1) if
+            a.startswith("--batch=") else a for a in argv]
+    return serving_main(argv)
 
 
 if __name__ == "__main__":

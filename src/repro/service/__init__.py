@@ -17,14 +17,18 @@ See docs/architecture.md, "Scheduler as a service".
 
 from .client import ServiceClient
 from .daemon import SchedulerDaemon
-from .jobspec import JobSpec, JobState, SPEC_SCHEMA_VERSION
+from .jobspec import JobSpec, JobState, ServeParams, SPEC_SCHEMA_VERSION
 from .queue import AdmissionQueue, QueuedJob
 from .store import JobRecord, JobStore, STORE_SCHEMA_VERSION
-from .workloads import register_workload, registered_workloads, resolve_workload
+from .workloads import (register_serve_workload, register_workload,
+                        registered_serve_workloads, registered_workloads,
+                        resolve_serve_workload, resolve_workload)
 
 __all__ = [
     "AdmissionQueue", "JobRecord", "JobSpec", "JobState", "JobStore",
-    "QueuedJob", "SchedulerDaemon", "ServiceClient",
+    "QueuedJob", "SchedulerDaemon", "ServeParams", "ServiceClient",
     "SPEC_SCHEMA_VERSION", "STORE_SCHEMA_VERSION",
-    "register_workload", "registered_workloads", "resolve_workload",
+    "register_serve_workload", "register_workload",
+    "registered_serve_workloads", "registered_workloads",
+    "resolve_serve_workload", "resolve_workload",
 ]

@@ -41,7 +41,9 @@ class ServiceClient:
             raise ValueError(
                 "a JobSpec with an in-process payload cannot cross the "
                 "inbox — submit a workload reference instead")
-        if not spec.workload:
+        if not spec.workload and spec.kind != "serve":
+            # serve specs may omit the workload — resolution falls back to
+            # the builtin "lm" serve factory on the daemon side
             raise ValueError("wire submission requires spec.workload")
         self._drop(spec.job_id, spec.to_dict())
         return spec.job_id

@@ -21,7 +21,10 @@ from typing import Any, Dict, Optional, Tuple
 
 # Wire-format schema version.  Bump on breaking field changes; readers treat a
 # mismatched schema as absent (same tolerance rule as core/experience.py).
-SPEC_SCHEMA_VERSION = 1
+# Schema 2 added `kind` + `serve` (the serving plane); schema-1 specs are
+# still readable — they default to kind="train".
+SPEC_SCHEMA_VERSION = 2
+_READABLE_SCHEMAS = (1, 2)
 
 
 class JobState(str, enum.Enum):
@@ -44,6 +47,45 @@ class JobState(str, enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeParams:
+    """Wire description of a serving job's workload shape.
+
+    ``arch`` names the model config; ``trace`` names a deterministic
+    request-arrival generator (``repro.serving.traces.make_trace``) so the
+    request mix crosses the wire as a recipe, not a request list.
+    """
+
+    arch: str = "tinyllama-1.1b"
+    max_sequences: int = 4
+    n_requests: int = 8
+    prompt_len: int = 8
+    gen_len: int = 8
+    trace: str = "steady"
+    mean_gap: float = 0.002
+    block_tokens: int = 4
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        for field in ("max_sequences", "n_requests", "prompt_len",
+                      "gen_len", "block_tokens"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"ServeParams.{field} must be >= 1")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "ServeParams":
+        if not isinstance(data, dict):
+            raise ValueError("ServeParams wire form must be a JSON object")
+        known = {f.name for f in dataclasses.fields(cls)}
+        try:
+            return cls(**{k: v for k, v in data.items() if k in known})
+        except TypeError as exc:
+            raise ValueError(f"malformed ServeParams: {exc}") from exc
+
+
+@dataclasses.dataclass(frozen=True)
 class JobSpec:
     """Frozen, serializable description of one schedulable job.
 
@@ -52,6 +94,15 @@ class JobSpec:
     job_id:
         Unique id; also the idempotency key at the daemon inbox (a duplicate
         submission of a known non-terminal job_id is ignored).
+    kind:
+        ``"train"`` (the default; everything before PR 8) or ``"serve"`` —
+        a continuous-batching decode job whose KV-cache blocks are the
+        schedulable tensors.  Serve jobs resolve their workload through
+        :func:`repro.service.workloads.resolve_serve_workload` and carry
+        their shape in ``serve``.
+    serve:
+        :class:`ServeParams` for ``kind="serve"`` jobs (auto-filled with
+        defaults when omitted); must be None for train jobs.
     workload:
         Reference the daemon can resolve to ``(step_fn, params, opt_state,
         batch)``: either a name registered via
@@ -87,6 +138,8 @@ class JobSpec:
     """
 
     job_id: str
+    kind: str = "train"
+    serve: Optional[ServeParams] = None
     workload: Optional[str] = None
     workload_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     priority: Optional[float] = None
@@ -102,6 +155,15 @@ class JobSpec:
     def __post_init__(self) -> None:
         if not self.job_id or not isinstance(self.job_id, str):
             raise ValueError("JobSpec.job_id must be a non-empty string")
+        if self.kind not in ("train", "serve"):
+            raise ValueError(
+                f"JobSpec.kind must be 'train' or 'serve', got {self.kind!r}")
+        if isinstance(self.serve, dict):  # wire form straight off JSON
+            object.__setattr__(self, "serve", ServeParams.from_dict(self.serve))
+        if self.kind == "serve" and self.serve is None:
+            object.__setattr__(self, "serve", ServeParams())
+        if self.kind == "train" and self.serve is not None:
+            raise ValueError("JobSpec.serve is only valid with kind='serve'")
         if self.iterations < 1:
             raise ValueError(f"JobSpec.iterations must be >= 1, got {self.iterations}")
         if self.priority is not None and self.priority <= 0:
@@ -120,6 +182,8 @@ class JobSpec:
         return {
             "schema": SPEC_SCHEMA_VERSION,
             "job_id": self.job_id,
+            "kind": self.kind,
+            "serve": self.serve.to_dict() if self.serve else None,
             "workload": self.workload,
             "workload_params": dict(self.workload_params),
             "priority": self.priority,
@@ -141,7 +205,7 @@ class JobSpec:
         if not isinstance(data, dict):
             raise ValueError("JobSpec wire form must be a JSON object")
         schema = data.get("schema", SPEC_SCHEMA_VERSION)
-        if schema != SPEC_SCHEMA_VERSION:
+        if schema not in _READABLE_SCHEMAS:
             raise ValueError(f"unsupported JobSpec schema {schema!r}")
         known = {f.name for f in dataclasses.fields(cls)} - {"payload"}
         kwargs = {k: v for k, v in data.items() if k in known}

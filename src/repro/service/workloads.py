@@ -14,6 +14,13 @@ Resolution order:
 Factories take ``**spec.workload_params`` and return the payload tuple.
 The builtin ``"mlp"`` workload builds the same tiny MLP train step the test
 suite and scenario suite use.
+
+Serving jobs (``spec.kind == "serve"``) resolve through a parallel registry:
+a *serve factory* takes the spec's :class:`~repro.service.jobspec.ServeParams`
+and returns ``(serving_engine, requests)`` — a
+:class:`~repro.serving.engine.ServingEngine` plus the deterministic request
+trace it should serve.  The builtin ``"lm"`` serve workload builds both from
+the named model config and trace generator.
 """
 
 from __future__ import annotations
@@ -68,6 +75,69 @@ def resolve_workload(spec: JobSpec) -> Payload:
             f"(registered: {', '.join(registered_workloads()) or 'none'})"
         )
     return factory(**dict(spec.workload_params))
+
+
+# -- serve workloads ---------------------------------------------------------
+
+ServeFactory = Callable[..., Tuple[Any, Any]]
+
+_SERVE_REGISTRY: Dict[str, ServeFactory] = {}
+
+
+def register_serve_workload(name: str, factory: ServeFactory) -> None:
+    """Register a serve factory: ``factory(serve_params) -> (engine,
+    requests)``.  Overwrites an existing entry."""
+    if not name or ":" in name:
+        raise ValueError(f"invalid serve workload name {name!r}")
+    _SERVE_REGISTRY[name] = factory
+
+
+def registered_serve_workloads() -> Tuple[str, ...]:
+    return tuple(sorted(_SERVE_REGISTRY))
+
+
+def resolve_serve_workload(spec: JobSpec) -> Tuple[Any, Any]:
+    """Resolve a ``kind="serve"`` spec to ``(serving_engine, requests)``.
+
+    Same tolerance contract as :func:`resolve_workload`: an unresolvable
+    spec raises ``ValueError`` and the daemon records it REJECTED.
+    """
+    if spec.kind != "serve":
+        raise ValueError(f"job {spec.job_id!r}: not a serve spec")
+    name = spec.workload or "lm"
+    factory = _SERVE_REGISTRY.get(name)
+    if factory is None and ":" in name:
+        mod_name, _, attr = name.partition(":")
+        try:
+            factory = getattr(importlib.import_module(mod_name), attr)
+        except (ImportError, AttributeError) as exc:
+            raise ValueError(
+                f"job {spec.job_id!r}: cannot import serve workload "
+                f"{name!r}: {exc}"
+            ) from exc
+    if factory is None:
+        raise ValueError(
+            f"job {spec.job_id!r}: unknown serve workload {name!r} "
+            f"(registered: {', '.join(registered_serve_workloads()) or 'none'})"
+        )
+    return factory(spec.serve)
+
+
+def make_lm_serving(sp) -> Tuple[Any, Any]:
+    """Builtin ``"lm"`` serve workload: a :class:`ServingEngine` over the
+    named (reduced) model config plus the named deterministic trace."""
+    from ..serving.engine import ServingEngine
+    from ..serving.traces import make_trace
+
+    engine = ServingEngine(sp.arch, max_sequences=sp.max_sequences,
+                           max_len=sp.prompt_len + sp.gen_len, seed=sp.seed)
+    requests = make_trace(sp.trace, sp.n_requests, seed=sp.seed,
+                          prompt_len=sp.prompt_len, gen_len=sp.gen_len,
+                          mean_gap=sp.mean_gap)
+    return engine, requests
+
+
+register_serve_workload("lm", make_lm_serving)
 
 
 # -- builtin workloads -------------------------------------------------------

@@ -1,0 +1,340 @@
+"""ServingEngine: the real continuous-batching runtime over a jitted model.
+
+The monolithic ``launch/serve.py::main`` is dismantled into the
+maxtext-shaped serving surface:
+
+    eng = ServingEngine("tinyllama-1.1b", max_sequences=4, max_len=64)
+    pr = eng.prefill(prompt_tokens, rid="r0")   # compute burst, first token
+    eng.insert(pr, slot=0)                      # splice into the batch cache
+    eng.generate()                              # one decode round
+
+and a batch driver, ``serve(requests, ...)``, that wires the engine's
+side-effect hooks into a :class:`~repro.serving.session.ServeSession` so
+the *same* loop that simulates a served mix in virtual time drives real
+jitted decode steps here — evictions copy a sequence's occupied cache
+blocks to host, its decode turn restores them first.
+
+Why restoration is a correctness requirement and not just accounting: the
+model's ``decode_step`` takes one scalar index, so every decode turn
+writes position ``index`` of *every* batch row.  A slot sitting out a turn
+whose index falls inside its valid prefix gets that prefix scribbled.  The
+engine therefore keeps a host-side shadow copy of every live slot that is
+not in the decoding cohort and restores it before the slot's own turn —
+which is exactly the evict/prefetch motion the residency pass schedules,
+applied to the real arrays.  Batch rows are computationally independent,
+so a served run under memory pressure is **bit-identical** to the
+unpressured run (pinned by tests/test_serving.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..core.engine import MemoryEngine
+from ..core.plan import MachineProfile
+from ..launch.mesh import make_host_mesh
+from ..launch.sharding import MeshRules, use_rules
+from ..launch.steps import build_serve_step
+from ..models.registry import get_model
+from .residency import SeqView, build_horizon
+from .session import SeqState, ServeHooks, ServeReport, ServeSession
+from .traces import Request
+
+
+@dataclasses.dataclass
+class _LeafAxes:
+    """Which axes of one cache leaf index the batch slot / the position."""
+
+    batch: Optional[int]
+    length: Optional[int]
+
+
+def _cache_leaf_axes(api, batch: int, max_len: int) -> List[_LeafAxes]:
+    """Classify cache leaves by diffing abstract shapes: the axis that
+    changes when ``batch`` grows is the slot axis, the one that changes
+    with ``max_len`` is the position axis (absent for positionless state
+    like SSM carries).  Shape-diffing keeps this arch-agnostic."""
+    def shapes(b, m):
+        tree = jax.eval_shape(lambda: api.init_cache(b, m)[0])
+        return [x.shape for x in jax.tree_util.tree_leaves(tree)]
+
+    base = shapes(batch, max_len)
+    bgrow = shapes(batch + 1, max_len)
+    lgrow = shapes(batch, max_len + 1)
+
+    def diff_axis(a, b):
+        for i, (x, y) in enumerate(zip(a, b)):
+            if x != y:
+                return i
+        return None
+
+    return [_LeafAxes(batch=diff_axis(s, sb), length=diff_axis(s, sl))
+            for s, sb, sl in zip(base, bgrow, lgrow)]
+
+
+def _slot_index(spec: _LeafAxes, ndim: int, slot, lo: int, hi: int):
+    idx: List = [slice(None)] * ndim
+    if spec.batch is not None:
+        idx[spec.batch] = slot
+    if spec.length is not None:
+        idx[spec.length] = slice(lo, hi)
+    return tuple(idx)
+
+
+@dataclasses.dataclass
+class PrefillResult:
+    """A prefilled prompt: its single-slot cache, ready to splice in."""
+
+    rid: str
+    prompt: np.ndarray
+    prompt_len: int
+    first_token: int
+    cache: object            # batch-1 cache pytree, positions [0, prompt_len)
+
+
+class ServingEngine:
+    """Continuous-batching decode over one shared jitted cache."""
+
+    def __init__(self, arch: str = "tinyllama-1.1b", *, reduced: bool = True,
+                 max_sequences: int = 4, max_len: int = 64, seed: int = 0):
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+            if cfg.n_experts:
+                cfg.moe_impl = "dense"
+        if cfg.enc_dec:
+            raise ValueError(
+                "ServingEngine serves decoder-only LMs; encoder-decoder "
+                "arches still go through the forward/decode driver")
+        self.cfg = cfg
+        self.api = get_model(cfg)
+        self.max_sequences = int(max_sequences)
+        self.max_len = int(max_len)
+        try:
+            self.rules: Optional[MeshRules] = MeshRules(make_host_mesh(),
+                                                        cfg=cfg)
+        except Exception:  # mesh API unavailable: run unsharded
+            self.rules = None
+        self.params, _ = self.api.init(jax.random.PRNGKey(seed))
+        self.cache, _ = self.api.init_cache(self.max_sequences, self.max_len)
+        serve_step = build_serve_step(self.api, self.rules)
+        if self.rules is not None:
+            with use_rules(self.rules):
+                self._step = jax.jit(serve_step)
+        else:
+            self._step = jax.jit(serve_step)
+        self._axes = _cache_leaf_axes(self.api, self.max_sequences,
+                                      self.max_len)
+        # per-token-per-sequence cache bytes, from abstract shapes only
+        one, _ = self.api.abstract_cache(1, 1)
+        self.bytes_per_token = int(sum(
+            int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+            for x in jax.tree_util.tree_leaves(one)))
+        # live serving state
+        self._tok = np.zeros((self.max_sequences, 1), np.int32)
+        self._states: Dict[str, SeqState] = {}
+        self._outputs: Dict[str, List[int]] = {}
+        self._shadow: Dict[str, Dict[int, np.ndarray]] = {}
+        self._channel = None   # bound by serve() for transfer accounting
+
+    # -- deterministic prompts (rid-keyed, run-independent) -------------
+
+    def prompt_for(self, rid: str, prompt_len: int) -> np.ndarray:
+        key = jax.random.PRNGKey(zlib.crc32(rid.encode()) & 0x7FFFFFFF)
+        hi = min(self.cfg.vocab_size, 64)
+        return np.asarray(
+            jax.random.randint(key, (prompt_len,), 0, hi, jnp.int32))
+
+    # -- cache slicing --------------------------------------------------
+
+    def _leaves(self):
+        return jax.tree_util.tree_flatten(self.cache)
+
+    def _save_slot(self, s: SeqState) -> int:
+        """Shadow-copy a slot's occupied cache region to host.  Returns
+        bytes copied; no-op if already shadowed."""
+        if s.rid in self._shadow:
+            return 0
+        leaves, _ = self._leaves()
+        saved: Dict[int, np.ndarray] = {}
+        nbytes = 0
+        for i, (leaf, spec) in enumerate(zip(leaves, self._axes)):
+            if spec.batch is None:
+                continue
+            idx = _slot_index(spec, leaf.ndim, s.slot, 0, s.pos)
+            arr = np.asarray(leaf[idx])
+            saved[i] = arr
+            nbytes += arr.nbytes
+        self._shadow[s.rid] = saved
+        return nbytes
+
+    def _restore_slot(self, s: SeqState) -> int:
+        """Write a slot's shadow copy back into the shared cache (its
+        device region was scribbled by other cohorts' turns)."""
+        saved = self._shadow.pop(s.rid, None)
+        if saved is None:
+            return 0
+        leaves, treedef = self._leaves()
+        nbytes = 0
+        for i, arr in saved.items():
+            spec = self._axes[i]
+            idx = _slot_index(spec, leaves[i].ndim, s.slot, 0, s.pos)
+            leaves[i] = leaves[i].at[idx].set(jnp.asarray(arr))
+            nbytes += arr.nbytes
+        self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+        return nbytes
+
+    def _xfer(self, fn):
+        if self._channel is not None:
+            return self._channel.transfer(fn)
+        return fn()
+
+    # -- the maxtext-shaped surface -------------------------------------
+
+    def prefill(self, prompt: Sequence[int], rid: str = "r?") -> PrefillResult:
+        """Run one prompt through a fresh single-slot cache (the compute
+        burst); the last position's logits give the first sampled token."""
+        prompt = np.asarray(prompt, np.int32)
+        cache, _ = self.api.init_cache(1, self.max_len)
+        logits = None
+        for i in range(len(prompt)):
+            batch = {"tokens": jnp.asarray(prompt[i:i + 1][None, :])}
+            logits, cache = self._step(self.params, cache, batch,
+                                       jnp.int32(i))
+        first = int(jnp.argmax(logits[0, -1]))
+        return PrefillResult(rid=rid, prompt=prompt, prompt_len=len(prompt),
+                             first_token=first, cache=cache)
+
+    def insert(self, pr: PrefillResult, slot: int,
+               state: Optional[SeqState] = None) -> None:
+        """Splice a prefilled sequence into the shared cache at ``slot``."""
+        src_axes = _cache_leaf_axes(self.api, 1, self.max_len)
+        src_leaves = jax.tree_util.tree_leaves(pr.cache)
+        leaves, treedef = self._leaves()
+        for i, (leaf, spec, src, sspec) in enumerate(
+                zip(leaves, self._axes, src_leaves, src_axes)):
+            if spec.batch is None:
+                continue
+            dst = _slot_index(spec, leaf.ndim, slot, 0, pr.prompt_len)
+            srcidx = _slot_index(sspec, src.ndim, 0, 0, pr.prompt_len)
+            leaves[i] = leaf.at[dst].set(src[srcidx])
+        self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+        self._tok[slot, 0] = pr.first_token
+        self._outputs.setdefault(pr.rid, []).append(pr.first_token)
+        if state is None:
+            state = SeqState(rid=pr.rid, slot=slot, prompt_len=pr.prompt_len,
+                             gen_len=0, priority=1.0, arrival=0.0,
+                             pos=pr.prompt_len, generated=1)
+        self._states[pr.rid] = state
+
+    def _decode_turn(self, cohort: List[SeqState], start_pos: int,
+                     chunk: int) -> None:
+        """One chunked decode turn: restore the cohort's shadows, shadow
+        every other live slot (their region [start_pos, start_pos+chunk)
+        is about to be scribbled), then step ``chunk`` tokens."""
+        cohort_ids = {s.rid for s in cohort}
+        for s in cohort:
+            self._xfer(lambda s=s: self._restore_slot(s))
+        for rid, st in self._states.items():
+            if rid not in cohort_ids:
+                self._xfer(lambda st=st: self._save_slot(st))
+        for k in range(chunk):
+            idx = start_pos + k
+            batch = {"tokens": jnp.asarray(self._tok)}
+            logits, self.cache = self._step(self.params, self.cache, batch,
+                                            jnp.int32(idx))
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                             dtype=np.int32)
+            for s in cohort:
+                self._tok[s.slot, 0] = nxt[s.slot]
+                self._outputs[s.rid].append(int(nxt[s.slot]))
+
+    def generate(self) -> Dict[str, int]:
+        """One decode round for the front position-aligned group (the
+        standalone surface; ``serve`` drives turns via the session).
+        Returns the token each served sequence produced."""
+        views = [SeqView(rid=s.rid, slot=s.slot, pos=s.pos,
+                         remaining=max(s.remaining, 1),
+                         last_served=s.last_served)
+                 for s in self._states.values()]
+        if not views:
+            return {}
+        horizon = build_horizon(views)
+        front = horizon.turns[0]
+        cohort = [self._states[r] for r in front.rids]
+        self._decode_turn(cohort, front.pos, 1)
+        out = {}
+        for s in cohort:
+            s.pos += 1
+            s.generated += 1
+            s.remaining = max(s.remaining - 1, 0)
+            out[s.rid] = self._outputs[s.rid][-1]
+        return out
+
+    # -- session hooks --------------------------------------------------
+
+    def _hooks(self) -> ServeHooks:
+        def on_insert(s: SeqState) -> None:
+            pr = self.prefill(self.prompt_for(s.rid, s.prompt_len), rid=s.rid)
+            self.insert(pr, s.slot, state=s)
+
+        def on_evict(rid: str) -> None:
+            s = self._states.get(rid)
+            if s is not None:
+                self._xfer(lambda: self._save_slot(s))
+
+        def on_prefetch(rid: str) -> None:
+            # data motion is deferred to the slot's decode turn (the
+            # restore there is what guarantees bit-identity); the ledger
+            # side already accounted the transfer in virtual time
+            pass
+
+        def on_finish(s: SeqState) -> None:
+            self._shadow.pop(s.rid, None)
+            self._states.pop(s.rid, None)
+            self._tok[s.slot, 0] = 0
+
+        return ServeHooks(on_insert=on_insert, on_decode=self._decode_turn,
+                          on_evict=on_evict, on_prefetch=on_prefetch,
+                          on_finish=on_finish)
+
+    # -- the batch driver -----------------------------------------------
+
+    def serve(self, requests: Sequence[Request], *,
+              budget_bytes: Optional[int] = None, schedule: bool = True,
+              block_tokens: int = 4,
+              engine: Optional[MemoryEngine] = None,
+              oversubscription: float = 2.5,
+              job_id: str = "serve",
+              ) -> Tuple[ServeReport, Dict[str, List[int]]]:
+        """Serve a request trace for real: a ServeSession makes every
+        residency decision against the shared ledger; this engine's hooks
+        execute them on the jitted model.  Returns the session report and
+        the per-request generated token ids."""
+        mem = engine or MemoryEngine(profile=MachineProfile(),
+                                     capacity_bytes=None, trace=True)
+        self._states.clear()
+        self._outputs.clear()
+        self._shadow.clear()
+        self._tok[:] = 0
+        self._channel = mem.channel
+        try:
+            session = ServeSession(
+                requests, engine=mem, job_id=job_id,
+                max_sequences=self.max_sequences,
+                bytes_per_token=self.bytes_per_token,
+                block_tokens=block_tokens, budget_bytes=budget_bytes,
+                schedule=schedule, oversubscription=oversubscription,
+                hooks=self._hooks())
+            report = session.run()
+        finally:
+            self._channel = None
+        return report, {rid: list(toks) for rid, toks in
+                        self._outputs.items()}

@@ -134,6 +134,10 @@ def test_calibration_metrics_reported_and_converged(table):
     deliberately miscalibrated cold-start constants."""
     for name, rec in table.items():
         for pol, m in rec["policies"].items():
+            if "tokens_per_s" in m:
+                # serving rows: decode turns, not training iterations —
+                # there is no cold-start cost model being recalibrated
+                continue
             assert "calib_err" in m and "calib_err_cold" in m, (name, pol)
             assert m["calib_samples"] > 0, (name, pol)
             assert m["calib_err"] <= m["calib_err_cold"] + 1e-9, (name, pol)

@@ -1,0 +1,274 @@
+"""Serving-plane acceptance: KV blocks as schedulable ledger tensors.
+
+Pins the contracts the serving plane is built on:
+
+* BlockTable/ledger invariants — bytes conserved across any
+  evict/prefetch interleaving, eviction idempotent per block, release on
+  sequence finish leaks nothing;
+* KvResidencyPass — the cohort fits the budget and the eviction victim
+  is the *coldest* sequence (largest decode-turn distance, the serving
+  analogue of TENSILE's largest-reuse-distance rule);
+* prefill-burst admission — requests admitted in priority order through
+  PR 7's AdmissionQueue, never-fitting requests rejected, waiters
+  admitted when a finish releases their reservation;
+* decode bit-identity — serving the same trace with and without KV
+  swapping on the real (reduced) model produces identical token ids;
+* sim/real parity — the bare virtual ServeSession and the
+  ServingEngine-driven run replay identical residency decision traces;
+* the JobSpec serve wire format (schema 2, tolerant of schema-1 records
+  and unknown serve keys) and a daemon end-to-end serve job.
+"""
+import math
+
+import pytest
+
+from repro.core import MachineProfile, MemoryEngine
+from repro.serving import (BlockTable, KvResidencyPass, SeqView,
+                           ServeSession, make_trace)
+from repro.serving.traces import Request
+
+PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
+
+BPT = 512          # bytes per cache token (the reduced-tinyllama figure)
+PROMPT, GEN = 4, 8
+MAX_LEN = PROMPT + GEN
+
+
+def _table(capacity=None, budget=None, bpt=BPT, block_tokens=4):
+    eng = MemoryEngine(PROFILE, capacity_bytes=capacity, trace=True)
+    view = eng.ledger.view("serve", budget)
+    return eng, BlockTable(view, bpt, block_tokens, trace=eng.trace)
+
+
+# ----------------------------------------------------------------------
+# BlockTable / ledger invariants
+# ----------------------------------------------------------------------
+def test_block_table_bytes_conserved_across_evict_prefetch():
+    eng, tab = _table()
+    tab.grow("r0", 10)          # 3 blocks of 4 tokens
+    total = tab.total_bytes("r0")
+    assert total == 3 * tab.block_bytes
+    assert tab.device_bytes("r0") == total and tab.host_bytes("r0") == 0
+    assert eng.ledger.used == total
+
+    freed = tab.evict("r0")
+    assert freed == total
+    assert tab.device_bytes("r0") == 0 and tab.host_bytes("r0") == total
+    assert tab.device_bytes("r0") + tab.host_bytes("r0") == total
+    assert eng.ledger.used == 0
+    # idempotent: a second evict moves nothing
+    assert tab.evict("r0") == 0
+    assert tab.host_bytes("r0") == total
+
+    restored = tab.prefetch("r0")
+    assert restored == total
+    assert tab.device_bytes("r0") == total and tab.host_bytes("r0") == 0
+    assert eng.ledger.used == total
+    assert tab.swapped_out_bytes == total and tab.swapped_in_bytes == total
+
+
+def test_block_table_growth_is_block_granular():
+    eng, tab = _table()
+    new = tab.grow("r0", 4)
+    assert len(new) == 1
+    assert len(tab.grow("r0", 6)) == 1   # 6 tokens open block 2
+    assert tab.n_blocks("r0") == 2
+    assert tab.grow("r0", 8) == []       # 8 tokens still fit 2 blocks
+    assert len(tab.grow("r0", 9)) == 1   # 9 tokens open block 3
+    assert tab.footprint(9) == 3 * tab.block_bytes
+
+
+def test_block_table_release_leaks_nothing():
+    eng, tab = _table()
+    tab.grow("a", 8)
+    tab.grow("b", 8)
+    tab.evict("a")                       # half the bytes parked on host
+    freed = tab.release("a") + tab.release("b")
+    assert freed == tab.block_bytes * 2  # only b's device blocks remained
+    assert tab.sequences() == []
+    assert tab.host_blocks("a") == [] and tab.host_blocks("b") == []
+    assert eng.ledger.used == 0
+    assert eng.ledger.resident_storages("serve") == []
+    # the decision trace saw the release of every block
+    actions = [r.action for r in eng.trace.records]
+    assert actions.count("release") == 4
+
+
+# ----------------------------------------------------------------------
+# KvResidencyPass: budget-capped cohort, coldest-victim eviction
+# ----------------------------------------------------------------------
+def test_residency_pass_evicts_coldest_first():
+    eng, tab = _table(bpt=1, block_tokens=4)   # 4-byte blocks
+    views = [SeqView(rid="a", slot=0, pos=8, remaining=8, last_served=0.0),
+             SeqView(rid="b", slot=1, pos=8, remaining=8, last_served=0.0),
+             SeqView(rid="c", slot=2, pos=4, remaining=8, last_served=2.0)]
+    for v in views:
+        tab.grow(v.rid, v.pos)
+    rp = KvResidencyPass(tab, budget_bytes=16)
+    plan = rp.plan_turn(views)
+    # group {a, b} at pos 8 decodes first; only `a` fits the budget
+    assert [s.rid for s in plan.cohort] == ["a"]
+    assert plan.chunk == 4
+    # c's next turn is farther in the rotation than b's: c evicts first
+    assert plan.evict[0] == "c"
+    assert set(plan.evict) <= {"b", "c"}
+
+
+def test_residency_pass_unbudgeted_never_evicts():
+    eng, tab = _table(bpt=1, block_tokens=4)
+    views = [SeqView(rid="a", slot=0, pos=8, remaining=4),
+             SeqView(rid="b", slot=1, pos=8, remaining=4)]
+    for v in views:
+        tab.grow(v.rid, v.pos)
+    plan = KvResidencyPass(tab, budget_bytes=None).plan_turn(views)
+    assert [s.rid for s in plan.cohort] == ["a", "b"]
+    assert plan.evict == [] and plan.prefetch == []
+
+
+# ----------------------------------------------------------------------
+# Virtual session: pressure behavior + prefill-burst admission
+# ----------------------------------------------------------------------
+def _session(requests, budget, schedule=True, **kw):
+    eng = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    return eng, ServeSession(requests, engine=eng, max_sequences=4,
+                             bytes_per_token=BPT, block_tokens=4,
+                             budget_bytes=budget, schedule=schedule, **kw)
+
+
+def test_virtual_session_scheduled_fits_budget_unscheduled_ooms():
+    requests = make_trace("poisson", 6, seed=0, prompt_len=PROMPT,
+                          gen_len=GEN)
+    budget = BPT * (MAX_LEN * 2 + 2)     # ~2 of 4 slots resident
+    _, sess = _session(requests, budget)
+    rep = sess.run()
+    assert rep.served == 6 and rep.oom_events == 0
+    assert rep.peak_bytes <= budget
+    assert rep.evictions > 0 and rep.prefetches > 0
+    assert rep.tokens_generated == 6 * GEN
+    assert math.isfinite(rep.ttft_p99)
+
+    _, bare = _session(requests, budget, schedule=False)
+    rep0 = bare.run()
+    assert rep0.oom_events > 0           # the pressure is real
+    assert rep0.peak_bytes > budget
+
+
+def test_prefill_burst_admission_priority_order_and_rejection():
+    reqs = [Request("r0", 0.0, PROMPT, GEN, priority=1.0),
+            Request("r1", 0.0, PROMPT, GEN, priority=1.0),
+            Request("r2", 0.0, PROMPT, GEN, priority=3.0),
+            Request("r3", 0.0, PROMPT, GEN, priority=2.0),
+            # can NEVER fit the oversubscribed serving capacity
+            Request("r4", 0.0, PROMPT, 60, priority=5.0)]
+    budget = 8192                        # admission cap = 2.5x = 20480
+    _, sess = _session(reqs, budget)
+    rep = sess.run()
+    assert rep.rejected == ["r4"]
+    assert rep.served == 4
+    # burst admission is priority-ordered: r2 (3.0), r3 (2.0), then the
+    # 1.0s; the fourth reservation only fits once a finish releases one
+    assert rep.admission_order[:2] == ["r2", "r3"]
+    assert set(rep.admission_order) == {"r0", "r1", "r2", "r3"}
+    late = rep.admission_order[-1]
+    assert rep.queue_wait[late] > 0.0
+    assert rep.oom_events == 0
+
+
+# ----------------------------------------------------------------------
+# Real engine: bit-identity under swapping + sim/real parity
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine():
+    from repro.serving import ServingEngine
+    return ServingEngine("tinyllama-1.1b", max_sequences=4,
+                         max_len=MAX_LEN, seed=0)
+
+
+@pytest.fixture(scope="module")
+def trace6():
+    return make_trace("poisson", 6, seed=0, prompt_len=PROMPT, gen_len=GEN)
+
+
+def test_decode_bit_identical_with_and_without_swapping(engine, trace6):
+    assert engine.bytes_per_token == BPT
+    ref_rep, golden = engine.serve(trace6, budget_bytes=None, schedule=False)
+    assert ref_rep.served == 6
+    assert all(len(t) == GEN for t in golden.values())
+
+    budget = BPT * (MAX_LEN * 2 + 2)
+    mem = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    rep, out = engine.serve(trace6, budget_bytes=budget, schedule=True,
+                            engine=mem)
+    assert rep.oom_events == 0
+    assert rep.peak_bytes <= budget
+    assert rep.evictions > 0             # blocks really moved to host
+    assert out == golden                 # ...and decode never noticed
+
+
+def test_sim_real_parity_on_a_served_mix(engine, trace6):
+    budget = BPT * (MAX_LEN * 2 + 2)
+    mem_v = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    sim = ServeSession(trace6, engine=mem_v, max_sequences=4,
+                       bytes_per_token=BPT, block_tokens=4,
+                       budget_bytes=budget, schedule=True).run()
+    mem_r = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    real, _ = engine.serve(trace6, budget_bytes=budget, schedule=True,
+                           engine=mem_r)
+    # identical residency decision traces — the serving analogue of
+    # tests/test_engine_parity.py
+    assert mem_v.trace.keys() == mem_r.trace.keys()
+    assert sim.peak_bytes == real.peak_bytes
+    assert sim.oom_events == real.oom_events == 0
+    assert sim.evictions == real.evictions
+    assert sim.tokens_generated == real.tokens_generated
+    assert sim.total_time == pytest.approx(real.total_time)
+
+
+# ----------------------------------------------------------------------
+# JobSpec serve wire format + daemon end-to-end
+# ----------------------------------------------------------------------
+def test_jobspec_serve_wire_roundtrip():
+    from repro.service import JobSpec, ServeParams
+    sp = ServeParams(arch="tinyllama-1.1b", max_sequences=2, n_requests=3,
+                     prompt_len=2, gen_len=3, trace="burst")
+    spec = JobSpec("s1", kind="serve", serve=sp, priority=2.0)
+    d = spec.to_dict()
+    assert d["kind"] == "serve" and d["serve"]["n_requests"] == 3
+    back = JobSpec.from_dict(d)
+    assert back.kind == "serve" and back.serve == sp
+    # a serve spec with no params gets the defaults
+    assert JobSpec("s2", kind="serve").serve is not None
+    # train specs must not carry serve params
+    with pytest.raises(ValueError):
+        JobSpec("bad", kind="train", serve=sp)
+
+
+def test_jobspec_schema_tolerance():
+    from repro.service import JobSpec, ServeParams
+    # schema-1 records (pre-serving) still parse, as train jobs
+    legacy = {"schema": 1, "job_id": "old", "workload": "mlp"}
+    spec = JobSpec.from_dict(legacy)
+    assert spec.kind == "train" and spec.serve is None
+    # unknown serve keys from a NEWER writer are tolerated
+    sp = ServeParams.from_dict({"arch": "tinyllama-1.1b",
+                                "a_future_field": 1})
+    assert sp.arch == "tinyllama-1.1b"
+
+
+def test_daemon_runs_a_serve_job_end_to_end(tmp_path):
+    from repro.service import (JobState, SchedulerDaemon, ServeParams,
+                               ServiceClient, JobSpec)
+    root = str(tmp_path / "svc")
+    daemon = SchedulerDaemon(root, poll_interval=0.01)
+    client = ServiceClient(root)
+    spec = JobSpec("lm-serve", kind="serve",
+                   serve=ServeParams(max_sequences=2, n_requests=3,
+                                     prompt_len=2, gen_len=3,
+                                     trace="burst"))
+    client.submit(spec)
+    daemon.step()                        # pull the inbox before drain()
+    assert daemon.drain(timeout=300)
+    rec = daemon.store.get("lm-serve")
+    assert rec.state is JobState.DONE, rec.error
+    assert rec.measured_peak_bytes and rec.measured_peak_bytes > 0
+    assert rec.predicted_peak_bytes and rec.predicted_peak_bytes > 0

@@ -22,7 +22,13 @@ tool compares that file against the committed baseline
     capacity, the admission-gated run stays OOM-free and within budget,
     and warm-fingerprint peak predictions stay within +-15 % of the
     measured per-job peaks — see ``admission_contract``; queue-wait
-    growth >25 % is gated like the other overhead metrics).
+    growth >25 % is gated like the other overhead metrics), or
+  * the serving plane's pressure contract breaks on the CURRENT run
+    (under a KV-cache budget the residency-scheduled decode stays
+    OOM-free with outputs bit-identical to the unpressured golden run,
+    finite p99 TTFT, and tokens/sec within a fixed band of the
+    unpressured run, while the unscheduled baseline keeps OOMing — see
+    ``serving_contract``).
 
 The tool also gates the planner latency trajectory: ``python -m
 benchmarks.run --only planner --smoke`` writes
@@ -209,8 +215,61 @@ def admission_contract(current: dict) -> list:
     return failures
 
 
+# the pressured run's tokens/sec must stay within this relative band of
+# the unpressured reference (residency scheduling pays with bounded,
+# overlappable DMA stalls, not throughput collapse)
+SERVING_TPS_BAND = 0.50
+
+
+def serving_contract(current: dict) -> list:
+    """The serving plane's pressure contract, enforced on the CURRENT
+    run: under a KV-cache budget the residency-scheduled decode stays
+    OOM-free and within budget, its outputs are bit-identical to the
+    unpressured golden run, every admitted request gets a finite p99
+    TTFT, and tokens/sec stays within a fixed band of the unpressured
+    run — while the same budget without scheduling keeps OOMing (the
+    pressure is real).  Absent rows check nothing (pre-serving
+    baselines)."""
+    sched = current.get("serving-pressure/kv-schedule")
+    ref = current.get("serving-pressure/unpressured")
+    base = current.get("serving-pressure/no-schedule")
+    if not sched or not ref:
+        return []
+    failures = []
+    if (sched.get("oom_events") or 0) > 0:
+        failures.append(f"serving-pressure/kv-schedule: "
+                        f"{sched['oom_events']} ledger OOM events — "
+                        "residency scheduling no longer protects the "
+                        "device under KV pressure")
+    if sched.get("within_budget") is False:
+        failures.append("serving-pressure/kv-schedule: KV peak exceeded "
+                        "the device budget despite residency scheduling")
+    if sched.get("decode_bit_identical") is False:
+        failures.append("serving-pressure/kv-schedule: decode outputs "
+                        "diverged from the unpressured run — KV "
+                        "swap-out/prefetch corrupted the cache")
+    if sched.get("ttft_p99") is None:
+        failures.append("serving-pressure/kv-schedule: p99 TTFT is not "
+                        "finite (requests starved in the prefill "
+                        "admission queue)")
+    tps_s, tps_r = sched.get("tokens_per_s"), ref.get("tokens_per_s")
+    if tps_s is not None and tps_r \
+            and tps_s < tps_r * (1.0 - SERVING_TPS_BAND):
+        failures.append(
+            f"serving-pressure/kv-schedule: tokens/sec {tps_s:.1f} fell "
+            f"below {1.0 - SERVING_TPS_BAND:.0%} of the unpressured "
+            f"{tps_r:.1f} — residency stalls dominate decode")
+    if base is not None and (base.get("oom_events") or 0) == 0:
+        failures.append("serving-pressure/no-schedule: the unscheduled "
+                        "baseline no longer OOMs — the scenario's budget "
+                        "stopped exerting pressure, so the kv-schedule "
+                        "rows prove nothing")
+    return failures
+
+
 def scenario_contracts(current: dict) -> list:
-    return cold_warm_contract(current) + admission_contract(current)
+    return (cold_warm_contract(current) + admission_contract(current)
+            + serving_contract(current))
 
 
 def compare_planner(baseline: dict, current: dict) -> list:

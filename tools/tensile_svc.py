@@ -5,6 +5,9 @@
     PYTHONPATH=src python tools/tensile_svc.py submit --root <dir> \
         --job-id j1 --workload mlp [--params '{"size": "small"}'] \
         [--iterations N] [--priority P] [--budget-hint-bytes N] [--wait]
+    PYTHONPATH=src python tools/tensile_svc.py submit --root <dir> \
+        --job-id s1 --kind serve [--arch tinyllama-1.1b] [--requests N] \
+        [--trace steady|burst|poisson] [--prompt-len N] [--gen N] [--wait]
     PYTHONPATH=src python tools/tensile_svc.py status --root <dir>
     PYTHONPATH=src python tools/tensile_svc.py drain  --root <dir> [--wait]
     PYTHONPATH=src python tools/tensile_svc.py smoke  --root <dir>
@@ -32,7 +35,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
 from repro.service import (JobRecord, JobSpec, JobState,  # noqa: E402
-                           JobStore, SchedulerDaemon, ServiceClient)
+                           JobStore, SchedulerDaemon, ServeParams,
+                           ServiceClient)
 
 
 def _fmt_bytes(n: float) -> str:
@@ -62,7 +66,14 @@ def cmd_start(args: argparse.Namespace) -> int:
 
 
 def cmd_submit(args: argparse.Namespace) -> int:
-    spec = JobSpec(args.job_id, workload=args.workload,
+    serve = None
+    if args.kind == "serve":
+        serve = ServeParams(arch=args.arch, max_sequences=args.max_sequences,
+                            n_requests=args.requests,
+                            prompt_len=args.prompt_len, gen_len=args.gen,
+                            trace=args.trace, block_tokens=args.block_tokens)
+    spec = JobSpec(args.job_id, kind=args.kind, serve=serve,
+                   workload=args.workload,
                    workload_params=json.loads(args.params),
                    iterations=args.iterations, priority=args.priority,
                    budget_hint_bytes=args.budget_hint_bytes)
@@ -203,10 +214,23 @@ def main() -> int:
     p = sub.add_parser("submit", help="submit a JobSpec over the inbox")
     p.add_argument("--root", required=True)
     p.add_argument("--job-id", required=True)
-    p.add_argument("--workload", required=True,
-                   help='registered name (e.g. "mlp") or "module:attr"')
+    p.add_argument("--kind", default="train", choices=("train", "serve"))
+    p.add_argument("--workload", default=None,
+                   help='registered name (e.g. "mlp", "lm") or '
+                        '"module:attr"; required for train jobs')
     p.add_argument("--params", default="{}",
                    help="JSON dict of workload factory kwargs")
+    p.add_argument("--arch", default="tinyllama-1.1b",
+                   help="serve jobs: model config name")
+    p.add_argument("--max-sequences", type=int, default=4,
+                   help="serve jobs: batch slots in the decode cache")
+    p.add_argument("--requests", type=int, default=8,
+                   help="serve jobs: requests in the arrival trace")
+    p.add_argument("--prompt-len", type=int, default=8)
+    p.add_argument("--gen", type=int, default=8)
+    p.add_argument("--trace", default="steady",
+                   help="serve jobs: arrival trace (steady|burst|poisson)")
+    p.add_argument("--block-tokens", type=int, default=4)
     p.add_argument("--iterations", type=int, default=1)
     p.add_argument("--priority", type=float, default=None)
     p.add_argument("--budget-hint-bytes", type=int, default=None)
