@@ -249,6 +249,27 @@ def bench_planner(smoke: bool = False) -> None:
         _emit(f"planner/{key}", m["ms"] * 1e3, extra)
 
 
+def bench_runtime(smoke: bool = False) -> None:
+    """Runtime data-path trajectory: blocking vs double-buffered executor
+    swaps, per-block vs batched KV-block restore kernels, and the serving
+    plane's pressure scenario with the batched transfer path (see
+    benchmarks/runtime_bench.py).  Writes the gate file
+    ``experiments/results/BENCH_runtime.json``;
+    ``tools/check_bench_regression.py`` diffs it against the committed
+    baseline ``benchmarks/BENCH_runtime.json`` (>25 % per-row latency or
+    tokens/sec regression, plus the hard runtime contract: batched KV
+    restore >=3x per-block at the smoke size, batched pressure serving
+    >=92 % of unpressured tokens/sec with 0 OOMs and decode outputs
+    bit-identical)."""
+    from . import runtime_bench
+    t = runtime_bench.run(os.path.join(RESULTS, "BENCH_runtime.json"),
+                          smoke=smoke)
+    for key, m in sorted(t.items()):
+        extra = ";".join(f"{k}={v}" for k, v in sorted(m.items())
+                         if k != "ms")
+        _emit(f"runtime/{key}", m.get("ms", 0.0) * 1e3, extra)
+
+
 def bench_executor_validation() -> None:
     """Real-execution check: interpreter peak/MSR vs simulator prediction
     and bit-exactness of outputs under the plan (CPU-sized workload)."""
@@ -305,6 +326,7 @@ ALL = {
     "pipelines": bench_pipelines,
     "scenarios": bench_scenarios,
     "planner": bench_planner,
+    "runtime": bench_runtime,
     "executor_validation": bench_executor_validation,
 }
 
@@ -339,6 +361,8 @@ def main() -> None:
                             experience_dir=args.experience_dir)
         elif n == "planner":
             bench_planner(smoke=args.smoke)
+        elif n == "runtime":
+            bench_runtime(smoke=args.smoke)
         else:
             ALL[n]()
 

@@ -185,6 +185,24 @@ class CostModel:
                                  1e-12)
 
     # ------------------------------------------------------------------
+    def dma_batch_latency(self, sizes, profile) -> float:
+        """Modeled latency of one coalesced DMA batch (the runtime's
+        ``DmaChannel.acquire_batch`` booking): one link setup, the summed
+        payload at link bandwidth, and ``profile.dma_batch_overhead`` per
+        extra member."""
+        return profile.batched_swap_time(sizes)
+
+    def dma_batch_saving(self, n_members: int, profile) -> float:
+        """Latency saved by coalescing ``n_members`` adjacent transfers
+        into one batch: (n-1) per-transfer setups collapse to (n-1)
+        per-member descriptor fixups.  The serving plane's batched
+        evict/fetch cohorts are priced with exactly this term."""
+        if n_members <= 1:
+            return 0.0
+        return (n_members - 1) * max(
+            profile.host_link_latency - profile.dma_batch_overhead, 0.0)
+
+    # ------------------------------------------------------------------
     def latency(self, flops: float, bytes_accessed: float,
                 prim_name: str = "") -> float:
         """Roofline latency under current utilization; if the MLP predictor

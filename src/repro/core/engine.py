@@ -223,26 +223,96 @@ class DmaChannel:
     Virtual time (simulator): ``acquire(t, dur)`` books the next free slot
     FIFO and counts cross-job conflicts.  Real time (executor): ``transfer``
     serializes actual copies behind one lock and accounts busy seconds.
+
+    Coalescing (off by default, so default bookings are byte-identical to
+    the single-transfer channel): adjacent same-direction bookings that
+    land within ``coalesce_window`` of the open tail batch merge into ONE
+    batched transfer — the group pays a single fixup latency plus
+    ``batch_overhead_s`` per extra member instead of a full per-transfer
+    setup each.  ``acquire_batch`` books an explicit cohort the same way,
+    and ``transfer_batch`` is the real-time analogue: several copies under
+    one channel hold (one launch on the wire).
     """
 
-    def __init__(self):
+    def __init__(self, coalesce: bool = False, coalesce_window: float = 0.0,
+                 batch_overhead_s: float = 0.0):
         # virtual-time state
         self.busy_until = 0.0
         self.conflicts = 0
         # most recent acquire, for best-effort refunds:
         # (busy_until before it, slot start, slot end)
         self._last_acquire: Optional[Tuple[float, float, float]] = None
+        # coalescing config + the open tail batch eligible for merging:
+        # (direction, batch start, batch end, member count)
+        self.coalesce = bool(coalesce)
+        self.coalesce_window = float(coalesce_window)
+        self.batch_overhead_s = float(batch_overhead_s)
+        self._tail_batch: Optional[Tuple[str, float, float, int]] = None
+        self.batched_transfers = 0    # coalesced groups (2+ members)
+        self.coalesced_bookings = 0   # member bookings folded into groups
+        self.saved_fixup_s = 0.0      # virtual seconds of fixup elided
         # real-time state
         self.lock = threading.Lock()
         self.busy_s = 0.0
 
-    def acquire(self, t: float, dur: float) -> Tuple[float, float]:
+    def acquire(self, t: float, dur: float, direction: Optional[str] = None,
+                fixup: float = 0.0) -> Tuple[float, float]:
+        if (self.coalesce and direction is not None
+                and self._tail_batch is not None):
+            d, s, e, n = self._tail_batch
+            if (d == direction and abs(e - self.busy_until) < 1e-12
+                    and t <= e + self.coalesce_window + 1e-12):
+                # merge into the open batch: pay the payload plus the
+                # per-member batch overhead, not another fixup latency
+                payload = max(dur - fixup, 0.0) + self.batch_overhead_s
+                self.busy_until = e + payload
+                self._tail_batch = (d, s, self.busy_until, n + 1)
+                self._last_acquire = (e, e, self.busy_until)
+                if n == 1:
+                    self.batched_transfers += 1
+                    self.coalesced_bookings += 1  # the member that opened it
+                self.coalesced_bookings += 1
+                self.saved_fixup_s += max(fixup - self.batch_overhead_s, 0.0)
+                return e, self.busy_until
         prev = self.busy_until
         if t < self.busy_until:
             self.conflicts += 1
             t = self.busy_until
         self.busy_until = t + dur
         self._last_acquire = (prev, t, t + dur)
+        if self.coalesce:
+            self._tail_batch = ((direction, t, t + dur, 1)
+                                if direction is not None else None)
+        return t, t + dur
+
+    def acquire_batch(self, t: float, payload_durs, fixup: float = 0.0,
+                      direction: Optional[str] = None,
+                      member_overhead: Optional[float] = None
+                      ) -> Tuple[float, float]:
+        """Book one coalesced slot for an explicit same-direction cohort:
+        a single ``fixup`` latency, the summed payload durations, and a
+        per-extra-member overhead.  Returns the batch (start, end)."""
+        durs = list(payload_durs)
+        if not durs:
+            return t, t
+        over = (self.batch_overhead_s if member_overhead is None
+                else float(member_overhead))
+        if len(durs) == 1:
+            return self.acquire(t, fixup + durs[0],
+                                direction=direction, fixup=fixup)
+        dur = fixup + sum(durs) + over * (len(durs) - 1)
+        prev = self.busy_until
+        if t < self.busy_until:
+            self.conflicts += 1
+            t = self.busy_until
+        self.busy_until = t + dur
+        self._last_acquire = (prev, t, t + dur)
+        if self.coalesce:
+            self._tail_batch = ((direction, t, t + dur, len(durs))
+                                if direction is not None else None)
+        self.batched_transfers += 1
+        self.coalesced_bookings += len(durs)
+        self.saved_fixup_s += max(fixup - over, 0.0) * (len(durs) - 1)
         return t, t + dur
 
     def try_refund(self, start: float, end: float) -> bool:
@@ -270,6 +340,19 @@ class DmaChannel:
             t0 = _time.perf_counter()
             out = fn()
             self.busy_s += _time.perf_counter() - t0
+            return out
+
+    def transfer_batch(self, fns) -> list:
+        """Run several copies under ONE channel hold — the real-time form
+        of a coalesced batch: a single acquisition of the wire covers the
+        whole cohort instead of one lock round-trip per member."""
+        with self.lock:
+            t0 = _time.perf_counter()
+            out = [fn() for fn in fns]
+            self.busy_s += _time.perf_counter() - t0
+            if len(out) > 1:
+                self.batched_transfers += 1
+                self.coalesced_bookings += len(out)
             return out
 
 

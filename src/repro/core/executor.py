@@ -74,20 +74,35 @@ class ExecutionStats:
 
 class AsyncSwapExecutor:
     """Paper Fig. 4: an execution-queue thread pops swap events and runs them
-    on the shared engine channel."""
+    on the shared engine channel.
+
+    The worker is a double-buffered stream: after popping one transfer it
+    non-blockingly drains any *same-direction* transfers already queued
+    behind it and runs the whole cohort as ONE ``channel.transfer_batch``
+    launch — queued prefetches coalesce on the wire instead of paying one
+    channel round-trip each.  ``batches`` traces each coalesced launch
+    (the regression test asserts two queued prefetches share one)."""
+
+    MAX_BATCH = 8
 
     def __init__(self, channel: DmaChannel):
         self.channel = channel
         self.q: "queue.Queue" = queue.Queue()
         self.inflight: Dict[str, threading.Event] = {}
         self._stop = False
-        # state_lock guards running/poisoned: `running` is the key whose
-        # transfer is physically on the wire; `poisoned` keys were
-        # cancelled after the worker popped them but before it started —
-        # the worker discards them instead of transferring
+        # state_lock guards running/poisoned: `running` holds the keys
+        # whose transfers are physically on the wire (a coalesced batch
+        # carries several); `poisoned` keys were cancelled after the
+        # worker popped them but before it started — the worker discards
+        # them instead of transferring
         self.state_lock = threading.Lock()
-        self.running: Optional[str] = None
+        self.running: set = set()
         self.poisoned: set = set()
+        # keys of each coalesced launch, in completion order
+        self.batches: List[List[str]] = []
+        # one popped-but-deferred item of the OTHER direction (keeps FIFO
+        # order across direction changes without a peekable queue)
+        self._carry = None
         self.thread = threading.Thread(target=self._run, daemon=True)
         self.thread.start()
 
@@ -97,26 +112,56 @@ class AsyncSwapExecutor:
         self.q.put((key, fn, done))
         return done
 
+    @staticmethod
+    def _direction(key: str) -> str:
+        return key.split(":", 1)[0]
+
     def _run(self):
         while not self._stop:
-            try:
-                key, fn, done = self.q.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            with self.state_lock:
-                if key in self.poisoned:
-                    self.poisoned.discard(key)
-                    done.set()
-                    self.inflight.pop(key, None)
+            if self._carry is not None:
+                item, self._carry = self._carry, None
+            else:
+                try:
+                    item = self.q.get(timeout=0.05)
+                except queue.Empty:
                     continue
-                self.running = key
+            batch = [item]
+            prefix = self._direction(item[0])
+            while len(batch) < self.MAX_BATCH:
+                try:
+                    nxt = self.q.get_nowait()
+                except queue.Empty:
+                    break
+                if self._direction(nxt[0]) == prefix:
+                    batch.append(nxt)
+                else:
+                    self._carry = nxt
+                    break
+            live = []
+            with self.state_lock:
+                for key, fn, done in batch:
+                    if key in self.poisoned:
+                        self.poisoned.discard(key)
+                        done.set()
+                        self.inflight.pop(key, None)
+                    else:
+                        live.append((key, fn, done))
+                        self.running.add(key)
+            if not live:
+                continue
             try:
-                self.channel.transfer(fn)
+                if len(live) == 1:
+                    self.channel.transfer(live[0][1])
+                else:
+                    self.channel.transfer_batch([fn for _, fn, _ in live])
             finally:
                 with self.state_lock:
-                    self.running = None
-                done.set()
-                self.inflight.pop(key, None)
+                    for key, _, _ in live:
+                        self.running.discard(key)
+                self.batches.append([key for key, _, _ in live])
+                for key, _, done in live:
+                    done.set()
+                    self.inflight.pop(key, None)
 
     def cancel_unstarted(self, prefix: str = "") -> Optional[List[str]]:
         """Cancel every transfer whose key starts with ``prefix`` that
@@ -128,7 +173,7 @@ class AsyncSwapExecutor:
         re-derives the action, so a consumer of a cancelled prefetch
         falls back to a passive swap-in."""
         with self.state_lock:
-            if self.running is not None and self.running.startswith(prefix):
+            if any(k.startswith(prefix) for k in self.running):
                 return None
             cancelled: List[str] = []
             requeue = []
@@ -146,19 +191,22 @@ class AsyncSwapExecutor:
                     requeue.append(item)
             for item in requeue:
                 self.q.put(item)
-            # popped-but-unstarted items are blocked on state_lock right
-            # now: poison them, the worker will discard and release them
+            # popped-but-unstarted items (incl. a carried one) are blocked
+            # on state_lock right now: poison them, the worker will
+            # discard and release them
             for key in list(self.inflight):
-                if key.startswith(prefix) and key != self.running:
+                if key.startswith(prefix) and key not in self.running:
                     self.poisoned.add(key)
                     cancelled.append(key)
             return cancelled
 
     def drain(self):
-        while not self.q.empty():
-            _time.sleep(0.001)
-        for ev in list(self.inflight.values()):
-            ev.wait()
+        # every submitted-but-unfinished key sits in `inflight` until its
+        # completion event fires — wait on the events themselves instead
+        # of busy-polling the queue
+        while self.inflight:
+            for ev in list(self.inflight.values()):
+                ev.wait()
 
     def stop(self):
         self.drain()
@@ -199,6 +247,11 @@ class JaxprExecutor:
 
         self.device: Dict[str, Any] = {}
         self.host: Dict[str, Any] = {}
+        # double-buffered swap-outs: storage -> (completion event,
+        # compressed).  The device copy is retired (trace record, ledger
+        # free, stats) only when the copy has landed — observed at the
+        # next completion-poll point instead of a blocking wait.
+        self._pending_out: Dict[str, Tuple[threading.Event, bool]] = {}
         # decisions consult THIS iteration's value store, not the (possibly
         # longer-lived, controller-shared) ledger
         self.resident = ResidencyView(self.device)
@@ -261,6 +314,11 @@ class JaxprExecutor:
             plan, safe_ops = self._pending_plan
             if idx not in safe_ops:
                 return
+            # a splice needs quiescence: wait out our own in-flight
+            # swap-outs (short copies; the pre-double-buffer executor
+            # blocked on them at issue time, so this preserves the PR-4
+            # cancel/defer semantics exactly)
+            self._poll_swap_outs(block=True)
             if self.async_exec and self.async_exec.inflight:
                 cancelled = self.async_exec.cancel_unstarted("in:")
                 if cancelled is None:
@@ -301,7 +359,9 @@ class JaxprExecutor:
                               self.ctx.sizes.get(st, _arr_bytes(val)))
 
     def _drop_device(self, name: str) -> None:
-        st = self._st(name)
+        self._drop_storage(self._st(name))
+
+    def _drop_storage(self, st: str) -> None:
         if st in self.device:
             self.device.pop(st)
             self.accountant.free(self.ctx.job_id, st)
@@ -330,7 +390,7 @@ class JaxprExecutor:
 
     def _swap_out(self, name: str, compressed: bool = False) -> None:
         st = self._st(name)
-        if st not in self.device:
+        if st not in self.device or st in self._pending_out:
             return
         val = self.device[st]
 
@@ -350,15 +410,35 @@ class JaxprExecutor:
                     _time.perf_counter() - t0, compressed=compressed, t=ts)
 
         if self.async_exec:
+            # double-buffered stream: compute proceeds while the copy is
+            # on the wire; the device copy is retired at the next poll
+            # point, never before the copy lands (paper semantics kept —
+            # the ledger free happens only after completion)
             done = self.async_exec.submit("out:" + st, do)
-            done.wait()  # eviction frees only after the copy lands (paper)
-        else:
-            self.channel.transfer(do)
+            self._pending_out[st] = (done, compressed)
+            return
+        self.channel.transfer(do)
+        self._retire_out(st, compressed)
+
+    def _retire_out(self, st: str, compressed: bool) -> None:
+        """A swap-out's copy has landed: record, free the device copy,
+        count."""
         self.engine.record("swap_out", self.ctx, st)
-        self._drop_device(st)
+        self._drop_storage(st)
         self.stats.swap_out_count += 1
         if compressed:
             self.stats.compressed_swaps += 1
+
+    def _poll_swap_outs(self, block: bool = False) -> None:
+        """Non-blocking completion poll of in-flight swap-outs (the other
+        half of the double buffer): retire every copy that has landed.
+        With ``block=True`` wait for all of them (drain / safe points)."""
+        for st, (done, compressed) in list(self._pending_out.items()):
+            if block:
+                done.wait()
+            if done.is_set():
+                del self._pending_out[st]
+                self._retire_out(st, compressed)
 
     def _swap_in(self, name: str, passive: bool) -> bool:
         """Prefetch from host; returns False when there is nothing to fetch
@@ -467,8 +547,15 @@ class JaxprExecutor:
             self._put_device(self._name_of(v), val)
 
         measure = self.measure_latency or self.telemetry is not None
+        if self.telemetry is not None:
+            # hot path: telemetry appends go through a per-thread buffer
+            # flushed once per op boundary (one lock round-trip per op
+            # instead of one per record)
+            self.telemetry.begin_buffering()
         for idx, eqn in enumerate(self.jaxpr.eqns):
             self._cur_idx = idx
+            # retire any swap-out whose copy landed while we computed
+            self._poll_swap_outs()
             t0 = _time.perf_counter()
             invals = []
             for v in eqn.invars:
@@ -529,9 +616,14 @@ class JaxprExecutor:
             # preemptive arbitration: splice a pending plan in at a safe
             # point (after this op's events, before the next op)
             self._maybe_hot_swap(idx)
+            if self.telemetry is not None:
+                self.telemetry.flush()
 
         if self.async_exec:
             self.async_exec.drain()
+        self._poll_swap_outs(block=True)
+        if self.telemetry is not None:
+            self.telemetry.end_buffering()
         # fetching outputs back to Python is harness work, not part of the
         # modeled iteration (steady state leaves swapped outputs on host) —
         # pause the trace (and telemetry) for it, resume afterwards

@@ -380,12 +380,27 @@ class MachineProfile:
     # for a float32 tensor incl. per-block scales, (1 + 4/BLOCK) / 4
     offload_quant_ratio: float = (1.0 + 4.0 / 512.0) / 4.0
     # effective quantize/dequantize kernel throughput (B/s of source tensor);
-    # calibrated via cost_model.offload_quant_latency on real devices
+    # calibrated via cost_model.offload_quant_bw on real devices
     offload_quant_bw: float = 400e9
+    # per-extra-member cost of a coalesced DMA batch (descriptor fixup):
+    # batching n transfers replaces (n-1) host_link_latency setups with
+    # (n-1) of these — the term DmaChannel.acquire_batch books against
+    dma_batch_overhead: float = 2e-6
 
     def swap_time(self, size_bytes: int) -> float:
         eff = size_bytes * self.swap_compression
         return self.host_link_latency + eff / self.host_link_bw
+
+    def batched_swap_time(self, sizes) -> float:
+        """One coalesced DMA batch: a single per-transfer setup, the
+        summed payload at link bandwidth, plus ``dma_batch_overhead`` per
+        extra member."""
+        sizes = list(sizes)
+        if not sizes:
+            return 0.0
+        eff = sum(sizes) * self.swap_compression
+        return (self.host_link_latency + eff / self.host_link_bw
+                + self.dma_batch_overhead * (len(sizes) - 1))
 
     def compressed_swap_time(self, size_bytes: int) -> float:
         """One direction of the quantize-on-offload path: the kernel reads

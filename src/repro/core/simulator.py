@@ -290,7 +290,9 @@ def simulate(seqs: Sequence[AccessSequence],
                 compressed = st in ctx.host_compressed
                 dur = profile.transfer_time(
                     ctx.size_of(tid), compressed=compressed)
-                s0, s1 = eng.channel.acquire(start, dur)
+                s0, s1 = eng.channel.acquire(
+                    start, dur, direction="in",
+                    fixup=profile.host_link_latency)
                 if hub is not None:
                     hub.record_transfer(job_id, st, "in",
                                         ctx.size_of(tid), dur,
@@ -335,7 +337,9 @@ def simulate(seqs: Sequence[AccessSequence],
                 continue
             if ev.event_type is EventType.SWAP_OUT:
                 dur = eng.event_duration(ev)
-                s0, s1 = eng.channel.acquire(end + max(ev.delta, 0.0), dur)
+                s0, s1 = eng.channel.acquire(
+                    end + max(ev.delta, 0.0), dur, direction="out",
+                    fixup=profile.host_link_latency)
                 if hub is not None:
                     hub.record_transfer(job_id, st, "out", ev.size_bytes,
                                         dur, compressed=ev.compressed,
@@ -349,7 +353,9 @@ def simulate(seqs: Sequence[AccessSequence],
                     push(s1, "swap_out_done", job_id, (st, ev.compressed))
             elif ev.event_type is EventType.SWAP_IN:
                 dur = eng.event_duration(ev)
-                s0, s1 = eng.channel.acquire(end + max(ev.delta, 0.0), dur)
+                s0, s1 = eng.channel.acquire(
+                    end + max(ev.delta, 0.0), dur, direction="in",
+                    fixup=profile.host_link_latency)
                 if transfer_mode == "sync":
                     if hub is not None:
                         hub.record_transfer(job_id, st, "in",

@@ -176,6 +176,53 @@ class TelemetryHub:
     def paused(self, value: bool) -> None:
         self._local.paused = bool(value)
 
+    # -- buffered appends (per-thread, executor hot path) --------------
+    # A producer that records per op can opt into buffering: record_*
+    # calls append fully-stamped samples to a thread-local list without
+    # touching the hub lock, and ``flush()`` publishes them — in emission
+    # order, under ONE lock acquisition — at op boundaries.  Samples are
+    # stamped (clock + iteration index) at record time, so buffering
+    # changes only lock traffic, never record content or order.
+    @property
+    def buffering(self) -> bool:
+        return getattr(self._local, "buffer", None) is not None
+
+    def _buffer(self):
+        return getattr(self._local, "buffer", None)
+
+    def begin_buffering(self) -> None:
+        if self._buffer() is None:
+            self._local.buffer = []
+
+    def flush(self) -> None:
+        buf = self._buffer()
+        if not buf:
+            return
+        self._local.buffer = []
+        with self._lock:
+            for kind, s in buf:
+                self._publish(kind, s)
+
+    def end_buffering(self) -> None:
+        self.flush()
+        self._local.buffer = None
+
+    def _publish(self, kind: str, s) -> None:
+        """Append one stamped sample to its stream (hub lock held)."""
+        if kind == "op":
+            self.ops.setdefault(s.job_id, []).append(s)
+            ew = self._ewma.setdefault(s.job_id, {})
+            old = ew.get(s.op_idx)
+            ew[s.op_idx] = s.latency_s if old is None else (
+                self.ewma_alpha * s.latency_s
+                + (1 - self.ewma_alpha) * old)
+        elif kind == "transfer":
+            self.transfers.setdefault(s.job_id, []).append(s)
+        elif kind == "stall":
+            self.stalls.setdefault(s.job_id, []).append(s)
+        else:
+            self.residency.setdefault(s.job_id, []).append(s)
+
     # -- clock ---------------------------------------------------------
     def now(self) -> float:
         return _time.perf_counter() - self._t0
@@ -193,14 +240,14 @@ class TelemetryHub:
                   t: Optional[float] = None) -> None:
         if self.paused:
             return
+        s = OpSample(job_id, self._it(job_id), op_idx, prim, latency_s,
+                     flops, bytes_accessed, self._stamp(t))
+        buf = self._buffer()
+        if buf is not None:
+            buf.append(("op", s))
+            return
         with self._lock:
-            self.ops.setdefault(job_id, []).append(OpSample(
-                job_id, self._it(job_id), op_idx, prim, latency_s,
-                flops, bytes_accessed, self._stamp(t)))
-            ew = self._ewma.setdefault(job_id, {})
-            old = ew.get(op_idx)
-            ew[op_idx] = latency_s if old is None else (
-                self.ewma_alpha * latency_s + (1 - self.ewma_alpha) * old)
+            self._publish("op", s)
 
     def record_transfer(self, job_id: str, storage: str, direction: str,
                         size_bytes: int, duration_s: float,
@@ -208,34 +255,47 @@ class TelemetryHub:
                         t: Optional[float] = None) -> None:
         if self.paused:
             return
+        s = TransferSample(job_id, self._it(job_id), storage, direction,
+                           int(size_bytes), duration_s, compressed, passive,
+                           self._stamp(t))
+        buf = self._buffer()
+        if buf is not None:
+            buf.append(("transfer", s))
+            return
         with self._lock:
-            self.transfers.setdefault(job_id, []).append(TransferSample(
-                job_id, self._it(job_id), storage, direction,
-                int(size_bytes), duration_s, compressed, passive,
-                self._stamp(t)))
+            self._publish("transfer", s)
 
     def record_stall(self, job_id: str, op_idx: int, duration_s: float,
                      cause: str, t: Optional[float] = None) -> None:
         if self.paused:
             return
+        s = StallSample(job_id, self._it(job_id), op_idx, cause, duration_s,
+                        self._stamp(t))
+        buf = self._buffer()
+        if buf is not None:
+            buf.append(("stall", s))
+            return
         with self._lock:
-            self.stalls.setdefault(job_id, []).append(StallSample(
-                job_id, self._it(job_id), op_idx, cause, duration_s,
-                self._stamp(t)))
+            self._publish("stall", s)
 
     def record_residency(self, job_id: str, storage: str, action: str,
                          resident_bytes: int,
                          t: Optional[float] = None) -> None:
         if self.paused:
             return
+        s = ResidencySample(job_id, self._it(job_id), storage, action,
+                            int(resident_bytes), self._stamp(t))
+        buf = self._buffer()
+        if buf is not None:
+            buf.append(("residency", s))
+            return
         with self._lock:
-            self.residency.setdefault(job_id, []).append(ResidencySample(
-                job_id, self._it(job_id), storage, action,
-                int(resident_bytes), self._stamp(t)))
+            self._publish("residency", s)
 
     def end_iteration(self, job_id: str) -> int:
         """Mark the job's iteration boundary; records after this carry
         the next iteration index.  Returns the completed count."""
+        self.flush()
         with self._lock:
             n = self._iter.get(job_id, 0) + 1
             self._iter[job_id] = n

@@ -1,0 +1,82 @@
+"""Batched KV-block gather/scatter: one launch moves a whole block set.
+
+The serving plane's batched data path (`ServingEngine` under
+``batch_transfers``) moves the cohort's ``kv/<rid>/b<i>`` regions per
+decode turn.  The per-slot path costs one device launch per (leaf, slot);
+these kernels move the *set* in a single launch over a 2-D row-pool view
+of each cache leaf:
+
+* ``kv_block_gather(pool, idx)``   -> ``pool[idx]``        (K, W)
+* ``kv_block_scatter(pool, idx, blocks)`` -> pool with ``pool[idx]``
+  replaced by ``blocks`` (in-place via ``input_output_aliases``)
+
+Row indices arrive through a scalar-prefetch argument
+(``pltpu.PrefetchScalarGridSpec``), so the block index maps are computed
+before the kernel body runs — the TPU-idiomatic dynamic gather.  Pure
+oracles live in ``kernels/ref.py`` (``kv_block_gather_ref`` /
+``kv_block_scatter_ref``); ``interpret=True`` keeps the kernels runnable
+on the CPU container.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, out_ref):
+    del idx_ref  # consumed by the index maps
+    out_ref[...] = src_ref[...]
+
+
+def kv_block_gather(pool, idx, *, interpret: bool = True):
+    """Gather rows ``idx`` of a 2-D row pool in one launch: returns an
+    array of shape ``(len(idx), pool.shape[1])``."""
+    pool = jnp.asarray(pool)
+    idx = jnp.asarray(idx, jnp.int32)
+    k = idx.shape[0]
+    n, w = pool.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, w), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0)))
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, w), pool.dtype),
+        interpret=interpret)(idx, pool)
+
+
+def _scatter_kernel(idx_ref, blocks_ref, pool_ref, out_ref):
+    del idx_ref, pool_ref  # index maps / aliased initial value
+    out_ref[...] = blocks_ref[...]
+
+
+def kv_block_scatter(pool, idx, blocks, *, interpret: bool = True):
+    """Scatter ``blocks`` (K, W) into rows ``idx`` of a 2-D row pool in
+    one launch; rows not in ``idx`` keep their values (the pool buffer is
+    aliased into the output)."""
+    pool = jnp.asarray(pool)
+    idx = jnp.asarray(idx, jnp.int32)
+    blocks = jnp.asarray(blocks, pool.dtype)
+    k = idx.shape[0]
+    n, w = pool.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0)),        # blocks
+            pl.BlockSpec((1, w), lambda i, idx_ref: (idx_ref[i], 0)),  # pool
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda i, idx_ref: (idx_ref[i], 0)))
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, w), pool.dtype),
+        # the pool operand (arg 2: after the scalar idx and blocks) is
+        # donated into the output, so unwritten rows pass through
+        input_output_aliases={2: 0},
+        interpret=interpret)(idx, blocks, pool)

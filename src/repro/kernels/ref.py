@@ -56,6 +56,19 @@ def ssd_intra_chunk_ref(xc, dtc, da, bc, cc):
     return y, states
 
 
+def kv_block_gather_ref(pool, idx):
+    """pool: (N,W); idx: (K,) int -> (K,W) rows of the pool."""
+    return jnp.asarray(pool)[jnp.asarray(idx, jnp.int32)]
+
+
+def kv_block_scatter_ref(pool, idx, blocks):
+    """pool: (N,W); idx: (K,) int; blocks: (K,W) -> pool with ``idx`` rows
+    replaced by ``blocks``; all other rows untouched."""
+    pool = jnp.asarray(pool)
+    return pool.at[jnp.asarray(idx, jnp.int32)].set(
+        jnp.asarray(blocks, pool.dtype))
+
+
 def quantize_blocked_ref(x, block: int = 512):
     flat = np.asarray(x, np.float32).reshape(-1)
     pad = -flat.size % block

@@ -142,6 +142,22 @@ class BlockTable:
         self.swapped_in_bytes += restored
         return restored
 
+    def evict_many(self, rids: List[str],
+                   t: Optional[float] = None) -> int:
+        """Swap several sequences out as one cohort (a single coalesced
+        channel booking on the caller's side).  Per-block ledger motion
+        and trace records are identical to sequential ``evict`` calls in
+        rid order — batching changes the transfer *timing*, never the
+        residency decisions.  Returns total device bytes freed."""
+        return sum(self.evict(rid, t) for rid in rids)
+
+    def prefetch_many(self, rids: List[str],
+                      t: Optional[float] = None) -> int:
+        """Swap several sequences' host-parked blocks back in as one
+        cohort; trace/ledger-identical to sequential ``prefetch`` calls.
+        Returns total bytes restored to device."""
+        return sum(self.prefetch(rid, t) for rid in rids)
+
     def release(self, rid: str, t: Optional[float] = None) -> int:
         """Sequence finished: free device blocks, drop host copies, forget
         the row.  Returns the device bytes freed; afterwards no trace of

@@ -143,6 +143,7 @@ class ServingEngine:
         self._outputs: Dict[str, List[int]] = {}
         self._shadow: Dict[str, Dict[int, np.ndarray]] = {}
         self._channel = None   # bound by serve() for transfer accounting
+        self._batch_kv = False  # serve(batch_transfers=True) flips this
 
     # -- deterministic prompts (rid-keyed, run-independent) -------------
 
@@ -188,6 +189,93 @@ class ServingEngine:
             idx = _slot_index(spec, leaves[i].ndim, s.slot, 0, s.pos)
             leaves[i] = leaves[i].at[idx].set(jnp.asarray(arr))
             nbytes += arr.nbytes
+        self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+        return nbytes
+
+    def _reduced_axis(self, spec: _LeafAxes) -> Optional[int]:
+        """Where the length axis lands once the batch axis is removed —
+        the axis the per-slot shadow slices along."""
+        if spec.length is None:
+            return None
+        return spec.length - (1 if spec.batch < spec.length else 0)
+
+    def _save_slots(self, states: List[SeqState]) -> int:
+        """Batched shadow save: one ``kv_block_gather`` launch per cache
+        leaf moves every slot's row at once, then per-state occupied
+        prefixes are sliced out in the legacy per-slot shadow format (so
+        either restore path can consume them).  Returns bytes copied."""
+        todo = [s for s in states if s.rid not in self._shadow]
+        if not todo:
+            return 0
+        if len(todo) == 1:
+            return self._save_slot(todo[0])
+        from ..kernels.kv_block_copy import kv_block_gather
+        leaves, _ = self._leaves()
+        slots = jnp.asarray([s.slot for s in todo], jnp.int32)
+        shadows: Dict[str, Dict[int, np.ndarray]] = {s.rid: {} for s in todo}
+        nbytes = 0
+        for i, (leaf, spec) in enumerate(zip(leaves, self._axes)):
+            if spec.batch is None:
+                continue
+            moved = jnp.moveaxis(leaf, spec.batch, 0)
+            pool = moved.reshape(moved.shape[0], -1)
+            rows = kv_block_gather(pool, slots).reshape(
+                (len(todo),) + moved.shape[1:])
+            red = self._reduced_axis(spec)
+            for k, s in enumerate(todo):
+                row = rows[k]
+                if red is not None:
+                    sl: List = [slice(None)] * row.ndim
+                    sl[red] = slice(0, s.pos)
+                    row = row[tuple(sl)]
+                arr = np.asarray(row)
+                shadows[s.rid][i] = arr
+                nbytes += arr.nbytes
+        for s in todo:
+            self._shadow[s.rid] = shadows[s.rid]
+        return nbytes
+
+    def _restore_slots(self, states: List[SeqState]) -> int:
+        """Batched shadow restore: per cache leaf, gather the cohort's
+        current rows in one launch, patch each occupied prefix from its
+        shadow, and scatter the rows back in one launch.  Suffix regions
+        round-trip their own bytes, so the result is bit-identical to
+        per-slot ``_restore_slot`` calls.  Returns bytes written."""
+        todo = [s for s in states if s.rid in self._shadow]
+        if not todo:
+            return 0
+        if len(todo) == 1:
+            return self._restore_slot(todo[0])
+        from ..kernels.kv_block_copy import kv_block_gather, kv_block_scatter
+        leaves, treedef = self._leaves()
+        slots = jnp.asarray([s.slot for s in todo], jnp.int32)
+        nbytes = 0
+        for i, spec in enumerate(self._axes):
+            if spec.batch is None:
+                continue
+            moved = jnp.moveaxis(leaves[i], spec.batch, 0)
+            pool = moved.reshape(moved.shape[0], -1)
+            rows = kv_block_gather(pool, slots).reshape(
+                (len(todo),) + moved.shape[1:])
+            red = self._reduced_axis(spec)
+            for k, s in enumerate(todo):
+                arr = self._shadow[s.rid].get(i)
+                if arr is None:
+                    continue
+                nbytes += arr.nbytes
+                if red is None:
+                    rows = rows.at[k].set(jnp.asarray(arr))
+                else:
+                    sl = [slice(None)] * rows.ndim
+                    sl[0] = k
+                    sl[red + 1] = slice(0, s.pos)
+                    rows = rows.at[tuple(sl)].set(jnp.asarray(arr))
+            newpool = kv_block_scatter(pool, slots,
+                                       rows.reshape(len(todo), -1))
+            leaves[i] = jnp.moveaxis(newpool.reshape(moved.shape), 0,
+                                     spec.batch)
+        for s in todo:
+            self._shadow.pop(s.rid, None)
         self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
         return nbytes
 
@@ -240,10 +328,17 @@ class ServingEngine:
         every other live slot (their region [start_pos, start_pos+chunk)
         is about to be scribbled), then step ``chunk`` tokens."""
         cohort_ids = {s.rid for s in cohort}
-        for s in cohort:
-            self._xfer(lambda s=s: self._restore_slot(s))
-        for rid, st in self._states.items():
-            if rid not in cohort_ids:
+        others = [st for rid, st in self._states.items()
+                  if rid not in cohort_ids]
+        if self._batch_kv:
+            # batched data path: one gather/scatter launch set per turn
+            # moves the whole cohort's blocks (and shadows every bystander)
+            self._xfer(lambda: self._restore_slots(cohort))
+            self._xfer(lambda: self._save_slots(others))
+        else:
+            for s in cohort:
+                self._xfer(lambda s=s: self._restore_slot(s))
+            for st in others:
                 self._xfer(lambda st=st: self._save_slot(st))
         for k in range(chunk):
             idx = start_pos + k
@@ -313,6 +408,7 @@ class ServingEngine:
               engine: Optional[MemoryEngine] = None,
               oversubscription: float = 2.5,
               job_id: str = "serve",
+              batch_transfers: bool = False,
               ) -> Tuple[ServeReport, Dict[str, List[int]]]:
         """Serve a request trace for real: a ServeSession makes every
         residency decision against the shared ledger; this engine's hooks
@@ -325,6 +421,7 @@ class ServingEngine:
         self._shadow.clear()
         self._tok[:] = 0
         self._channel = mem.channel
+        self._batch_kv = bool(batch_transfers)
         try:
             session = ServeSession(
                 requests, engine=mem, job_id=job_id,
@@ -332,9 +429,11 @@ class ServingEngine:
                 bytes_per_token=self.bytes_per_token,
                 block_tokens=block_tokens, budget_bytes=budget_bytes,
                 schedule=schedule, oversubscription=oversubscription,
+                batch_transfers=batch_transfers,
                 hooks=self._hooks())
             report = session.run()
         finally:
             self._channel = None
+            self._batch_kv = False
         return report, {rid: list(toks) for rid, toks in
                         self._outputs.items()}

@@ -179,3 +179,18 @@ class KvResidencyPass:
                     projected += hb
         return TurnPlan(cohort=cohort, evict=evict, fetch=fetch,
                         prefetch=prefetch, chunk=chunk, horizon=horizon)
+
+    # -- batched transfer emission -------------------------------------
+
+    def transfer_cohorts(self, plan: TurnPlan) -> Dict[str, list]:
+        """Distill a :class:`TurnPlan` into direction-grouped transfer
+        cohorts, ``{"evict"|"fetch"|"prefetch": [(rid, nbytes), ...]}``
+        with zero-byte members dropped — each group is one coalesced
+        ``DmaChannel.acquire_batch`` booking for a batching session
+        (single fixup latency for the whole cohort)."""
+        ev = [(r, self.table.device_bytes(r)) for r in plan.evict]
+        fe = [(r, self.table.host_bytes(r)) for r in plan.fetch]
+        pf = [(r, self.table.host_bytes(r)) for r in plan.prefetch]
+        return {"evict": [(r, b) for r, b in ev if b > 0],
+                "fetch": [(r, b) for r, b in fe if b > 0],
+                "prefetch": [(r, b) for r, b in pf if b > 0]}

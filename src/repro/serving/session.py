@@ -100,6 +100,9 @@ class ServeReport:
     swapped_in_bytes: int
     turns: int
     stats: List[dict] = dataclasses.field(default_factory=list)
+    # coalesced-transfer accounting (0 for a non-batching session)
+    batched_transfers: int = 0
+    saved_fixup_s: float = 0.0
 
 
 def _quantile(xs: Sequence[float], q: float) -> float:
@@ -126,6 +129,7 @@ class ServeSession:
                  oversubscription: float = 2.5,
                  decode_round_time: float = 1e-3,
                  prefill_token_time: float = 1e-4,
+                 batch_transfers: bool = False,
                  hooks: Optional[ServeHooks] = None,
                  progress: Optional[Callable[[dict], None]] = None):
         self.requests = sorted(requests, key=lambda r: (r.arrival, r.rid))
@@ -147,6 +151,14 @@ class ServeSession:
             self.admission = AdmissionQueue(cap)
         self.decode_round_time = decode_round_time
         self.prefill_token_time = prefill_token_time
+        # batched data path: direction-grouped cohorts book ONE coalesced
+        # channel slot (single fixup latency + dma_batch_overhead per
+        # extra member) instead of one full transfer setup per rid.
+        # Off by default — the per-rid path's timing is pinned by the
+        # committed serving-scenario baselines.
+        self.batch_transfers = bool(batch_transfers)
+        self.batched_transfers = 0
+        self.saved_fixup_s = 0.0
         self.hooks = hooks or ServeHooks()
         self.progress = progress
         self._bw = max(engine.profile.host_link_bw, 1.0)
@@ -159,6 +171,22 @@ class ServeSession:
 
     def _xfer(self, nbytes: int) -> float:
         return nbytes / self._bw + self.engine.profile.host_link_latency
+
+    def _acquire_group(self, t: float, pairs, direction: str):
+        """Book one coalesced channel slot for a same-direction cohort of
+        (rid, nbytes) transfers.  Returns the batch (start, end)."""
+        if not pairs:
+            return t, t
+        prof = self.engine.profile
+        start, end = self.engine.channel.acquire_batch(
+            t, [nb / self._bw for _, nb in pairs],
+            fixup=prof.host_link_latency, direction=direction,
+            member_overhead=prof.dma_batch_overhead)
+        if len(pairs) > 1:
+            self.batched_transfers += 1
+            self.saved_fixup_s += (len(pairs) - 1) * max(
+                prof.host_link_latency - prof.dma_batch_overhead, 0.0)
+        return start, end
 
     # -- the loop -------------------------------------------------------
 
@@ -224,7 +252,36 @@ class ServeSession:
                 rid = admitted.popleft()
                 r = by_rid[rid]
                 slot = free_slots.pop(0)
-                if self.budget is not None:
+                burst = r.prompt_len * self.prefill_token_time
+                if self.budget is not None and self.batch_transfers:
+                    # batched path: the SAME victims the per-rid loop
+                    # picks, but their copies-out coalesce into one
+                    # booking that overlaps the prefill compute burst —
+                    # the prompt's blocks are grown only after both the
+                    # burst AND the batch end, so the ledger frees always
+                    # precede the allocation they make room for
+                    need = self.table.footprint(r.prompt_len)
+                    victims = []
+                    projected = self.view.used
+                    for v in sorted(live.values(),
+                                    key=lambda s: s.last_served):
+                        if projected + need <= self.budget:
+                            break
+                        nbytes = self.table.device_bytes(v.rid)
+                        if nbytes <= 0:
+                            continue
+                        victims.append((v.rid, nbytes))
+                        projected -= nbytes
+                    if victims:
+                        _, end = self._acquire_group(t, victims, "out")
+                        self.table.evict_many([v for v, _ in victims], end)
+                        for vrid, _ in victims:
+                            self._call(self.hooks.on_evict, vrid)
+                        evictions += len(victims)
+                        t = max(t + burst, end)
+                    else:
+                        t += burst
+                elif self.budget is not None:
                     # make room for the prompt's blocks BEFORE the burst:
                     # admission oversubscribes the budget on purpose, so a
                     # prefill landing between decode turns must push the
@@ -244,7 +301,9 @@ class ServeSession:
                         self._call(self.hooks.on_evict, v.rid)
                         evictions += 1
                         t = max(t, end)
-                t += r.prompt_len * self.prefill_token_time
+                    t += burst
+                else:
+                    t += burst
                 s = SeqState(rid=rid, slot=slot, prompt_len=r.prompt_len,
                              gen_len=r.gen_len, priority=r.priority,
                              arrival=r.arrival, pos=r.prompt_len,
@@ -280,23 +339,44 @@ class ServeSession:
             # evictions serialize on the channel before the turn; device
             # bytes are freed when the copy-out completes
             turn_start = t
-            for rid in plan.evict:
-                nbytes = self.table.device_bytes(rid)
-                _, end = self.engine.channel.acquire(t, self._xfer(nbytes))
-                self.table.evict(rid, end)
-                self._call(self.hooks.on_evict, rid)
-                evictions += 1
-                turn_start = max(turn_start, end)
-            # mandatory fetches: the cohort's turn came while its blocks
-            # were parked on host — a late prefetch is a stall
-            for rid in plan.fetch:
-                nbytes = self.table.host_bytes(rid)
-                start, end = self.engine.channel.acquire(
-                    turn_start, self._xfer(nbytes))
-                self.table.prefetch(rid, start)
-                self._call(self.hooks.on_prefetch, rid)
-                prefetches += 1
-                turn_start = max(turn_start, end)
+            cohorts = (self.resident_pass.transfer_cohorts(plan)
+                       if self.batch_transfers else None)
+            if cohorts is not None:
+                ev = cohorts["evict"]
+                if ev:
+                    _, end = self._acquire_group(t, ev, "out")
+                    self.table.evict_many([r for r, _ in ev], end)
+                    for erid, _ in ev:
+                        self._call(self.hooks.on_evict, erid)
+                    evictions += len(ev)
+                    turn_start = max(turn_start, end)
+                fe = cohorts["fetch"]
+                if fe:
+                    start, end = self._acquire_group(turn_start, fe, "in")
+                    self.table.prefetch_many([r for r, _ in fe], start)
+                    for frid, _ in fe:
+                        self._call(self.hooks.on_prefetch, frid)
+                    prefetches += len(fe)
+                    turn_start = max(turn_start, end)
+            else:
+                for rid in plan.evict:
+                    nbytes = self.table.device_bytes(rid)
+                    _, end = self.engine.channel.acquire(
+                        t, self._xfer(nbytes))
+                    self.table.evict(rid, end)
+                    self._call(self.hooks.on_evict, rid)
+                    evictions += 1
+                    turn_start = max(turn_start, end)
+                # mandatory fetches: the cohort's turn came while its
+                # blocks were parked on host — a late prefetch is a stall
+                for rid in plan.fetch:
+                    nbytes = self.table.host_bytes(rid)
+                    start, end = self.engine.channel.acquire(
+                        turn_start, self._xfer(nbytes))
+                    self.table.prefetch(rid, start)
+                    self._call(self.hooks.on_prefetch, rid)
+                    prefetches += 1
+                    turn_start = max(turn_start, end)
             ready = max((s.ready_at for s in cohort), default=0.0)
             turn_start = max(turn_start, ready)
             stall += turn_start - t
@@ -318,15 +398,27 @@ class ServeSession:
 
             # lookahead prefetches overlap the turn's compute: book the
             # channel now so the next group's blocks land before its turn
-            for rid in plan.prefetch:
-                nbytes = self.table.host_bytes(rid)
-                start, end = self.engine.channel.acquire(
-                    turn_start, self._xfer(nbytes))
-                self.table.prefetch(rid, start)
-                if rid in live:
-                    live[rid].ready_at = max(live[rid].ready_at, end)
-                self._call(self.hooks.on_prefetch, rid)
-                prefetches += 1
+            if cohorts is not None:
+                pf = cohorts["prefetch"]
+                if pf:
+                    start, end = self._acquire_group(turn_start, pf, "in")
+                    self.table.prefetch_many([r for r, _ in pf], start)
+                    for prid, _ in pf:
+                        if prid in live:
+                            live[prid].ready_at = max(
+                                live[prid].ready_at, end)
+                        self._call(self.hooks.on_prefetch, prid)
+                    prefetches += len(pf)
+            else:
+                for rid in plan.prefetch:
+                    nbytes = self.table.host_bytes(rid)
+                    start, end = self.engine.channel.acquire(
+                        turn_start, self._xfer(nbytes))
+                    self.table.prefetch(rid, start)
+                    if rid in live:
+                        live[rid].ready_at = max(live[rid].ready_at, end)
+                    self._call(self.hooks.on_prefetch, rid)
+                    prefetches += 1
 
             for s in list(cohort):
                 if s.remaining <= 0:
@@ -357,4 +449,6 @@ class ServeSession:
             stall_time=stall, evictions=evictions, prefetches=prefetches,
             swapped_out_bytes=self.table.swapped_out_bytes,
             swapped_in_bytes=self.table.swapped_in_bytes,
-            turns=turns, stats=stats)
+            turns=turns, stats=stats,
+            batched_transfers=self.batched_transfers,
+            saved_fixup_s=self.saved_fixup_s)

@@ -205,6 +205,54 @@ def test_decode_bit_identical_with_and_without_swapping(engine, trace6):
     assert out == golden                 # ...and decode never noticed
 
 
+def test_decode_bit_identical_on_the_batched_data_path(engine, trace6):
+    """PR 9: restoring/saving KV cohorts through the batched kernels
+    (one gather/scatter launch per cohort) must be invisible to decode —
+    identical token ids, identical residency decisions, same pressure."""
+    _, golden = engine.serve(trace6, budget_bytes=None, schedule=False)
+
+    budget = BPT * (MAX_LEN * 2 + 2)
+    mem_l = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    rep_l, out_l = engine.serve(trace6, budget_bytes=budget, schedule=True,
+                                engine=mem_l)
+    mem_b = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    rep_b, out_b = engine.serve(trace6, budget_bytes=budget, schedule=True,
+                                engine=mem_b, batch_transfers=True)
+
+    assert out_b == golden               # bit-identical to the unswapped run
+    assert rep_b.oom_events == 0
+    assert rep_b.evictions == rep_l.evictions > 0
+    # same residency decisions as the legacy per-slot path: batching
+    # changes the wire shape, never what moves
+    assert mem_b.trace.keys() == mem_l.trace.keys()
+    assert rep_b.swapped_out_bytes == rep_l.swapped_out_bytes
+    assert rep_b.swapped_in_bytes == rep_l.swapped_in_bytes
+    # cohorts really rode coalesced bookings, saving fixup latencies
+    assert rep_b.batched_transfers > 0
+    assert rep_b.saved_fixup_s > 0
+    assert rep_l.batched_transfers == 0
+
+
+def test_sim_real_parity_on_the_batched_data_path(engine, trace6):
+    """The virtual ServeSession with batch_transfers replays the same
+    decision trace as the real engine's batched path."""
+    budget = BPT * (MAX_LEN * 2 + 2)
+    mem_v = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    sim = ServeSession(trace6, engine=mem_v, max_sequences=4,
+                       bytes_per_token=BPT, block_tokens=4,
+                       budget_bytes=budget, schedule=True,
+                       batch_transfers=True).run()
+    mem_r = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)
+    real, _ = engine.serve(trace6, budget_bytes=budget, schedule=True,
+                           engine=mem_r, batch_transfers=True)
+    assert mem_v.trace.keys() == mem_r.trace.keys()
+    assert sim.peak_bytes == real.peak_bytes
+    assert sim.evictions == real.evictions
+    assert sim.tokens_generated == real.tokens_generated
+    assert sim.batched_transfers == real.batched_transfers > 0
+    assert sim.total_time == pytest.approx(real.total_time)
+
+
 def test_sim_real_parity_on_a_served_mix(engine, trace6):
     budget = BPT * (MAX_LEN * 2 + 2)
     mem_v = MemoryEngine(PROFILE, capacity_bytes=budget, trace=True)

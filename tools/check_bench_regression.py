@@ -49,6 +49,23 @@ replan / warm boot wall-time per op-count, see
 Unlike the scenario metrics, planner rows are wall-clock, so min-of-N
 timing plus the 25 % + 1 ms slack absorbs scheduler noise.
 
+The third gate is the runtime data path: ``python -m benchmarks.run
+--only runtime --smoke`` writes
+``experiments/results/BENCH_runtime.json`` (blocking vs double-buffered
+executor swaps, per-block vs batched KV-block restore, the serving
+pressure scenario with the batched transfer path — see
+``benchmarks/runtime_bench.py``) and this tool diffs it against
+``benchmarks/BENCH_runtime.json``:
+
+  * a wall-clock row's ``ms`` regressing by more than 25 % past the 1 ms
+    floor fails, a ``tokens_per_s`` row decaying by more than 25 %
+    fails, and an OOM-free row gaining OOM events fails, and
+  * the hard runtime contract on the CURRENT run: the batched KV restore
+    must be at least 3x faster than the per-block path, and the batched
+    pressure serving run must hold >=92 % of the unpressured tokens/sec
+    with zero OOM events and decode outputs bit-identical to the golden
+    run (see ``runtime_contract``).
+
 Improvements and new rows never fail — they are reported and can be
 pinned with ``--update``, which copies the current metrics over the
 committed baselines.  Scenario metrics are deterministic (the simulator
@@ -74,6 +91,9 @@ CURRENT = os.path.join(ROOT, "experiments", "results",
 PLANNER_BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_planner.json")
 PLANNER_CURRENT = os.path.join(ROOT, "experiments", "results",
                                "BENCH_planner.json")
+RUNTIME_BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_runtime.json")
+RUNTIME_CURRENT = os.path.join(ROOT, "experiments", "results",
+                               "BENCH_runtime.json")
 
 PEAK_TOLERANCE = 0.10        # >10 % peak growth fails
 OVERHEAD_TOLERANCE = 0.25    # >25 % EOR / time-to-within-budget growth fails
@@ -340,6 +360,89 @@ def planner_contract(current: dict) -> list:
     return failures
 
 
+# the ISSUE-9 runtime data-path contract: batched KV restore speedup
+# floor, and the batched pressure run's tokens/sec band vs unpressured
+# (tightened from the scenarios suite's coarse 50 % band — the batched
+# transfer path is what makes the tighter band holdable)
+RUNTIME_KV_SPEEDUP = 3.0
+RUNTIME_TPS_BAND = 0.92
+
+
+def compare_runtime(baseline: dict, current: dict) -> list:
+    """Runtime data-path diff: wall-clock ``ms`` rows get the planner
+    gate's 25 % + 1 ms floor treatment, ``tokens_per_s`` rows fail on a
+    >25 % decay, and an OOM-free row gaining OOM events fails."""
+    failures = []
+    for key in sorted(baseline):
+        if key == "_meta":
+            continue
+        base = baseline[key]
+        cur = current.get(key)
+        if cur is None:
+            failures.append(f"runtime {key}: missing from the current run "
+                            "(bench row removed?)")
+            continue
+        b, c = base.get("ms"), cur.get("ms")
+        if b is not None and c is not None \
+                and c > max(b, LATENCY_FLOOR_MS):
+            inc = (c - b) / max(b, LATENCY_FLOOR_MS)
+            if inc > LATENCY_TOLERANCE:
+                failures.append(
+                    f"runtime {key}: latency regressed {b:.3f} ms -> "
+                    f"{c:.3f} ms (+{inc:.1%}, limit "
+                    f"{LATENCY_TOLERANCE:.0%}, floor "
+                    f"{LATENCY_FLOOR_MS:g} ms)")
+        b_tps, c_tps = base.get("tokens_per_s"), cur.get("tokens_per_s")
+        if b_tps and c_tps is not None \
+                and c_tps < b_tps * (1 - LATENCY_TOLERANCE):
+            failures.append(
+                f"runtime {key}: tokens/sec decayed {b_tps:.1f} -> "
+                f"{c_tps:.1f} (-{1 - c_tps / b_tps:.1%}, limit "
+                f"{LATENCY_TOLERANCE:.0%})")
+        b_oom, c_oom = base.get("oom_events"), cur.get("oom_events")
+        if b_oom == 0 and (c_oom or 0) > 0:
+            failures.append(f"runtime {key}: was OOM-free, now {c_oom} "
+                            "OOM events")
+    return failures
+
+
+def runtime_contract(current: dict) -> list:
+    """The runtime data-path contract, enforced on the CURRENT run: the
+    batched KV-block restore must beat the per-block path by the speedup
+    floor, and the batched pressure serving run must stay OOM-free,
+    bit-identical, and inside the tokens/sec band of the unpressured
+    run.  Absent rows check nothing (pre-runtime baselines)."""
+    failures = []
+    kv = current.get("kv_restore/batched")
+    if kv is not None:
+        sp = kv.get("speedup")
+        if sp is not None and sp < RUNTIME_KV_SPEEDUP:
+            failures.append(
+                f"runtime contract: batched KV restore only {sp:.2f}x the "
+                f"per-block path (need >={RUNTIME_KV_SPEEDUP:g}x) — the "
+                "batched gather/scatter launch stopped paying")
+    bat = current.get("serving/pressure_batched")
+    ref = current.get("serving/unpressured")
+    if not bat or not ref:
+        return failures
+    if (bat.get("oom_events") or 0) > 0:
+        failures.append(f"runtime contract: serving/pressure_batched hit "
+                        f"{bat['oom_events']} OOM events — the batched "
+                        "transfer path broke residency protection")
+    if bat.get("decode_bit_identical") is False:
+        failures.append("runtime contract: serving/pressure_batched decode "
+                        "outputs diverged from the unpressured golden run "
+                        "— batched KV movement corrupted the cache")
+    ratio = bat.get("ratio_vs_unpressured")
+    if ratio is not None and ratio < RUNTIME_TPS_BAND:
+        failures.append(
+            f"runtime contract: batched pressure serving at "
+            f"{ratio:.1%} of unpressured tokens/sec (need "
+            f">={RUNTIME_TPS_BAND:.0%}) — transfer overhead is no longer "
+            "hidden behind decode compute")
+    return failures
+
+
 def _smoke_mismatch(baseline: dict, current: dict, bench: str) -> bool:
     # smoke and full-size metrics are different universes; refuse to diff
     # or re-pin across the two (run the variant the baseline was pinned
@@ -366,6 +469,8 @@ def main() -> int:
     ap.add_argument("--current", default=CURRENT)
     ap.add_argument("--planner-baseline", default=PLANNER_BASELINE)
     ap.add_argument("--planner-current", default=PLANNER_CURRENT)
+    ap.add_argument("--runtime-baseline", default=RUNTIME_BASELINE)
+    ap.add_argument("--runtime-current", default=RUNTIME_CURRENT)
     args = ap.parse_args()
 
     # (baseline, current, bench name, compare fn, contract fn, run hint)
@@ -374,6 +479,8 @@ def main() -> int:
          scenario_contracts, "--only scenarios --smoke"),
         (args.planner_baseline, args.planner_current, "planner",
          compare_planner, planner_contract, "--only planner --smoke"),
+        (args.runtime_baseline, args.runtime_current, "runtime",
+         compare_runtime, runtime_contract, "--only runtime --smoke"),
     ]
 
     failures: list = []
