@@ -142,7 +142,7 @@ def bench_scenarios(smoke: bool = False,
     committed baseline ``benchmarks/BENCH_scenarios.json``."""
     from . import scenarios
     t = scenarios.run(os.path.join(RESULTS, "scenarios.json"), smoke=smoke,
-                      experience_dir=experience_dir)
+                      drift=True, experience_dir=experience_dir)
     # the gate file records which variant produced it: smoke and full-size
     # metrics are NOT comparable, and check_bench_regression refuses to
     # diff (or --update) across the two
@@ -225,6 +225,32 @@ def bench_scenarios(smoke: bool = False,
                 "plan_cache_hit": m["plan_cache_hit"],
                 "calib_err": round(m["calib_err"], 6),
                 "calib_err_first": round(m["calib_err_cold"], 6),
+            }
+        # sim-vs-measured drift row: the observability plane's accuracy
+        # contract — the engine parity guarantee (identical residency
+        # decisions on both runtimes) as a continuously gated metric;
+        # tools/check_bench_regression.py::drift_contract enforces the
+        # absolute drift bounds and that the sample persisted into the
+        # ExperienceStore drift history
+        d = rec.get("drift")
+        if d:
+            def _fmt(v):
+                return f"{v:.4f}" if v is not None else "n/a"
+            _emit(f"scenarios/{scn}/drift", d["time"] * 1e6,
+                  f"peak_drift={_fmt(d['peak_drift'])};"
+                  f"sp_drift={_fmt(d['sp_drift'])};"
+                  f"eor_drift={_fmt(d['eor_drift'])};"
+                  f"history_len={d['history_len']}")
+            gate[f"{scn}/drift"] = {
+                "peak": d["measured_peak"],
+                "predicted_peak": d["predicted_peak"],
+                "peak_drift": round(d["peak_drift"], 6),
+                "sp_drift": (round(d["sp_drift"], 6)
+                             if d["sp_drift"] is not None else None),
+                "eor_drift": (round(d["eor_drift"], 6)
+                              if d["eor_drift"] is not None else None),
+                "history_len": d["history_len"],
+                "over_threshold": d["over_threshold"],
             }
     with open(os.path.join(RESULTS, "BENCH_scenarios.json"), "w") as f:
         json.dump(gate, f, indent=1, sort_keys=True)

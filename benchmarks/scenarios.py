@@ -1235,6 +1235,111 @@ def run_serving_scenario(scn: ServingScenario, smoke: bool = False) -> Dict:
     return rec
 
 
+# ----------------------------------------------------------------------
+# Sim-vs-measured drift: the observability plane's accuracy contract
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class DriftScenario:
+    """The same captured job + plan run through the virtual-time
+    simulator (predicted) and the real ``JaxprExecutor`` (measured),
+    compared by the :class:`~repro.obs.drift.DriftMonitor`.  The engine
+    parity guarantee says the two runtimes book identical residency
+    decisions, so predicted-vs-measured peak drift must sit at ~0 — the
+    distilled ``drift`` bench row turns that from a point assertion in
+    the test suite into a continuously gated product metric
+    (``tools/check_bench_regression.py::drift_contract``).  Safe-point
+    placement is compared modeled (planned-ledger) vs measured
+    (telemetry-replayed) on the same plan."""
+
+    name: str
+    description: str
+    size: str = "small"
+
+
+DRIFT = DriftScenario(
+    name="sim-vs-measured",
+    description="one captured MLP job + tensile plan run on the "
+                "virtual-time simulator and on the real JaxprExecutor; "
+                "the DriftMonitor compares predicted vs measured peak, "
+                "EOR, and safe-point placement, and persists the sample "
+                "into an ExperienceStore drift history")
+
+
+def run_drift_scenario(scn: DriftScenario = DRIFT,
+                       smoke: bool = False) -> Dict:
+    from repro.core import (JaxprExecutor, capture_train_step,
+                            schedule_single)
+    from repro.obs import DriftMonitor, EventLog, MetricsRegistry
+    from repro.service.workloads import make_mlp
+
+    shape, batch = SHAPES[scn.size][smoke]
+    step, params, opt, batch_data = make_mlp(sizes=shape, batch=batch)
+    seq, closed = capture_train_step(step, params, opt, batch_data,
+                                     job_id="drift")
+    plan = schedule_single(seq, profile=PROFILE).plans["drift"]
+
+    # predicted: the engine-backed sim in sync transfer mode (the parity
+    # configuration — identical residency decisions to the executor)
+    hub_s = TelemetryHub(clock="virtual")
+    sim = simulate([seq], {"drift": plan.copy()}, PROFILE, iterations=1,
+                   transfer_mode="sync", engine=MemoryEngine(PROFILE),
+                   telemetry=hub_s)
+    sps_pred = find_safe_points(seq, plan)
+
+    # measured: the real executor running the same plan on real arrays
+    hub_m = TelemetryHub(clock="real")
+    ex = JaxprExecutor(closed, seq, plan,
+                       engine=MemoryEngine(PROFILE, telemetry=hub_m))
+    ex.run(params, opt, batch_data)
+    ex.close()
+    sps_meas = find_safe_points(seq, plan, source="measured",
+                                telemetry=hub_m)
+
+    events = EventLog()
+    metrics = MetricsRegistry()
+    exp = ExperienceStore(tempfile.mkdtemp(prefix="tensile-drift-"),
+                          device_id="scenario-device")
+    monitor = DriftMonitor(events=events, metrics=metrics, experience=exp)
+    fp = exp.fingerprint(seq)
+    s = monitor.observe(
+        fp,
+        predicted_peak=sim.peak_bytes,
+        measured_peak=ex.stats.peak_bytes,
+        job_id="drift",
+        predicted_eor=hub_s.measured_eor("drift"),
+        measured_eor=hub_m.measured_eor("drift"),
+        predicted_safe_points=[sp.op_idx for sp in sps_pred],
+        measured_safe_points=[sp.op_idx for sp in sps_meas])
+    exp.flush()
+    # round-trip: the persisted history must survive a fresh store open
+    history_len = len(ExperienceStore(
+        exp.root, device_id="scenario-device").drift_history(fp))
+
+    return {
+        "description": scn.description,
+        "jobs": {"drift": {"offset": 0.0, "iterations": 1,
+                           "priority": 1.0,
+                           "budget": plan.planned_peak_bytes}},
+        "policies": {},
+        "drift": {
+            "time": sim.total_time,
+            "predicted_peak": sim.peak_bytes,
+            "measured_peak": ex.stats.peak_bytes,
+            "peak_drift": s.peak_drift,
+            "predicted_eor": s.predicted_eor,
+            "measured_eor": s.measured_eor,
+            "eor_drift": s.eor_drift,
+            "modeled_safe_points": sorted(sp.op_idx for sp in sps_pred),
+            "measured_safe_points": sorted(sp.op_idx for sp in sps_meas),
+            "sp_drift": s.sp_drift,
+            "worst": s.worst,
+            "over_threshold": bool(s.worst > monitor.threshold),
+            "warn_events": len(events.warnings()),
+            "history_len": history_len,
+        },
+    }
+
+
 def _json_safe(obj):
     """Replace non-finite floats (ttwb=inf == "never recovered") with
     None: `Infinity` is not valid RFC-8259 JSON and would break strict
@@ -1251,7 +1356,7 @@ def _json_safe(obj):
 def run(out_json: Optional[str] = None, smoke: bool = False,
         policies=POLICIES, preemption: bool = True,
         cold_warm: bool = True, overload: bool = True,
-        serving: bool = True,
+        serving: bool = True, drift: bool = False,
         experience_dir: Optional[str] = None) -> Dict[str, Dict]:
     table = {scn.name: run_scenario(scn, smoke=smoke, policies=policies)
              for scn in SCENARIOS}
@@ -1265,6 +1370,12 @@ def run(out_json: Optional[str] = None, smoke: bool = False,
         table[OVERLOAD.name] = run_overload_scenario(OVERLOAD, smoke=smoke)
     if serving:
         table[SERVING.name] = run_serving_scenario(SERVING, smoke=smoke)
+    if drift:
+        # opt-in (the bench runner sets it): the drift record carries a
+        # single job and no per-policy rows, so it does not fit the
+        # suite-wide jobs/policies shape tests/test_scenarios.py asserts
+        # over every row of the default table
+        table[DRIFT.name] = run_drift_scenario(DRIFT, smoke=smoke)
     if out_json:
         with open(out_json, "w") as f:
             json.dump(_json_safe(table), f, indent=1)

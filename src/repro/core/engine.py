@@ -254,6 +254,8 @@ class DmaChannel:
         # real-time state
         self.lock = threading.Lock()
         self.busy_s = 0.0
+        # optional observability tap (instant events for batch merges)
+        self.recorder = None
 
     def acquire(self, t: float, dur: float, direction: Optional[str] = None,
                 fixup: float = 0.0) -> Tuple[float, float]:
@@ -273,6 +275,9 @@ class DmaChannel:
                     self.coalesced_bookings += 1  # the member that opened it
                 self.coalesced_bookings += 1
                 self.saved_fixup_s += max(fixup - self.batch_overhead_s, 0.0)
+                if self.recorder is not None:
+                    self.recorder.instant("dma_batch_merge", e,
+                                          direction=d, members=n + 1)
                 return e, self.busy_until
         prev = self.busy_until
         if t < self.busy_until:
@@ -313,6 +318,9 @@ class DmaChannel:
         self.batched_transfers += 1
         self.coalesced_bookings += len(durs)
         self.saved_fixup_s += max(fixup - over, 0.0) * (len(durs) - 1)
+        if self.recorder is not None:
+            self.recorder.instant("dma_batch", t, direction=direction,
+                                  members=len(durs))
         return t, t + dur
 
     def try_refund(self, start: float, end: float) -> bool:
@@ -766,6 +774,9 @@ class MemoryEngine:
         self.channel = channel or DmaChannel()
         self.jobs: Dict[str, JobContext] = {}
         self.telemetry: Optional[TelemetryHub] = None
+        # optional observability tap: None (the default) keeps every
+        # hook at a single attribute check
+        self.recorder = None
         if telemetry is not None:
             self.attach_telemetry(telemetry)
 
@@ -776,6 +787,19 @@ class MemoryEngine:
         self.telemetry = hub
         if self.ledger.telemetry is None:
             self.ledger.telemetry = hub
+        if self.recorder is not None and hub._recorder is None:
+            hub.attach_recorder(self.recorder)
+
+    def attach_recorder(self, recorder) -> None:
+        """Bind a trace recorder to every tap this engine owns: the
+        telemetry hub's publish point, the DMA channel's batch events,
+        and the runtimes' hot-swap instants (which read
+        ``engine.recorder``).  Attach order vs ``attach_telemetry`` does
+        not matter — whichever lands second propagates."""
+        self.recorder = recorder
+        self.channel.recorder = recorder
+        if self.telemetry is not None and self.telemetry._recorder is None:
+            self.telemetry.attach_recorder(recorder)
 
     def add_job(self, seq: AccessSequence,
                 plan: Optional[SchedulingPlan] = None,

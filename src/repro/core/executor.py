@@ -337,6 +337,12 @@ class JaxprExecutor:
             self.ctx.set_plan(plan)
             self.stats.hot_swaps += 1
             self._pending_plan = None
+            rec = self.engine.recorder
+            if rec is not None:
+                t = self.telemetry.now() if self.telemetry is not None \
+                    else 0.0
+                rec.instant("hot_swap", t, job_id=self.ctx.job_id,
+                            site="safe-point", op_idx=idx)
 
     # ------------------------------------------------------------------
     def _name_of(self, v) -> str:

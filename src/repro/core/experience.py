@@ -224,6 +224,28 @@ class DeviceRecord:
 
 
 @dataclasses.dataclass
+class DriftRecord:
+    """One sim-vs-measured drift comparison (observability plane).
+
+    Appended per finished comparison by ``DriftMonitor`` through
+    ``ExperienceStore.record_drift``; readers that predate the record
+    kind skip it (unknown kinds are ignored by ``_entry_of``), so this
+    is an additive schema extension, not a version bump."""
+
+    t: float
+    job_id: str
+    predicted_peak: int
+    measured_peak: int
+    peak_drift: float
+    eor_drift: Optional[float] = None
+    sp_drift: Optional[float] = None
+
+
+# drift history kept per fingerprint (a bounded time series, not a log)
+DRIFT_HISTORY_LIMIT = 64
+
+
+@dataclasses.dataclass
 class ExperienceEntry:
     """Everything persisted for one job fingerprint."""
 
@@ -231,6 +253,7 @@ class ExperienceEntry:
     telemetry: Optional[TelemetrySummary] = None
     calibration: Optional[CalibrationRecord] = None
     plans: Dict[str, PlanRecord] = dataclasses.field(default_factory=dict)
+    drift: List[DriftRecord] = dataclasses.field(default_factory=list)
 
     @property
     def updated_at(self) -> float:
@@ -296,6 +319,15 @@ def _merge_entries(a: Optional[ExperienceEntry],
     out.plans = dict(a.plans)
     for key, rec in b.plans.items():
         out.plans[key] = _better_plan(out.plans.get(key), rec)
+    # drift history: union by (t, job_id), time-ordered, bounded
+    seen = set()
+    drift: List[DriftRecord] = []
+    for rec in sorted(a.drift + b.drift, key=lambda r: (r.t, r.job_id)):
+        key = (rec.t, rec.job_id)
+        if key not in seen:
+            seen.add(key)
+            drift.append(rec)
+    out.drift = drift[-DRIFT_HISTORY_LIMIT:]
     return out
 
 
@@ -363,6 +395,8 @@ def _records_of(entry: ExperienceEntry) -> List[Dict[str, object]]:
                      **dataclasses.asdict(entry.calibration)})
     for rec in entry.plans.values():
         recs.append({"kind": "plan", **dataclasses.asdict(rec)})
+    for rec in entry.drift[-DRIFT_HISTORY_LIMIT:]:
+        recs.append({"kind": "drift", **dataclasses.asdict(rec)})
     return recs
 
 
@@ -383,8 +417,12 @@ def _entry_of(fp: str,
                 pr = PlanRecord(**body)
                 entry.plans[pr.key] = _better_plan(entry.plans.get(pr.key),
                                                    pr)
+            elif kind == "drift":
+                entry.drift.append(DriftRecord(**body))
         except TypeError:
             continue        # unknown field layout: skip the record
+    entry.drift.sort(key=lambda r: (r.t, r.job_id))
+    del entry.drift[:-DRIFT_HISTORY_LIMIT]
     return entry
 
 
@@ -578,7 +616,7 @@ class ExperienceStore:
             return None
         entry = _entry_of(fp, recs)
         if entry.telemetry is None and entry.calibration is None \
-                and not entry.plans:
+                and not entry.plans and not entry.drift:
             return None
         return entry
 
@@ -745,6 +783,38 @@ class ExperienceStore:
                 ent.plans[rec.key] = _better_plan(ent.plans.get(rec.key),
                                                   rec)
         self.record_device(calib=calib, samples=calib_samples, hub=hub)
+
+    def record_drift(self, fp: str, sample) -> None:
+        """Append one sim-vs-measured drift comparison to the
+        fingerprint's bounded history.  ``sample`` is anything with the
+        DriftRecord field surface (the obs plane's ``DriftSample``
+        qualifies).  Nothing touches disk until ``flush()``."""
+        rec = DriftRecord(
+            t=float(getattr(sample, "t", 0.0)),
+            job_id=str(getattr(sample, "job_id", "") or ""),
+            predicted_peak=int(sample.predicted_peak),
+            measured_peak=int(sample.measured_peak),
+            peak_drift=float(sample.peak_drift),
+            eor_drift=getattr(sample, "eor_drift", None),
+            sp_drift=getattr(sample, "sp_drift", None))
+        with self._lock:
+            ent = self._pending.setdefault(fp, ExperienceEntry(fp))
+            ent.drift.append(rec)
+            del ent.drift[:-DRIFT_HISTORY_LIMIT]
+
+    def drift_history(self, fp: str) -> List[DriftRecord]:
+        """Persisted + pending drift samples for a fingerprint, time
+        ordered, bounded to the history limit."""
+        out: List[DriftRecord] = []
+        ent = self.get(fp)
+        if ent is not None:
+            out.extend(ent.drift)
+        with self._lock:
+            pend = self._pending.get(fp)
+            if pend is not None:
+                out.extend(pend.drift)
+        out.sort(key=lambda r: (r.t, r.job_id))
+        return out[-DRIFT_HISTORY_LIMIT:]
 
     def record_device(self, calib: Optional[DeviceCalibration] = None,
                       samples: int = 0, hub=None) -> None:

@@ -102,6 +102,9 @@ class JobHandle:
     # the JobSpec this handle was submitted with (None only for handles
     # built outside the submit() path)
     spec: Optional[Any] = None
+    # admission-time predicted peak (captured only when a DriftMonitor is
+    # attached — the measured peak is compared against it on exit)
+    predicted_peak: Optional[int] = None
 
     @property
     def budget_bytes(self) -> Optional[int]:
@@ -341,8 +344,23 @@ class GlobalController:
                  telemetry: Optional[TelemetryHub] = None,
                  safe_point_source: str = "measured",
                  experience: Optional[ExperienceStore] = None,
-                 experience_dir: Optional[str] = None):
+                 experience_dir: Optional[str] = None,
+                 events=None, drift=None):
         self.profile = profile or MachineProfile()
+        # structured event stream (observability plane): failure paths
+        # that must never take a job down with them — experience
+        # flushes, survivor replans, preempt replans — emit WARN events
+        # here IN ADDITION to their recoverable-failure lists, so a
+        # silent list append becomes a visible, timestamped signal.
+        # Always present (a bounded ring buffer costs nothing idle).
+        if events is None:
+            from ..obs.events import EventLog
+            events = EventLog()
+        self.events = events
+        # optional sim-vs-measured drift monitor: when attached, submit
+        # captures the predicted peak and _on_job_exit feeds it the
+        # measured one.  None (the default) adds zero work per job.
+        self.drift = drift
         # ONE measured-telemetry hub per device: every executor produces
         # into it; safe-point detection, drift replans, swap-window sizing
         # and the eor-learned arbiter policy consume from it
@@ -443,6 +461,10 @@ class GlobalController:
                 fp = self.experience.fingerprint(seq)
             except Exception as e:  # noqa: BLE001 - cold boot instead
                 self.experience_failures.append((spec.job_id, e))
+                self.events.warn("experience",
+                                 "fingerprint computation failed; "
+                                 "job cold-boots",
+                                 job_id=spec.job_id, error=repr(e))
         return CapturedJob(seq=seq, closed_jaxpr=closed,
                            args=(params, opt_state, batch), fingerprint=fp)
 
@@ -488,8 +510,11 @@ class GlobalController:
                 prior = self.experience.predicted_peak(seq)
                 if prior is not None:
                     return prior
-            except Exception:  # noqa: BLE001 - fall through to cost model
-                pass
+            except Exception as e:  # noqa: BLE001 - fall through to model
+                self.events.warn("experience",
+                                 "predicted-peak prior lookup failed; "
+                                 "using cost-model bound",
+                                 job_id=seq.job_id, error=repr(e))
         bound = int(analyze([seq], free_at_last_use=False).peak_bytes)
         if budget_hint_bytes:
             bound = max(bound, int(budget_hint_bytes))
@@ -539,6 +564,17 @@ class GlobalController:
                         self.arbiter.set_prior(spec.job_id, prior)
                 except Exception as e:  # noqa: BLE001 - cold boot instead
                     self.experience_failures.append((spec.job_id, e))
+                    self.events.warn("experience",
+                                     "arbiter prior lookup failed; "
+                                     "job starts with live samples only",
+                                     job_id=spec.job_id, error=repr(e))
+            if self.drift is not None:
+                # admission-time prediction pinned for the exit-time
+                # comparison (skipped entirely without a monitor)
+                try:
+                    handle.predicted_peak, _src = self.predict_peak(seq)
+                except Exception:  # noqa: BLE001 - drift is best-effort
+                    handle.predicted_peak = None
             if spec.schedule:
                 self._replan()
         t = threading.Thread(target=self._run_job, args=(handle,), daemon=True)
@@ -700,6 +736,10 @@ class GlobalController:
                     future[0], budgets[j])
             except Exception as e:  # noqa: BLE001 - victim keeps its plan
                 self.preempt_failures.append((j, e))
+                self.events.warn("preempt",
+                                 "incremental preempt replan failed; "
+                                 "victim keeps its plan to the boundary",
+                                 job_id=j, error=repr(e))
                 continue
             prior_n = len(running.events) if running is not None else 0
             if len(res.plans[j].events) == prior_n:
@@ -816,6 +856,34 @@ class GlobalController:
                     self.experience.flush()
                 except Exception as e:  # noqa: BLE001
                     self.experience_failures.append((handle.job_id, e))
+                    self.events.warn("experience",
+                                     "experience flush failed on job "
+                                     "exit; distilled run lost",
+                                     job_id=handle.job_id, error=repr(e))
+            if self.drift is not None and not is_serve \
+                    and handle.predicted_peak:
+                measured = max(handle.peak_bytes,
+                               self.accountant.job_peak(handle.job_id))
+                if measured > 0:
+                    fp = handle.fingerprint or ""
+                    if not fp and self.experience is not None:
+                        try:
+                            fp = self.experience.fingerprint(handle.seq)
+                        except Exception:  # noqa: BLE001
+                            fp = ""
+                    self.drift.observe(
+                        fp or handle.job_id,
+                        predicted_peak=handle.predicted_peak,
+                        measured_peak=measured, job_id=handle.job_id)
+                    if self.experience is not None:
+                        try:  # persist the drift history now, not at
+                            # the NEXT job's flush
+                            self.experience.flush()
+                        except Exception as e:  # noqa: BLE001
+                            self.events.warn(
+                                "experience", "drift-history flush "
+                                "failed", job_id=handle.job_id,
+                                error=repr(e))
             if not is_serve:
                 self.scheduler.remove_job(handle.job_id)
             if self.arbiter is not None:
@@ -829,6 +897,10 @@ class GlobalController:
                 except Exception as e:  # noqa: BLE001
                     # survivors keep their current (still valid) plans
                     self.replan_failures.append((handle.job_id, e))
+                    self.events.warn("replan",
+                                     "survivor replan failed after job "
+                                     "departure; current plans kept",
+                                     job_id=handle.job_id, error=repr(e))
 
     # ------------------------------------------------------------------
     def report_latencies(self, job_id: str, measured: List[float]) -> bool:

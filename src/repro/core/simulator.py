@@ -425,6 +425,9 @@ def simulate(seqs: Sequence[AccessSequence],
                 job.swap_in_start.clear()
                 ctx.set_plan(upd.plan)
                 upd.applied_time, upd.applied_op = end, op_idx
+                if eng.recorder is not None:
+                    eng.recorder.instant("hot_swap", end, job_id=job_id,
+                                         site="safe-point", op_idx=op_idx)
                 # superseded SAFE-POINT updates are dropped; pending
                 # boundary updates survive — a spliced remainder plan is
                 # only certified for this iteration's window, so the full
@@ -461,6 +464,9 @@ def simulate(seqs: Sequence[AccessSequence],
                 ctx.set_plan(last_boundary.plan)
                 last_boundary.applied_time = end
                 last_boundary.applied_op = -1
+                if eng.recorder is not None:
+                    eng.recorder.instant("hot_swap", end, job_id=job_id,
+                                         site="boundary", op_idx=-1)
             if job.iter < job.iterations:
                 push(end, "op", job_id, 0)
             else:

@@ -166,6 +166,14 @@ class TelemetryHub:
         # per-job EWMA-corrected measured latency per op (paper §IV-E,
         # maintained incrementally as samples arrive)
         self._ewma: Dict[str, Dict[int, float]] = {}
+        # optional observability tap: a TraceRecorder sees every sample
+        # at its single publish point below.  None (the default) keeps
+        # the hot path at one attribute check per record.
+        self._recorder = None
+
+    def attach_recorder(self, recorder) -> None:
+        """Forward every published sample to a trace recorder."""
+        self._recorder = recorder
 
     # -- pause (per-thread) --------------------------------------------
     @property
@@ -222,6 +230,9 @@ class TelemetryHub:
             self.stalls.setdefault(s.job_id, []).append(s)
         else:
             self.residency.setdefault(s.job_id, []).append(s)
+        rec = self._recorder
+        if rec is not None:
+            rec.on_sample(kind, s)
 
     # -- clock ---------------------------------------------------------
     def now(self) -> float:

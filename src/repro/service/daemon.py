@@ -31,12 +31,14 @@ import time as _time
 from typing import Any, Dict, List, Optional
 
 from ..core.multiplexer import CapturedJob, GlobalController
+from ..obs.metrics import MetricsRegistry
 from .jobspec import JobSpec, JobState
 from .queue import AdmissionQueue
 from .store import JobRecord, JobStore
 
 INBOX_DIR = "inbox"
 HEARTBEAT_FILE = "daemon.json"
+METRICS_FILE = "metrics.prom"
 CONTROL_PREFIX = "ctl-"
 
 
@@ -83,7 +85,32 @@ class SchedulerDaemon:
         self._draining = False
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # observability: a Prometheus-style registry written next to the
+        # heartbeat every tick, plus an optional trace recorder for
+        # state-transition instants (None = zero overhead)
+        self.metrics = MetricsRegistry()
+        self.metrics_path = os.path.join(root, METRICS_FILE)
+        self.recorder = None
+        self._transitions = self.metrics.counter(
+            "tensile_state_transitions_total",
+            "job state transitions since daemon start")
+        self._last_metrics = 0.0
         self.recovered = self.recover()
+
+    def attach_recorder(self, recorder) -> None:
+        """Forward state-transition instants to a trace recorder."""
+        self.recorder = recorder
+
+    def _transition(self, job_id: str, state: JobState, now: float,
+                    **kw) -> None:
+        """``JobStore.transition`` + the observability fan-out: every
+        state change bumps the transitions counter and (with a recorder
+        attached) lands as an instant event on the trace timeline."""
+        self.store.transition(job_id, state, now, **kw)
+        self._transitions.inc(state=state.value)
+        if self.recorder is not None:
+            self.recorder.instant(f"job:{state.value}", now,
+                                  job_id=job_id)
 
     # -- crash recovery ------------------------------------------------------
 
@@ -131,12 +158,12 @@ class SchedulerDaemon:
                             source=source, enqueued_at=now)
             self.store.put(rec, now)
         except ValueError as exc:
-            self.store.transition(spec.job_id, JobState.REJECTED, now,
-                                  error=str(exc))
+            self._transition(spec.job_id, JobState.REJECTED, now,
+                             error=str(exc))
             self._captured.pop(spec.job_id, None)
         except Exception as exc:  # noqa: BLE001 - capture blew up
-            self.store.transition(spec.job_id, JobState.FAILED, now,
-                                  error=f"capture failed: {exc}")
+            self._transition(spec.job_id, JobState.FAILED, now,
+                             error=f"capture failed: {exc}")
             self._captured.pop(spec.job_id, None)
 
     # -- event loop ----------------------------------------------------------
@@ -200,12 +227,12 @@ class SchedulerDaemon:
                 self._captured.pop(jid, None)
                 self._handles.pop(jid, None)
                 if getattr(handle, "error", None) is not None:
-                    self.store.transition(jid, JobState.FAILED, now,
-                                          measured_peak_bytes=measured,
-                                          error=repr(handle.error))
+                    self._transition(jid, JobState.FAILED, now,
+                                     measured_peak_bytes=measured,
+                                     error=repr(handle.error))
                 else:
-                    self.store.transition(jid, JobState.DONE, now,
-                                          measured_peak_bytes=measured)
+                    self._transition(jid, JobState.DONE, now,
+                                     measured_peak_bytes=measured)
                 changes += 1
             elif jid not in self._refined and len(handle.stats) >= 1:
                 # first profiled iteration: refine the reservation from the
@@ -227,19 +254,19 @@ class SchedulerDaemon:
             if rec is None:
                 self.queue.release(job.job_id)
                 continue
-            self.store.transition(job.job_id, JobState.ADMITTED, now)
+            self._transition(job.job_id, JobState.ADMITTED, now)
             try:
                 handle = self.controller.submit(
                     rec.spec, captured=self._captured.get(job.job_id))
             except Exception as exc:  # noqa: BLE001 - admission stays up
                 self.queue.release(job.job_id)
                 self._captured.pop(job.job_id, None)
-                self.store.transition(job.job_id, JobState.FAILED, now,
-                                      error=f"submit failed: {exc}")
+                self._transition(job.job_id, JobState.FAILED, now,
+                                 error=f"submit failed: {exc}")
                 changes += 1
                 continue
             self._handles[job.job_id] = handle
-            self.store.transition(job.job_id, JobState.RUNNING, now)
+            self._transition(job.job_id, JobState.RUNNING, now)
             changes += 1
         return changes
 
@@ -285,6 +312,11 @@ class SchedulerDaemon:
             self._thread.join(max(0.0, deadline - _time.time()))
         done = self.idle
         self.stop()
+        # final heartbeat: the threaded loop writes its own on exit, the
+        # in-process path needs one here so the last metrics refresh (an
+        # unthrottled `state` write) reflects the drained store
+        if self._thread is None:
+            self._write_heartbeat(_time.time(), state="stopped")
         return done
 
     # -- observability -------------------------------------------------------
@@ -302,6 +334,83 @@ class SchedulerDaemon:
             os.replace(tmp, os.path.join(self.root, HEARTBEAT_FILE))
         except OSError:
             pass  # heartbeat is best-effort observability
+        # the Prometheus exposition rides the heartbeat, throttled so
+        # gauge derivation stays off the per-tick hot path
+        if now - self._last_metrics >= 0.5 or state is not None:
+            self._last_metrics = now
+            try:
+                self._refresh_metrics(now)
+                self.metrics.write(self.metrics_path)
+            except OSError:
+                pass  # same best-effort contract as the heartbeat
+
+    def _refresh_metrics(self, now: float) -> None:
+        """Re-derive every gauge from live daemon + controller state."""
+        m = self.metrics
+        m.gauge("tensile_queue_depth",
+                "jobs waiting for admission").set(len(self.queue))
+        m.gauge("tensile_capacity_bytes",
+                "device byte budget admission reserves against").set(
+                    self.capacity_bytes)
+        m.gauge("tensile_reserved_bytes",
+                "bytes currently reserved by admitted/running jobs").set(
+                    self.queue.reserved_bytes)
+        jobs = m.gauge("tensile_jobs", "jobs per lifecycle state")
+        jobs.clear()
+        errs = []
+        for rec in self.store.all().values():
+            jobs.inc(state=rec.state.value)
+            p = rec.predicted_peak_bytes
+            meas = rec.measured_peak_bytes
+            if p and meas:
+                errs.append(abs(p - meas) / meas)
+        if errs:
+            m.gauge("tensile_admission_precision_ratio",
+                    "mean |predicted - measured| / measured peak over "
+                    "profiled jobs").set(sum(errs) / len(errs))
+        ctl = self.controller
+        m.gauge("tensile_replan_count",
+                "controller replans since start").set(
+                    getattr(ctl, "replan_count", 0))
+        m.gauge("tensile_preempt_count",
+                "mid-iteration preemptive hot-swap requests").set(
+                    getattr(ctl, "preempt_count", 0))
+        handles = getattr(ctl, "jobs", None) or {}
+        hot = 0
+        tps = m.gauge("tensile_serve_tokens_per_sec",
+                      "decode throughput of the latest serve report")
+        for jid, h in handles.items():
+            for st in getattr(h, "stats", []) or []:
+                hot += getattr(st, "hot_swaps", 0) or 0
+            for st in reversed(getattr(h, "stats", []) or []):
+                rate = getattr(st, "tokens_per_s", None)
+                if rate is not None:
+                    tps.set(rate, job=jid)
+                    break
+        m.gauge("tensile_hot_swap_count",
+                "plan hot-swaps applied by executors").set(hot)
+        fails = getattr(ctl, "experience_failures", None)
+        if fails is not None:
+            m.gauge("tensile_experience_failures",
+                    "experience-store operations that failed").set(
+                        len(fails))
+        events = getattr(ctl, "events", None)
+        if events is not None:
+            m.gauge("tensile_warn_events",
+                    "WARN/ERROR events in the controller event log").set(
+                        len(events.warnings()))
+        hub = getattr(ctl, "telemetry", None)
+        cm = getattr(ctl, "cost_model", None)
+        if hub is not None and cm is not None:
+            try:
+                if hub.jobs():
+                    rep = cm.calibration_report(hub)
+                    if rep.samples:
+                        m.gauge("tensile_calib_err",
+                                "mean relative cost-model latency "
+                                "error").set(rep.overall)
+            except Exception:  # noqa: BLE001 - metrics must not crash
+                pass
 
     def status(self) -> Dict[str, Any]:
         counts: Dict[str, int] = {}

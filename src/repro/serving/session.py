@@ -395,6 +395,17 @@ class ServeSession:
                 s.last_served = turn_start
             tokens += chunk * len(cohort)
             turns += 1
+            rec = self.engine.recorder
+            if rec is not None:
+                # observability tap: the decode turn as a span on the
+                # serve job's track plus the KV residency counter — the
+                # block-level transfers already flow through the hub
+                rec.span("decode_turn", turn_start,
+                         turn_end - turn_start, job_id=self.job_id,
+                         cat="serve", cohort=len(cohort), chunk=chunk,
+                         start_pos=start_pos)
+                rec.counter(f"kv_resident:{self.job_id}", turn_end,
+                            self.engine.ledger.job_bytes(self.job_id))
 
             # lookahead prefetches overlap the turn's compute: book the
             # channel now so the next group's blocks land before its turn

@@ -1,0 +1,320 @@
+"""The observability plane: Chrome-trace export parity between the two
+runtimes, Prometheus round-trip, the structured event log, the drift
+monitor, and the no-recorder zero-overhead contract."""
+import json
+
+import pytest
+
+from repro.core import (JaxprExecutor, MachineProfile, MemoryEngine,
+                        TelemetryHub, schedule_single, simulate)
+from repro.core.experience import ExperienceStore
+from repro.obs import (DriftMonitor, EventLog, MetricsRegistry,
+                       TraceRecorder, parse_metrics_text, summarize_trace,
+                       validate_chrome_trace)
+from repro.obs.trace import DMA_TID, EVENTS_TID
+
+from helpers import capture_mlp, synthetic_chain
+
+PROFILE = MachineProfile(host_link_bw=16e9, compute_flops=5e10, mem_bw=1e10)
+
+
+@pytest.fixture(scope="module")
+def mlp_with_plan():
+    seq, closed, args = capture_mlp(sizes=(64, 128, 128, 8), batch=16)
+    res = schedule_single(seq, profile=PROFILE)
+    return seq, closed, args, res.plans[seq.job_id]
+
+
+def _sim_trace(seq, plan, budget=None):
+    hub = TelemetryHub(clock="virtual")
+    eng = MemoryEngine(PROFILE, telemetry=hub)
+    rec = TraceRecorder(clock="virtual", budget_bytes=budget)
+    eng.attach_recorder(rec)
+    simulate([seq], {seq.job_id: plan}, PROFILE, iterations=1,
+             transfer_mode="sync", engine=eng, telemetry=hub)
+    return rec.to_chrome()
+
+
+def _real_trace(mlp_with_plan, budget=None):
+    seq, closed, args, plan = mlp_with_plan
+    hub = TelemetryHub(clock="real")
+    eng = MemoryEngine(PROFILE, telemetry=hub)
+    rec = TraceRecorder(clock="real", budget_bytes=budget)
+    eng.attach_recorder(rec)
+    ex = JaxprExecutor(closed, seq, plan, engine=eng)
+    ex.run(*args)
+    ex.close()
+    return rec.to_chrome()
+
+
+# ---------------------------------------------------------------- traces
+def test_sim_trace_is_valid_chrome_trace(mlp_with_plan):
+    seq, _, _, plan = mlp_with_plan
+    trace = _sim_trace(seq, plan, budget=plan.planned_peak_bytes)
+    assert validate_chrome_trace(trace) == []
+    evs = [e for e in trace["traceEvents"] if e.get("ph") != "M"]
+    # the three tracks: job ops, DMA transfers, residency counters
+    assert any(e["ph"] == "X" and e.get("cat") == "op" for e in evs)
+    assert any(e.get("tid") == DMA_TID and e.get("cat") == "transfer"
+               for e in evs)
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert {"resident:job0", "device_used_bytes",
+            "device_budget_bytes"} <= counters
+    # timestamps are normalized: earliest event sits at ts=0
+    assert min(e["ts"] for e in evs) == 0.0
+    assert trace["otherData"]["clock"] == "virtual"
+    # thread-name metadata names every track in use
+    names = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"job:job0", "dma"} <= names
+
+
+def test_budget_violation_instants(mlp_with_plan):
+    seq, _, _, plan = mlp_with_plan
+    trace = _sim_trace(seq, plan, budget=1)  # everything is over budget
+    assert validate_chrome_trace(trace) == []
+    summary = summarize_trace(trace)
+    assert summary["budget_violations"]
+    # a roomy budget produces none (the PLANNED peak is a model, not a
+    # bound — the simulated run may transiently exceed it)
+    roomy = _sim_trace(seq, plan, budget=1 << 30)
+    assert summarize_trace(roomy)["budget_violations"] == []
+
+
+def test_sim_and_real_traces_share_schema(mlp_with_plan):
+    """The headline trace guarantee: a virtual-time and a wall-clock run
+    of the same job + plan produce the same event names, categories, and
+    args schema — only the clock differs."""
+    seq, _, _, plan = mlp_with_plan
+    sim = _sim_trace(seq, plan)
+    real = _real_trace(mlp_with_plan)
+    assert validate_chrome_trace(sim) == []
+    assert validate_chrome_trace(real) == []
+    assert sim["otherData"]["clock"] == "virtual"
+    assert real["otherData"]["clock"] == "real"
+
+    def shape(trace):
+        out = {}
+        for e in trace["traceEvents"]:
+            if e.get("ph") == "M":
+                continue
+            key = (e.get("cat"), e["ph"])
+            out.setdefault(key, set()).add(
+                (e["name"], tuple(sorted(e.get("args", {})))))
+        return out
+
+    s, r = shape(sim), shape(real)
+    assert s.keys() == r.keys()
+    # op spans: identical names AND identical args schema
+    assert s[("op", "X")] == r[("op", "X")]
+    # same residency counter tracks
+    assert s[("residency", "C")] == r[("residency", "C")]
+    # transfers move the same storages in the same directions
+    assert s[("transfer", "X")] == r[("transfer", "X")]
+
+
+def test_trace_json_serializable_and_summary(mlp_with_plan):
+    seq, _, _, plan = mlp_with_plan
+    trace = json.loads(json.dumps(_sim_trace(seq, plan)))
+    assert validate_chrome_trace(trace) == []
+    summary = summarize_trace(trace)
+    assert summary["jobs"] == ["job0"]
+    assert summary["transfer_count"] > 0
+    assert 0.0 <= summary["stall_share"]["job0"] <= 1.0
+
+
+def test_no_recorder_is_identity(mlp_with_plan):
+    """The zero-overhead contract: without a recorder every tap is a
+    single ``is not None`` check and the simulation result is
+    unchanged."""
+    seq, _, _, plan = mlp_with_plan
+    assert TelemetryHub(clock="virtual")._recorder is None
+    assert MemoryEngine(PROFILE).recorder is None
+
+    def run(with_recorder):
+        eng = MemoryEngine(PROFILE, telemetry=TelemetryHub(clock="virtual"))
+        if with_recorder:
+            eng.attach_recorder(TraceRecorder())
+        return simulate([seq], {seq.job_id: plan}, PROFILE, iterations=1,
+                        transfer_mode="sync", engine=eng)
+
+    bare, taped = run(False), run(True)
+    assert bare.peak_bytes == taped.peak_bytes
+    assert bare.total_time == taped.total_time
+
+
+def test_validate_rejects_malformed():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({"traceEvents": "nope"}) != []
+    assert validate_chrome_trace({"traceEvents": []}) != []
+    bad = {"traceEvents": [
+        {"ph": "Z", "name": "x", "ts": 0, "pid": 1},           # unknown ph
+        {"ph": "X", "name": "x", "ts": -1, "pid": 1, "tid": 1,
+         "dur": 1},                                            # negative ts
+        {"ph": "X", "name": "x", "ts": 0, "pid": 1, "tid": 1}, # missing dur
+        {"ph": "C", "name": "c", "ts": 0, "pid": 1,
+         "args": {"v": "high"}},                               # non-number
+    ]}
+    errs = validate_chrome_trace(bad)
+    assert len(errs) == 4
+
+
+# ---------------------------------------------------------------- metrics
+def test_metrics_render_parse_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("tensile_test_total", "a counter").inc(job="a")
+    reg.counter("tensile_test_total").inc(job="a")
+    reg.gauge("tensile_test_bytes", "a gauge").set(1.5e6, job="a")
+    reg.histogram("tensile_test_seconds", "a histogram",
+                  buckets=(0.1, 1.0)).observe(0.5)
+    text = reg.render_text()
+    parsed = parse_metrics_text(text)
+    assert parsed[("tensile_test_total", (("job", "a"),))] == 2
+    assert parsed[("tensile_test_bytes", (("job", "a"),))] == 1.5e6
+    assert parsed[("tensile_test_seconds_bucket", (("le", "0.1"),))] == 0
+    assert parsed[("tensile_test_seconds_bucket", (("le", "1"),))] == 1
+    assert parsed[("tensile_test_seconds_bucket", (("le", "+Inf"),))] == 1
+    assert parsed[("tensile_test_seconds_count", ())] == 1
+    assert parsed[("tensile_test_seconds_sum", ())] == 0.5
+
+
+def test_metrics_registry_idempotent_and_typed():
+    reg = MetricsRegistry()
+    c = reg.counter("tensile_x_total")
+    assert reg.counter("tensile_x_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("tensile_x_total")
+
+
+def test_parse_rejects_malformed_text():
+    with pytest.raises(ValueError):
+        parse_metrics_text("tensile_x{job=a} 1\n")   # unquoted label
+    with pytest.raises(ValueError):
+        parse_metrics_text("tensile_x not_a_number\n")
+    with pytest.raises(ValueError):
+        parse_metrics_text("# only comments\n")
+
+
+# ---------------------------------------------------------------- events
+def test_event_log_bounded_and_forwarded():
+    rec = TraceRecorder()
+    log = EventLog(maxlen=2, clock=lambda: 42.0)
+    log.attach_recorder(rec)
+    log.info("boot", "starting")
+    log.warn("experience", "flush failed", job_id="j", error="IOError()")
+    log.error("replan", "replan failed")
+    assert len(log) == 2 and log.dropped == 1
+    assert [e.source for e in log.warnings()] == ["experience", "replan"]
+    assert log.events(level="ERROR")[0].source == "replan"
+    # every emit landed on the trace as an instant on the events track
+    names = [e["name"] for e in log.recorder.extras]
+    assert names == ["INFO:boot", "WARN:experience", "ERROR:replan"]
+    trace = rec.to_chrome()
+    assert validate_chrome_trace(trace) == []
+    assert any(e.get("tid") == EVENTS_TID for e in trace["traceEvents"]
+               if e.get("ph") == "i")
+
+
+# ----------------------------------------------------------------- drift
+def test_drift_monitor_threshold_and_metrics():
+    log, reg = EventLog(), MetricsRegistry()
+    mon = DriftMonitor(threshold=0.15, events=log, metrics=reg,
+                       clock=lambda: 0.0)
+    ok = mon.observe("fp-quiet", predicted_peak=100, measured_peak=100,
+                     predicted_safe_points=[1, 2], measured_safe_points=[1, 2])
+    assert ok.worst == 0.0 and not log.warnings()
+    bad = mon.observe("fp-loud", predicted_peak=200, measured_peak=100,
+                      job_id="j")
+    assert bad.peak_drift == 1.0
+    warns = log.events(level="WARN", source="drift")
+    assert len(warns) == 1 and warns[0].args["fingerprint"] == "fp-loud"
+    assert reg.gauge("tensile_drift_peak_ratio").value(
+        fingerprint="fp-loud") == 1.0
+    assert [s.fingerprint for s in mon.over_threshold()] == ["fp-loud"]
+    assert mon.worst_drift() == 1.0
+    assert len(mon.history("fp-quiet")) == 1
+
+
+def test_drift_safe_point_axis():
+    mon = DriftMonitor(threshold=0.15)
+    s = mon.observe("fp", predicted_peak=100, measured_peak=100,
+                    predicted_safe_points=[1, 2, 3],
+                    measured_safe_points=[4, 5, 6])
+    assert s.sp_drift == 1.0 and s.worst == 1.0
+    s2 = mon.observe("fp", predicted_peak=100, measured_peak=100,
+                     predicted_safe_points=None, measured_safe_points=None)
+    assert s2.sp_drift is None and s2.worst == 0.0
+
+
+def test_drift_history_persists_across_store_reopen(tmp_path):
+    exp = ExperienceStore(str(tmp_path), device_id="test-device")
+    fp = ExperienceStore.fingerprint(exp, synthetic_chain(n_ops=4))
+    mon = DriftMonitor(experience=exp, clock=lambda: 7.0)
+    mon.observe(fp, predicted_peak=120, measured_peak=100, job_id="j",
+                predicted_eor=0.1, measured_eor=0.2,
+                predicted_safe_points=[3], measured_safe_points=[3])
+    exp.flush()
+    hist = ExperienceStore(str(tmp_path),
+                           device_id="test-device").drift_history(fp)
+    assert len(hist) == 1
+    rec = hist[0]
+    assert rec.predicted_peak == 120 and rec.measured_peak == 100
+    assert rec.peak_drift == pytest.approx(0.2)
+    assert rec.sp_drift == 0.0
+    assert rec.t == 7.0
+
+
+# ------------------------------------------------- controller visibility
+def test_experience_flush_failure_is_visible_event():
+    """The bugfix regression: a failing ExperienceStore flush on job exit
+    must surface as a WARN event, not just a silent list append."""
+    from repro.core.multiplexer import GlobalController, JobHandle
+
+    class ExplodingStore:
+        def fingerprint(self, seq):
+            return "fp"
+
+        def record_job(self, *a, **kw):
+            raise IOError("disk full")
+
+        def flush(self):
+            raise AssertionError("flush unreachable: record_job raised")
+
+    seq = synthetic_chain(n_ops=4, job_id="doomed")
+    ctl = GlobalController(profile=PROFILE)
+    ctl.experience = ExplodingStore()
+    handle = JobHandle(job_id="doomed", seq=seq, closed_jaxpr=None,
+                       args=(), iterations=1, fingerprint="fp")
+    ctl._on_job_exit(handle)
+    assert [j for j, _ in ctl.experience_failures] == ["doomed"]
+    warns = ctl.events.events(level="WARN", source="experience")
+    assert len(warns) == 1
+    assert warns[0].args["job_id"] == "doomed"
+    assert "disk full" in warns[0].args["error"]
+
+
+def test_drift_scenario_row_holds_parity():
+    """The bench row drift_contract gates: on the same engine, sim and
+    executor book identical peaks and safe-point placements (drift
+    exactly 0), and the history round-trips through the store."""
+    from benchmarks.scenarios import run_drift_scenario
+
+    d = run_drift_scenario(smoke=True)["drift"]
+    assert d["peak_drift"] == 0.0
+    assert d["sp_drift"] == 0.0
+    assert d["history_len"] >= 1
+    assert not d["over_threshold"] or d["eor_drift"] is not None
+
+
+def test_daemon_writes_parseable_metrics_file(tmp_path):
+    from repro.service.daemon import SchedulerDaemon
+
+    d = SchedulerDaemon(str(tmp_path))
+    d.step()
+    prom = tmp_path / "metrics.prom"
+    assert prom.exists()
+    parsed = parse_metrics_text(prom.read_text())
+    for name in ("tensile_queue_depth", "tensile_capacity_bytes",
+                 "tensile_reserved_bytes"):
+        assert (name, ()) in parsed
+    assert parsed[("tensile_queue_depth", ())] == 0

@@ -287,9 +287,57 @@ def serving_contract(current: dict) -> list:
     return failures
 
 
+# the sim-vs-measured drift bounds (ISSUE 10): the engine parity
+# guarantee makes predicted-vs-measured peak a hard near-equality, and
+# modeled-vs-measured safe-point placement must stay substantially
+# overlapping (1 - Jaccard over op indices)
+DRIFT_PEAK_LIMIT = 0.10
+DRIFT_SP_LIMIT = 0.50
+
+
+def drift_contract(current: dict) -> list:
+    """The observability plane's sim-vs-measured accuracy contract,
+    enforced on the CURRENT run: the same captured job + plan run on the
+    virtual-time simulator and on the real executor must agree on peak
+    bytes to within ``DRIFT_PEAK_LIMIT`` (the engine parity guarantee,
+    continuously gated), modeled safe-point placement must stay within
+    ``DRIFT_SP_LIMIT`` of the telemetry-measured set, and the drift
+    sample must actually persist into the ExperienceStore history
+    (``history_len >= 1``).  EOR drift is recorded but not bounded — a
+    virtual-time overhead ratio and a wall-clock one measure different
+    machines.  Absent rows check nothing (pre-observability
+    baselines)."""
+    row = current.get("sim-vs-measured/drift")
+    if not row:
+        return []
+    failures = []
+    pd = row.get("peak_drift")
+    if pd is not None and pd > DRIFT_PEAK_LIMIT:
+        failures.append(
+            f"drift contract: sim-predicted peak off the measured peak by "
+            f"{pd:.1%} (limit {DRIFT_PEAK_LIMIT:.0%}) — the engine parity "
+            "guarantee degraded "
+            f"(predicted {row.get('predicted_peak')}, "
+            f"measured {row.get('peak')})")
+    sp = row.get("sp_drift")
+    if sp is not None and sp > DRIFT_SP_LIMIT:
+        failures.append(
+            f"drift contract: modeled vs measured safe-point placement "
+            f"disagrees by {sp:.1%} (1 - Jaccard, limit "
+            f"{DRIFT_SP_LIMIT:.0%}) — preemptive splice points no longer "
+            "land where the measured plane says they are")
+    hl = row.get("history_len")
+    if hl is not None and hl < 1:
+        failures.append(
+            "drift contract: the drift sample did not persist into the "
+            "ExperienceStore history (record_drift/flush round-trip "
+            "broke)")
+    return failures
+
+
 def scenario_contracts(current: dict) -> list:
     return (cold_warm_contract(current) + admission_contract(current)
-            + serving_contract(current))
+            + serving_contract(current) + drift_contract(current))
 
 
 def compare_planner(baseline: dict, current: dict) -> list:

@@ -8,7 +8,8 @@
     PYTHONPATH=src python tools/tensile_svc.py submit --root <dir> \
         --job-id s1 --kind serve [--arch tinyllama-1.1b] [--requests N] \
         [--trace steady|burst|poisson] [--prompt-len N] [--gen N] [--wait]
-    PYTHONPATH=src python tools/tensile_svc.py status --root <dir>
+    PYTHONPATH=src python tools/tensile_svc.py status --root <dir> [--json]
+    PYTHONPATH=src python tools/tensile_svc.py metrics --root <dir> [--parsed]
     PYTHONPATH=src python tools/tensile_svc.py drain  --root <dir> [--wait]
     PYTHONPATH=src python tools/tensile_svc.py smoke  --root <dir>
 
@@ -92,6 +93,15 @@ def cmd_submit(args: argparse.Namespace) -> int:
 def cmd_status(args: argparse.Namespace) -> int:
     client = ServiceClient(args.root)
     hb = client.heartbeat()
+    if args.json:
+        records = client.status()
+        print(json.dumps({
+            "heartbeat": hb,
+            "daemon_alive": client.daemon_alive(),
+            "jobs": {jid: rec.to_dict()
+                     for jid, rec in sorted(records.items())},
+        }, indent=1, sort_keys=True))
+        return 0
     if hb:
         alive = "alive" if client.daemon_alive() else "stale"
         print(f"daemon: {hb.get('state')} ({alive}, pid {hb.get('pid')}), "
@@ -113,6 +123,32 @@ def cmd_status(args: argparse.Namespace) -> int:
         err = f" error={rec.error}" if rec.error else ""
         print(f"  {jid}: {rec.state.value}{pred}{peak}"
               f" requeues={rec.requeues}{err}")
+    return 0
+
+
+def cmd_metrics(args: argparse.Namespace) -> int:
+    """Print the daemon's Prometheus text exposition (validated)."""
+    from repro.obs import parse_metrics_text
+
+    path = os.path.join(args.root, "metrics.prom")
+    if not os.path.exists(path):
+        print(f"no metrics file at {path} (daemon not started?)",
+              file=sys.stderr)
+        return 1
+    with open(path, "r", encoding="utf-8") as f:
+        text = f.read()
+    try:
+        parsed = parse_metrics_text(text)
+    except ValueError as exc:
+        print(f"metrics file does not parse: {exc}", file=sys.stderr)
+        return 1
+    if args.parsed:
+        for (name, labels), value in sorted(parsed.items()):
+            lbl = ("{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
+                   if labels else "")
+            print(f"{name}{lbl} {value}")
+    else:
+        sys.stdout.write(text)
     return 0
 
 
@@ -240,7 +276,16 @@ def main() -> int:
 
     p = sub.add_parser("status", help="daemon heartbeat + job table")
     p.add_argument("--root", required=True)
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable heartbeat + full job records")
     p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("metrics",
+                       help="print the daemon's Prometheus exposition")
+    p.add_argument("--root", required=True)
+    p.add_argument("--parsed", action="store_true",
+                   help="print parsed samples instead of the raw text")
+    p.set_defaults(fn=cmd_metrics)
 
     p = sub.add_parser("drain", help="finish queued work, then stop")
     p.add_argument("--root", required=True)
